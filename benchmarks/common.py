@@ -1,0 +1,25 @@
+"""Shared benchmark helpers: timing + CSV row emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_us(fn: Callable[[], object], *, warmup: int = 1, iters: int = 5
+            ) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows: Iterable[Row]) -> List[Row]:
+    rows = list(rows)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

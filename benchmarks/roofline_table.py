@@ -1,0 +1,41 @@
+"""§Roofline summary: per-(arch × shape) terms from the dry-run results.
+
+Reads results/dryrun/*.json (produced by ``repro.launch.dryrun --all``)
+and emits one row per cell: the three roofline terms, the dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPs.  This is the benchmark backing
+EXPERIMENTS.md §Roofline; cells not yet dry-run are skipped.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+from .common import Row, emit
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def roofline_table() -> List[Row]:
+    rows: List[Row] = []
+    if not DRYRUN_DIR.exists():
+        return emit([("roofline/none", 0.0, "skipped (run dryrun --all)")])
+    for f in sorted(DRYRUN_DIR.glob("*__single.json")):
+        rec = json.loads(f.read_text())
+        if "error" in rec or "roofline" not in rec:
+            rows.append((f"roofline/{rec.get('arch')}__{rec.get('shape')}",
+                         0.0, "ERROR"))
+            continue
+        r = rec["roofline"]
+        us = rec.get("elapsed_s", 0.0) * 1e6
+        rows.append((
+            f"roofline/{rec['arch']}__{rec['shape']}", us,
+            f"dom={r['dominant']} L={r['latency_s']*1e3:.2f}ms "
+            f"c={r['compute_s']*1e3:.2f} m={r['memory_s']*1e3:.2f} "
+            f"k={r['collective_s']*1e3:.2f} "
+            f"useful={r['model_flops_ratio']:.2f} "
+            f"roofline={r['roofline_fraction']*100:.1f}%"))
+    if not rows:
+        rows = [("roofline/none", 0.0, "skipped (run dryrun --all)")]
+    return emit(rows)

@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Paper artifacts covered:
+Fig 1/2 (intra-op diminishing returns), Fig 6 (Packrat vs fat), Fig 7
+(vs single-threaded), Fig 9 (interference decomposition), Fig 11
+(reconfiguration timeline), Table 2 (non-uniform configs), Table 3
+(speedup summary), §3.2 profiling cost, §3.3 DP runtime — plus the TPU
+adaptation (thin-instance partitioning over roofline profiles) and the
+§Roofline dry-run summary.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import fig11_reconfig, paper_figures, roofline_table, tpu_packrat
+
+    benches = [
+        paper_figures.fig1_intra_op,
+        paper_figures.fig6_speedup,
+        paper_figures.fig7_vs_singlethread,
+        paper_figures.fig9_interference,
+        paper_figures.table2_nonuniform,
+        paper_figures.table3_summary,
+        paper_figures.profiling_cost,
+        paper_figures.dp_runtime,
+        fig11_reconfig.fig11_reconfig,
+        tpu_packrat.tpu_packrat,
+        roofline_table.roofline_table,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        try:
+            bench()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{bench.__name__},0.0,FAILED:{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

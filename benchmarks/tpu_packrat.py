@@ -1,0 +1,85 @@
+"""Packrat on TPU: thin-instance partitioning vs the fat pod (headline).
+
+The TPU adaptation of the paper's core claim: given one pod (T=256
+chips) serving decode batches of size B, compare
+
+* fat configuration  ⟨1, 256, B⟩ — all chips in one tensor-parallel
+  instance (the TorchServe-default analogue), vs
+* Packrat ⟨i, t, b⟩  — the 2-D knapsack solution over the roofline
+  profile L[t, b] derived from compiled thin-instance sub-meshes
+  (launch.profile_tpu).
+
+Profiles are read from results/profiles/<arch>_s<seq>.json (produced by
+``python -m repro.launch.profile_tpu --arch llama3-8b``); rows are
+emitted for every cached (t, b) plus the per-batch speedups.  If no
+profile cache exists the bench emits a skip row (profiling requires
+~30 min of compiles).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import statistics
+from typing import List
+
+from repro.core import PackratOptimizer, fat_config
+from repro.core.roofline import TPU_V5E, RooflineTerms
+
+from .common import Row, emit, time_us
+
+PROFILE_DIR = pathlib.Path(__file__).resolve().parents[1] / "results" / "profiles"
+
+
+def load_profile(arch: str, seq: int = 8192):
+    f = PROFILE_DIR / f"{arch}_s{seq}.json"
+    if not f.exists():
+        return None
+    raw = json.loads(f.read_text())
+    table = {}
+    for key, d in raw.items():
+        t, b = (int(x) for x in key.split(","))
+        terms = RooflineTerms(flops=d["flops"], hbm_bytes=d["hbm_bytes"],
+                              collective_bytes=d["collective_bytes"],
+                              chips=t, hw=TPU_V5E)
+        table[(t, b)] = terms.latency
+    return table
+
+
+def tpu_packrat(arch: str = "llama3-8b", seq: int = 8192) -> List[Row]:
+    table = load_profile(arch, seq)
+    if not table:
+        return emit([(f"tpu/{arch}_profile", 0.0,
+                      "skipped (run repro.launch.profile_tpu first)")])
+    total = max(t for t, _ in table)
+    opt = PackratOptimizer(table)
+    # TPU relaxation: Σt ≤ T — a thin configuration may idle chips (they
+    # host other models in multi-tenant serving); the paper's Σt = T is
+    # reported alongside.
+    opt_slack = PackratOptimizer(table, allow_unused_threads=True)
+    us = time_us(lambda: PackratOptimizer(table).solve(total, 64))
+    rows: List[Row] = []
+    speedups = []
+    for B in sorted({b * (total // t) for (t, b) in table
+                     if b * (total // t) <= 16384}):
+        try:
+            cfg = opt.solve(total, B)
+            cfg_s = opt_slack.solve(total, B)
+            fat = fat_config(table, total, B)
+        except (ValueError, KeyError):
+            continue
+        if fat is None:
+            continue
+        sp = fat.latency / cfg.latency
+        sps = fat.latency / cfg_s.latency
+        speedups.append(sps)
+        rows.append((f"tpu/{arch}_B{B}", us,
+                     f"exact {sp:.2f}x {' '.join(str(g) for g in cfg.groups)}"
+                     f" | slack {sps:.2f}x "
+                     f"{' '.join(str(g) for g in cfg_s.groups)}"))
+    if speedups:
+        rows.append((f"tpu/{arch}_mean_speedup", us,
+                     f"{statistics.mean(speedups):.2f}x"))
+        rows.append((f"tpu/{arch}_max_speedup", us,
+                     f"{max(speedups):.2f}x"))
+    return emit(rows)

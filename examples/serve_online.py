@@ -1,0 +1,18 @@
+"""Online serving end-to-end: real JAX inference + live reconfiguration.
+
+Drives the full Packrat stack (estimator → optimizer → allocator →
+dispatcher → workers) with *measured* latencies from a genuine jitted
+decode step of a reduced gemma3 model, under a request rate that steps
+up mid-run — the paper's Fig. 11 experiment against real model code.
+
+Run:  PYTHONPATH=src python examples/serve_online.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(["--arch", "gemma3-1b", "--duration", "16",
+                   "--rate-step", "8", "--initial-batch", "8",
+                   "--max-batch", "32"]))

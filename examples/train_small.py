@@ -1,0 +1,28 @@
+"""Train a ~100M-parameter llama-style model for a few hundred steps.
+
+The end-to-end training driver: synthetic (learnable) corpus, AdamW with
+warmup+cosine, periodic checkpointing with the fault-tolerant commit
+protocol, and resumption.  At d_model=512, 8 layers, vocab 32768 the
+model is ~101M params — big enough to be real, small enough for CPU.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt_100m")
+    args = ap.parse_args()
+    sys.exit(main([
+        "--arch", "llama3-8b", "--reduced",
+        "--d-model", "512", "--layers", "8", "--vocab", "32768",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+        "--lr", "1e-3", "--ckpt", args.ckpt, "--ckpt-every", "100",
+        "--resume", "--log-every", "20",
+    ]))

@@ -1,0 +1,56 @@
+"""Packrat core: the paper's contribution as a composable library.
+
+* :mod:`repro.core.knapsack` — the 2-D dynamic-programming optimizer.
+* :mod:`repro.core.profiler` — measured / analytic / tabulated profiling.
+* :mod:`repro.core.estimator` — online batch-size estimation.
+* :mod:`repro.core.reconfig` — active-passive zero-downtime scaling.
+* :mod:`repro.core.roofline` — TPU roofline terms behind the analytic profile.
+* :mod:`repro.core.interference` — multi-instance contention models.
+"""
+
+from .estimator import BatchSizeEstimator, EstimatorConfig, floor_power_of_two
+from .interference import (CPUInterferenceModel, TPUInterferenceModel,
+                           apply_constant_penalty)
+from .knapsack import (InstanceGroup, PackratConfig, PackratOptimizer,
+                       brute_force_solve, fat_config,
+                       one_thread_per_core_config, powers_of_two,
+                       profile_grid)
+from .multimodel import (ModelPlacement, ModelWorkload, MultiModelAllocator,
+                         solve_with_slo)
+from .profiler import (AnalyticProfiler, MeasuredProfiler, ProfileSpec,
+                       TabulatedProfiler, profiling_cost_summary)
+from .reconfig import (ActivePassiveController, Phase, needs_active_passive)
+from .roofline import (TPU_V5E, HardwareSpec, RooflineTerms, model_flops_ratio)
+
+__all__ = [
+    "ActivePassiveController",
+    "AnalyticProfiler",
+    "BatchSizeEstimator",
+    "CPUInterferenceModel",
+    "EstimatorConfig",
+    "HardwareSpec",
+    "InstanceGroup",
+    "MeasuredProfiler",
+    "ModelPlacement",
+    "ModelWorkload",
+    "MultiModelAllocator",
+    "PackratConfig",
+    "PackratOptimizer",
+    "Phase",
+    "ProfileSpec",
+    "RooflineTerms",
+    "TPUInterferenceModel",
+    "TPU_V5E",
+    "TabulatedProfiler",
+    "apply_constant_penalty",
+    "brute_force_solve",
+    "fat_config",
+    "floor_power_of_two",
+    "model_flops_ratio",
+    "needs_active_passive",
+    "one_thread_per_core_config",
+    "powers_of_two",
+    "profile_grid",
+    "profiling_cost_summary",
+    "solve_with_slo",
+]

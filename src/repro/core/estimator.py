@@ -1,0 +1,110 @@
+"""Packrat's batch-size estimator (paper §3.8).
+
+Two-level smoothing over the request queue depth:
+
+1. EWMA of the observed queue depth  ``Q̃ₓ = α·Q̂ + (1-α)·Q̃ₓ₋₁``, floored
+   to the *next lower power of two* → per-tick batch-size estimate B̂ₓ.
+2. Mode over the last ``n`` estimates (B̂ₓ₋ₙ…B̂ₓ) → smoothed batch size B̃.
+
+After each reconfiguration timeout, B̃ is compared with the currently
+configured batch size B; a difference triggers reconfiguration (handled
+by the controller, see serving/controller.py).  This deliberately avoids
+"flip-flopping" between configurations (§3.8).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Optional
+
+
+def floor_power_of_two(x: float) -> int:
+    """Largest power of two <= x (>= 1)."""
+    if x < 1.0:
+        return 1
+    return 1 << (int(x).bit_length() - 1)
+
+
+@dataclasses.dataclass
+class EstimatorConfig:
+    alpha: float = 0.25          # EWMA weight on the newest observation
+    window: int = 8              # n, the mode window length
+    reconfigure_timeout: float = 5.0  # seconds between reconfiguration checks
+    min_batch: int = 1
+    max_batch: int = 1 << 16
+    # B̂ = floor_pow2(Q̃·(1+headroom)).  An EWMA converging to a power of
+    # two *from below* (7.99 → floor 4) would otherwise halve the batch
+    # forever; 25% headroom keeps the paper's next-lower-power-of-two rule
+    # for any load not sitting exactly on a boundary.
+    headroom: float = 0.25
+
+
+class BatchSizeEstimator:
+    """Online batch-size estimation from queue-depth observations."""
+
+    def __init__(self, config: Optional[EstimatorConfig] = None,
+                 initial_batch: int = 1) -> None:
+        self.config = config or EstimatorConfig()
+        if not (0.0 < self.config.alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {self.config.alpha}")
+        if self.config.window < 1:
+            raise ValueError("window must be >= 1")
+        # warm-start the EWMA at the configured batch so the start-up
+        # transient (empty queue before traffic flows) cannot trigger an
+        # immediate spurious scale-down
+        self._ewma: Optional[float] = float(initial_batch)
+        self._estimates: Deque[int] = collections.deque(maxlen=self.config.window)
+        self._last_check_time: float = 0.0
+        self.current_batch: int = initial_batch
+
+    # ------------------------------------------------------------------ #
+    def observe(self, queue_depth: float) -> int:
+        """Feed one queue-depth sample Q̂; returns this tick's estimate B̂ₓ."""
+        if queue_depth < 0:
+            raise ValueError("queue depth must be >= 0")
+        a = self.config.alpha
+        self._ewma = (
+            queue_depth if self._ewma is None
+            else a * queue_depth + (1.0 - a) * self._ewma
+        )
+        est = floor_power_of_two(
+            max(self._ewma * (1.0 + self.config.headroom),
+                self.config.min_batch))
+        est = max(self.config.min_batch, min(est, self.config.max_batch))
+        self._estimates.append(est)
+        return est
+
+    @property
+    def ewma(self) -> float:
+        return 0.0 if self._ewma is None else self._ewma
+
+    def smoothed_batch(self) -> int:
+        """B̃ = mode of the last n per-tick estimates (ties → most recent)."""
+        if not self._estimates:
+            return self.current_batch
+        counts = collections.Counter(self._estimates)
+        top = max(counts.values())
+        # ties broken toward the most recent estimate achieving the mode count
+        for est in reversed(self._estimates):
+            if counts[est] == top:
+                return est
+        raise AssertionError("unreachable")
+
+    def should_reconfigure(self, now: float) -> Optional[int]:
+        """Check (rate-limited by reconfigure_timeout) whether B̃ != B.
+
+        Returns the new batch size if a reconfiguration should be
+        triggered, else None.  Call from the controller's event loop.
+        """
+        if now - self._last_check_time < self.config.reconfigure_timeout:
+            return None
+        self._last_check_time = now
+        smoothed = self.smoothed_batch()
+        if smoothed != self.current_batch:
+            return smoothed
+        return None
+
+    def commit(self, new_batch: int) -> None:
+        """Record that the system reconfigured to ``new_batch``."""
+        self.current_batch = new_batch

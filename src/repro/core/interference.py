@@ -1,0 +1,101 @@
+"""Multi-instance interference models (paper §5.2.2, Fig. 8/9).
+
+The paper profiles ⟨1,t,b⟩ configurations *in isolation* but deploys many
+instances concurrently.  On the paper's CPUs two effects slow concurrent
+instances relative to their isolated profile:
+
+* **License-based downclocking** — sustained SIMD on many cores drops the
+  clock (2.6 GHz → 2.2 GHz on the paper's Xeon Gold 6142, ~15%/core).
+* **Loaded memory latency** — concurrent instances load the memory
+  controller; effective access latency rises with aggregate bandwidth
+  (paper Fig. 8, 2:1 read:write).
+
+Packrat deliberately does NOT model these in the optimizer: a *constant
+multiplicative* penalty on every profiled latency cannot change the DP's
+argmin (§5.2.2, validated by a property test here).  We keep the model so
+benchmarks can reproduce the paper's expected-vs-observed gap (Fig. 9)
+and so the simulator can inject realistic contention.
+
+On the TPU target, disjoint contiguous sub-meshes share neither HBM nor
+ICI links, so interference ≈ dispatch jitter only; `TPUInterference`
+reflects that (see DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Tuple
+
+from .knapsack import PackratConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CPUInterferenceModel:
+    """Calibrated to the paper's Xeon Gold 6142 measurements.
+
+    Fig. 9 (ResNet-50, T=16, B=256, 16×⟨1,1,16⟩): isolated thin-instance
+    latency 1224 ms; +FPGen (downclock) → 1397 ms (~14%); +MemGen →
+    1434 ms (~17%); all three ≈ 1600 ms observed with 16 live instances.
+    """
+
+    nominal_ghz: float = 2.6
+    simd_allcore_ghz: float = 2.2     # licence-based downclock, all cores AVX-512
+    mem_bw_saturation_gbps: float = 60.0   # paper Fig. 8 knee (2:1 rd:wr)
+    mem_latency_penalty_max: float = 0.30  # latency inflation at saturation
+    per_instance_bw_gbps: float = 3.0      # thin-instance traffic (paper: ~3 GB/s)
+
+    def downclock_factor(self, active_threads: int, total_threads: int) -> float:
+        """Clock-induced slowdown multiplier (>= 1)."""
+        if total_threads <= 0:
+            return 1.0
+        frac = min(1.0, max(0.0, active_threads / total_threads))
+        ghz = self.nominal_ghz - frac * (self.nominal_ghz - self.simd_allcore_ghz)
+        return self.nominal_ghz / ghz
+
+    def memory_factor(self, n_instances: int) -> float:
+        """Loaded-memory-latency slowdown multiplier (>= 1), paper Fig. 8 shape."""
+        load = min(1.0, (max(0, n_instances - 1) * self.per_instance_bw_gbps)
+                   / self.mem_bw_saturation_gbps)
+        # convex rise toward the saturation penalty (loaded-latency curves
+        # are flat then steep; quadratic is a good two-parameter fit).
+        return 1.0 + self.mem_latency_penalty_max * load * load
+
+    def slowdown(self, config: PackratConfig, total_threads: int) -> float:
+        """Combined multiplicative slowdown for a deployed configuration."""
+        active = config.total_threads
+        n_inst = config.n_instances
+        return (self.downclock_factor(active, total_threads)
+                * self.memory_factor(n_inst))
+
+    def observed_latency(self, config: PackratConfig, total_threads: int) -> float:
+        return config.latency * self.slowdown(config, total_threads)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUInterferenceModel:
+    """Interference across *disjoint* TPU sub-mesh instances.
+
+    Each chip has private HBM and each contiguous sub-mesh uses only its
+    internal ICI links, so cross-instance contention vanishes; only host
+    dispatch jitter remains.
+    """
+
+    dispatch_jitter_frac: float = 0.01
+
+    def slowdown(self, config: PackratConfig, total_chips: int) -> float:
+        del total_chips
+        return 1.0 + self.dispatch_jitter_frac * math.log2(max(2, config.n_instances))
+
+    def observed_latency(self, config: PackratConfig, total_chips: int) -> float:
+        return config.latency * self.slowdown(config, total_chips)
+
+
+def apply_constant_penalty(profile: Mapping[Tuple[int, int], float],
+                           factor: float) -> dict:
+    """Scale every profiled latency by ``factor`` (the §5.2.2 thought
+    experiment: a constant multiplicative penalty must not change the DP
+    argmin — see tests/test_knapsack.py::test_scale_invariance)."""
+    if factor <= 0:
+        raise ValueError("penalty factor must be > 0")
+    return {k: v * factor for k, v in profile.items()}

@@ -1,0 +1,301 @@
+"""Packrat's optimizer: 2-D unbounded-knapsack dynamic program (paper §3.3).
+
+Given a profile of *single-instance* average batch latencies
+``L[t, b]`` (``t`` = units of intra-op parallelism — CPU threads in the
+paper, TPU chips here; ``b`` = per-instance batch size), find the
+partition ``[⟨i_1,t_1,b_1⟩, …, ⟨i_n,t_n,b_n⟩]`` that minimizes the
+*makespan* (latency of the slowest concurrent instance)
+
+    minimize   max_j L[t_j, b_j]
+    subject to Σ_j i_j · t_j = T   and   Σ_j i_j · b_j = B
+
+via the recurrence (paper, §3.3)
+
+    opt[t, b] = min over profiled (t', b') of
+                max(opt[t - t', b - b'], L[t', b'])
+
+with ``opt[0, 0] = 0``.  Backtracking the argmin recovers the (possibly
+non-uniform, §5.2.3) instance list.
+
+The DP is *unbounded* (a profiled ⟨t', b'⟩ item may be used many times —
+that is simply several identical concurrent instances).  Because every
+item consumes ``t' ≥ 1`` threads, a forward iteration over ``t`` is a
+correct unbounded-knapsack order, which lets the inner loop be
+vectorized over the batch dimension with numpy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+Profile = Mapping[Tuple[int, int], float]  # (t, b) -> avg batch latency (s)
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class InstanceGroup:
+    """``i`` identical instances, each with ``t`` threads/chips and batch ``b``."""
+
+    i: int
+    t: int
+    b: int
+
+    def __str__(self) -> str:  # ⟨i, t, b⟩ like the paper
+        return f"<{self.i},{self.t},{self.b}>"
+
+
+@dataclasses.dataclass(frozen=True)
+class PackratConfig:
+    """A full ⟨i,t,b⟩ configuration (paper's configuration list)."""
+
+    groups: Tuple[InstanceGroup, ...]
+    latency: float  # expected makespan (max over instances), seconds
+
+    @property
+    def total_threads(self) -> int:
+        return sum(g.i * g.t for g in self.groups)
+
+    @property
+    def total_batch(self) -> int:
+        return sum(g.i * g.b for g in self.groups)
+
+    @property
+    def n_instances(self) -> int:
+        return sum(g.i for g in self.groups)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len(self.groups) <= 1
+
+    @property
+    def throughput(self) -> float:
+        """Items/second of the steady-state configuration."""
+        if self.latency <= 0:
+            return _INF
+        return self.total_batch / self.latency
+
+    def __str__(self) -> str:
+        return "[" + ", ".join(str(g) for g in self.groups) + f"] L={self.latency * 1e3:.2f}ms"
+
+
+def fat_config(profile: Profile, threads: int, batch: int) -> Optional[PackratConfig]:
+    """The paper's baseline ⟨1, T, B⟩ configuration, if profiled."""
+    lat = profile.get((threads, batch))
+    if lat is None:
+        return None
+    return PackratConfig(groups=(InstanceGroup(1, threads, batch),), latency=lat)
+
+
+def one_thread_per_core_config(
+    profile: Profile, threads: int, batch: int
+) -> Optional[PackratConfig]:
+    """The ⟨T, 1, B/T⟩ strawman from paper Fig. 7 (T single-threaded instances)."""
+    if batch % threads:
+        return None
+    lat = profile.get((1, batch // threads))
+    if lat is None:
+        return None
+    return PackratConfig(
+        groups=(InstanceGroup(threads, 1, batch // threads),), latency=lat
+    )
+
+
+class PackratOptimizer:
+    """The DP optimizer with the paper's memoised ⟨T,B⟩ result cache (§3.3)."""
+
+    def __init__(
+        self,
+        profile: Profile,
+        *,
+        allow_unused_threads: bool = False,
+        dispatch_overhead: float = 0.0,
+    ) -> None:
+        """``allow_unused_threads`` relaxes Σt_j = T to Σt_j ≤ T (beyond-paper;
+        useful when the profile is non-monotone in t).  ``dispatch_overhead``
+        is added per instance *count* to model per-instance dispatch cost.
+        """
+        if not profile:
+            raise ValueError("empty profile")
+        for (t, b), lat in profile.items():
+            if t < 1 or b < 1:
+                raise ValueError(f"profiled item ({t},{b}) must have t,b >= 1")
+            if not (lat >= 0):
+                raise ValueError(f"profiled latency for ({t},{b}) is {lat!r}")
+        self.profile: Dict[Tuple[int, int], float] = dict(profile)
+        self.allow_unused_threads = allow_unused_threads
+        self.dispatch_overhead = float(dispatch_overhead)
+        self._cache: Dict[Tuple[int, int], PackratConfig] = {}
+
+    # ------------------------------------------------------------------ #
+    # public API
+    # ------------------------------------------------------------------ #
+    def solve(self, threads: int, batch: int) -> PackratConfig:
+        """Optimal ⟨i,t,b⟩ configuration for a ⟨T, B⟩ knapsack."""
+        key = (threads, batch)
+        if key not in self._cache:
+            self._cache[key] = self._solve_uncached(threads, batch)
+        return self._cache[key]
+
+    def solve_all(self, threads: int, batches: Iterable[int]) -> Dict[int, PackratConfig]:
+        return {b: self.solve(threads, b) for b in batches}
+
+    def predicted_speedup(self, threads: int, batch: int) -> float:
+        """Expected speedup of the chosen config over the fat ⟨1,T,B⟩ baseline."""
+        base = fat_config(self.profile, threads, batch)
+        if base is None:
+            raise KeyError(f"fat configuration ({threads},{batch}) not profiled")
+        chosen = self.solve(threads, batch)
+        return base.latency / chosen.latency if chosen.latency > 0 else _INF
+
+    # ------------------------------------------------------------------ #
+    # DP core
+    # ------------------------------------------------------------------ #
+    def _solve_uncached(self, threads: int, batch: int) -> PackratConfig:
+        if threads < 1 or batch < 1:
+            raise ValueError(f"need T >= 1 and B >= 1, got T={threads}, B={batch}")
+        items = sorted(
+            (t, b, lat)
+            for (t, b), lat in self.profile.items()
+            if t <= threads and b <= batch
+        )
+        if not items:
+            raise ValueError(
+                f"no profiled configuration fits within (T={threads}, B={batch})"
+            )
+
+        T, B = threads, batch
+        # opt[t, b]: minimal makespan to process exactly b items on exactly t
+        # threads (or <= t threads when slack is allowed).
+        opt = np.full((T + 1, B + 1), _INF, dtype=np.float64)
+        opt[0, 0] = 0.0
+        # choice[t, b] = index into `items` of the last instance added; -1 = none.
+        choice = np.full((T + 1, B + 1), -1, dtype=np.int32)
+
+        item_t = np.array([it[0] for it in items], dtype=np.int64)
+        item_b = np.array([it[1] for it in items], dtype=np.int64)
+        item_l = np.array([it[2] for it in items], dtype=np.float64)
+
+        for t in range(1, T + 1):
+            row = opt[t]
+            ch = choice[t]
+            usable = np.nonzero(item_t <= t)[0]
+            for k in usable:
+                tp = int(item_t[k])
+                bp = int(item_b[k])
+                lat = item_l[k]
+                # candidate[b] = max(opt[t - tp, b - bp], lat) for b >= bp
+                prev = opt[t - tp, : B + 1 - bp]
+                cand = np.maximum(prev, lat)
+                seg = row[bp:]
+                better = cand < seg
+                if better.any():
+                    seg[better] = cand[better]
+                    ch[bp:][better] = k
+            if self.allow_unused_threads:
+                # opt[t, b] may fall back to opt[t-1, b] (leave a thread idle).
+                better = opt[t - 1] < row
+                if better.any():
+                    row[better] = opt[t - 1][better]
+                    # mark slack with choice -2 so backtracking walks down t.
+                    ch[better] = -2
+
+        if not np.isfinite(opt[T, B]):
+            raise ValueError(
+                f"(T={T}, B={B}) infeasible with profiled items "
+                f"{sorted(self.profile)}"
+            )
+
+        groups = self._backtrack(opt, choice, items, T, B)
+        latency = float(opt[T, B]) + self.dispatch_overhead * sum(g.i for g in groups)
+        return PackratConfig(groups=tuple(groups), latency=latency)
+
+    @staticmethod
+    def _backtrack(
+        opt: np.ndarray,
+        choice: np.ndarray,
+        items: Sequence[Tuple[int, int, float]],
+        T: int,
+        B: int,
+    ) -> List[InstanceGroup]:
+        counts: Dict[Tuple[int, int], int] = {}
+        t, b = T, B
+        while t > 0 or b > 0:
+            k = int(choice[t, b])
+            if k == -2:  # slack step (allow_unused_threads)
+                t -= 1
+                continue
+            assert k >= 0, f"backtrack hit unreachable state ({t},{b})"
+            tp, bp, _ = items[k]
+            counts[(tp, bp)] = counts.get((tp, bp), 0) + 1
+            t -= tp
+            b -= bp
+        groups = [
+            InstanceGroup(i=c, t=tp, b=bp)
+            for (tp, bp), c in sorted(counts.items(), key=lambda kv: (-kv[0][0], -kv[0][1]))
+        ]
+        return groups
+
+
+def brute_force_solve(
+    profile: Profile, threads: int, batch: int, *, allow_unused_threads: bool = False
+) -> Optional[PackratConfig]:
+    """Exhaustive reference solver (exponential; only for tests on tiny T, B).
+
+    Enumerates multisets of profiled items whose (t, b) sums hit (T, B)
+    exactly (or Σt ≤ T with slack) and returns the min-makespan one.
+    """
+    items = sorted(
+        (t, b, lat) for (t, b), lat in profile.items() if t <= threads and b <= batch
+    )
+    best: Optional[Tuple[float, Dict[Tuple[int, int], int]]] = None
+
+    def rec(idx: int, t_left: int, b_left: int, cur_max: float,
+            used: Dict[Tuple[int, int], int]) -> None:
+        nonlocal best
+        if b_left == 0 and (t_left == 0 or allow_unused_threads):
+            if best is None or cur_max < best[0]:
+                best = (cur_max, dict(used))
+            return
+        if idx >= len(items) or b_left < 0 or t_left <= 0:
+            return
+        t, b, lat = items[idx]
+        max_count = min(t_left // t, b_left // b)
+        for c in range(max_count, -1, -1):
+            if c:
+                used[(t, b)] = c
+            rec(idx + 1, t_left - c * t, b_left - c * b, max(cur_max, lat) if c else cur_max, used)
+            used.pop((t, b), None)
+
+    rec(0, threads, batch, 0.0, {})
+    if best is None:
+        return None
+    lat, counts = best
+    groups = tuple(
+        InstanceGroup(i=c, t=t, b=b)
+        for (t, b), c in sorted(counts.items(), key=lambda kv: (-kv[0][0], -kv[0][1]))
+    )
+    return PackratConfig(groups=groups, latency=lat)
+
+
+def powers_of_two(limit: int) -> List[int]:
+    """[1, 2, 4, …, <= limit] — the paper's profiled batch grid (§3.2)."""
+    if limit < 1:
+        return []
+    return [1 << k for k in range(limit.bit_length()) if (1 << k) <= limit]
+
+
+def profile_grid(threads: int, max_batch: int, *, thread_values: Optional[Sequence[int]] = None
+                 ) -> List[Tuple[int, int]]:
+    """The ⟨t,b⟩ grid Packrat profiles: t ∈ {1..T} × b ∈ powers of two (§3.2).
+
+    ``thread_values`` overrides the thread axis (e.g. powers of two for
+    TPU sub-mesh sizes, where t must be a divisor of the mesh).
+    """
+    ts = list(thread_values) if thread_values is not None else list(range(1, threads + 1))
+    return [(t, b) for t in ts for b in powers_of_two(max_batch)]

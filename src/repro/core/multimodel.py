@@ -1,0 +1,165 @@
+"""Beyond-paper extensions: SLO-constrained and multi-model optimization.
+
+The paper (§6) contrasts Packrat with Clipper/Nexus, which batch under
+latency SLOs and pack multiple models onto shared resources.  Both
+compose naturally with the ⟨i,t,b⟩ knapsack:
+
+* :func:`solve_with_slo` — the largest batch (max throughput) whose
+  optimal configuration still meets a latency SLO: sweep B down the
+  power-of-two grid, reusing the DP's memoised tables.
+* :class:`MultiModelAllocator` — split the pod's T units across several
+  models (each with its own profile and live batch size) to minimize the
+  worst per-model batch latency: binary search on the latency bound λ,
+  feasibility-checked with the minimal T_m such that
+  ``PackratOptimizer_m.solve(T_m, B_m).latency ≤ λ``; monotone in T_m by
+  construction (solve_with_units uses the ≤-units relaxation).
+
+Both are exercised in tests/test_multimodel.py and demonstrate how
+Packrat's optimizer doubles as a cluster-level placement policy —
+thin-instance partitions leave contiguous idle sub-meshes that other
+models can claim (the multi-tenant regime the TPU profile makes
+explicit: L(32,1) < L(256,1) for llama3-8b decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .knapsack import PackratConfig, PackratOptimizer, powers_of_two
+
+Profile = Mapping[Tuple[int, int], float]
+
+
+# --------------------------------------------------------------------- #
+# SLO-constrained batch selection
+# --------------------------------------------------------------------- #
+def solve_with_slo(optimizer: PackratOptimizer, threads: int,
+                   latency_slo: float, *, max_batch: int = 1 << 16
+                   ) -> Optional[Tuple[int, PackratConfig]]:
+    """Largest power-of-two batch whose optimal config meets the SLO.
+
+    Returns (B, config) maximizing throughput subject to
+    ``config.latency ≤ latency_slo``, or None if even B=1 misses it.
+    """
+    best: Optional[Tuple[int, PackratConfig]] = None
+    for b in powers_of_two(max_batch):
+        try:
+            cfg = optimizer.solve(threads, b)
+        except ValueError:
+            continue
+        if cfg.latency <= latency_slo:
+            if best is None or cfg.throughput > best[1].throughput:
+                best = (b, cfg)
+    return best
+
+
+# --------------------------------------------------------------------- #
+# multi-model unit allocation
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ModelWorkload:
+    name: str
+    profile: Profile
+    batch: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelPlacement:
+    name: str
+    units: int
+    config: PackratConfig
+
+
+class MultiModelAllocator:
+    """Minimize the worst per-model batch latency across shared units."""
+
+    def __init__(self, workloads: Sequence[ModelWorkload]) -> None:
+        if not workloads:
+            raise ValueError("no workloads")
+        self.workloads = list(workloads)
+        # ≤-units relaxation makes latency monotone nonincreasing in T_m
+        self._opts = {w.name: PackratOptimizer(w.profile,
+                                               allow_unused_threads=True)
+                      for w in workloads}
+
+    def _min_units_for(self, w: ModelWorkload, lam: float, total: int
+                       ) -> Optional[int]:
+        """Smallest T_m with optimal latency ≤ λ (binary search)."""
+        opt = self._opts[w.name]
+
+        def latency(units: int) -> float:
+            try:
+                return opt.solve(units, w.batch).latency
+            except ValueError:
+                return math.inf
+
+        if latency(total) > lam:
+            return None
+        lo, hi = 1, total
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if latency(mid) <= lam:
+                hi = mid
+            else:
+                lo = mid + 1
+        return lo
+
+    def allocate(self, total_units: int, *, iters: int = 20
+                 ) -> List[ModelPlacement]:
+        """Binary-search the makespan λ; assign leftover units greedily."""
+        candidates = sorted({
+            self._opts[w.name].solve(t, w.batch).latency
+            for w in self.workloads
+            for t in {1, 2, 4, total_units}
+            if self._feasible_latency(w, t)})
+        lo = min(candidates)
+        hi = max(candidates)
+        best: Optional[Dict[str, int]] = None
+        for _ in range(iters):
+            lam = 0.5 * (lo + hi)
+            assign = self._try(lam, total_units)
+            if assign is not None:
+                best = assign
+                hi = lam
+            else:
+                lo = lam
+        if best is None:
+            best = self._try(hi, total_units)
+        if best is None:
+            # even λ = max is infeasible jointly: give every model its
+            # proportional share as a last resort
+            share = max(1, total_units // len(self.workloads))
+            best = {w.name: share for w in self.workloads}
+        leftover = total_units - sum(best.values())
+        placements = []
+        for w in self.workloads:
+            units = best[w.name]
+            if leftover > 0:
+                extra = min(leftover, units)  # double the tightest first
+                units += extra
+                leftover -= extra
+            placements.append(ModelPlacement(
+                w.name, units, self._opts[w.name].solve(units, w.batch)))
+        return placements
+
+    def _feasible_latency(self, w: ModelWorkload, units: int) -> bool:
+        try:
+            self._opts[w.name].solve(units, w.batch)
+            return True
+        except ValueError:
+            return False
+
+    def _try(self, lam: float, total: int) -> Optional[Dict[str, int]]:
+        used = 0
+        out: Dict[str, int] = {}
+        for w in self.workloads:
+            need = self._min_units_for(w, lam, total - used)
+            if need is None:
+                return None
+            out[w.name] = need
+            used += need
+            if used > total:
+                return None
+        return out

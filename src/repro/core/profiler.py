@@ -1,0 +1,164 @@
+"""Packrat's profiler (paper §3.2).
+
+Profiles single-instance ⟨1,t,b⟩ configurations over the grid
+``t ∈ thread_values × b ∈ {1,2,4,…,B_max}`` — the paper's (n+1)·T-point
+grid instead of the exhaustive 2^n·T one — and records the average batch
+latency ``L[t,b]`` used by the knapsack optimizer.
+
+Two interchangeable backends:
+
+* :class:`MeasuredProfiler` — times real callables (paper-faithful;
+  used on CPU with micro models and by the event simulator).  Follows the
+  paper's methodology: ``warmup`` iterations discarded, mean over
+  ``iters`` runs.
+* :class:`AnalyticProfiler` — derives ``L[t,b]`` from roofline terms
+  produced by a compiled dry-run (TPU path; see launch/hlo_analysis.py),
+  i.e. compile-time profiling instead of wall-clock profiling.
+
+Profiling is offline and not on the inference critical path (§3.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .knapsack import powers_of_two, profile_grid
+from .roofline import RooflineTerms
+
+Profile = Dict[Tuple[int, int], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileSpec:
+    """What to profile: the ⟨t,b⟩ grid for a ⟨T, B_max⟩ deployment."""
+
+    total_threads: int
+    max_batch: int
+    thread_values: Optional[Tuple[int, ...]] = None  # default: 1..T
+
+    def grid(self) -> List[Tuple[int, int]]:
+        return profile_grid(self.total_threads, self.max_batch,
+                            thread_values=self.thread_values)
+
+    @property
+    def n_configs(self) -> int:
+        return len(self.grid())
+
+    @property
+    def n_exhaustive(self) -> int:
+        """Size of the exhaustive grid the paper avoids (2^n · T)."""
+        ts = (len(self.thread_values) if self.thread_values is not None
+              else self.total_threads)
+        return ts * self.max_batch
+
+
+class MeasuredProfiler:
+    """Wall-clock profiling of a user-supplied runner.
+
+    ``runner(t, b)`` must execute one inference batch of size ``b`` with
+    ``t``-way intra-op parallelism and block until complete (e.g. call a
+    jitted function and ``block_until_ready``).
+    """
+
+    def __init__(self, runner: Callable[[int, int], None], *,
+                 warmup: int = 10, iters: int = 100,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        # warmup/iters defaults follow the paper's §5.1 methodology.
+        self.runner = runner
+        self.warmup = warmup
+        self.iters = iters
+        self.clock = clock
+
+    def measure(self, t: int, b: int) -> float:
+        for _ in range(self.warmup):
+            self.runner(t, b)
+        start = self.clock()
+        for _ in range(self.iters):
+            self.runner(t, b)
+        return (self.clock() - start) / self.iters
+
+    def profile(self, spec: ProfileSpec,
+                progress: Optional[Callable[[int, int, float], None]] = None
+                ) -> Profile:
+        table: Profile = {}
+        for (t, b) in spec.grid():
+            lat = self.measure(t, b)
+            table[(t, b)] = lat
+            if progress is not None:
+                progress(t, b, lat)
+        return table
+
+
+class AnalyticProfiler:
+    """Roofline-derived profiling from compiled dry-run artifacts.
+
+    ``terms_fn(t, b)`` returns :class:`RooflineTerms` for a single
+    instance on ``t`` chips serving batch ``b`` (typically by lowering
+    ``serve_step`` on a t-chip sub-mesh; see launch/dryrun.py).  Results
+    are memoised: compiling is expensive.
+    """
+
+    def __init__(self, terms_fn: Callable[[int, int], RooflineTerms], *,
+                 overlap: bool = True) -> None:
+        self.terms_fn = terms_fn
+        self.overlap = overlap
+        self._memo: Dict[Tuple[int, int], RooflineTerms] = {}
+
+    def terms(self, t: int, b: int) -> RooflineTerms:
+        key = (t, b)
+        if key not in self._memo:
+            self._memo[key] = self.terms_fn(t, b)
+        return self._memo[key]
+
+    def measure(self, t: int, b: int) -> float:
+        terms = self.terms(t, b)
+        return terms.latency if self.overlap else terms.latency_serial
+
+    def profile(self, spec: ProfileSpec,
+                progress: Optional[Callable[[int, int, float], None]] = None
+                ) -> Profile:
+        table: Profile = {}
+        for (t, b) in spec.grid():
+            lat = self.measure(t, b)
+            table[(t, b)] = lat
+            if progress is not None:
+                progress(t, b, lat)
+        return table
+
+
+class TabulatedProfiler:
+    """Profile backed by a precomputed table (paper-calibrated curves,
+    simulator scenarios, and tests)."""
+
+    def __init__(self, table: Mapping[Tuple[int, int], float]) -> None:
+        self.table = dict(table)
+
+    def measure(self, t: int, b: int) -> float:
+        return self.table[(t, b)]
+
+    def profile(self, spec: ProfileSpec, progress=None) -> Profile:
+        out: Profile = {}
+        for (t, b) in spec.grid():
+            if (t, b) in self.table:
+                out[(t, b)] = self.table[(t, b)]
+                if progress is not None:
+                    progress(t, b, out[(t, b)])
+        return out
+
+
+def profiling_cost_summary(spec: ProfileSpec,
+                           seconds_per_config: float = 60.0) -> Dict[str, float]:
+    """The paper's §3.2 profiling-cost argument, parameterized.
+
+    For n=10, T=16: exhaustive 16 384 configs (~30 days at minutes each)
+    vs the power-of-two grid's 176 (~hours).
+    """
+    return {
+        "grid_configs": spec.n_configs,
+        "exhaustive_configs": spec.n_exhaustive,
+        "grid_hours": spec.n_configs * seconds_per_config / 3600.0,
+        "exhaustive_hours": spec.n_exhaustive * seconds_per_config / 3600.0,
+        "reduction": spec.n_exhaustive / max(1, spec.n_configs),
+    }

@@ -1,0 +1,6 @@
+"""Data substrate: synthetic corpora, batch iterators, arrival workloads."""
+
+from .pipeline import DataConfig, SyntheticCorpus, batches_for_model, token_batches
+
+__all__ = ["DataConfig", "SyntheticCorpus", "batches_for_model",
+           "token_batches"]

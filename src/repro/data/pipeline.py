@@ -1,0 +1,99 @@
+"""Synthetic data pipeline: deterministic token streams + batch iterators.
+
+The corpus is procedurally generated (seeded Zipfian n-gram chains) so
+training losses are reproducible and actually *learnable* — the loop
+must show loss descending, not just run.  The pipeline pattern matches a
+production host loader: an index-free infinite sampler with per-host
+sharding hooks and prefetch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..training.train_loop import shift_labels
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    host_id: int = 0
+    host_count: int = 1
+
+
+class SyntheticCorpus:
+    """Zipfian bigram chain: learnable structure with a few MB of state."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, branching: int = 8):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab_size
+        k = min(branching, vocab_size)
+        # each token deterministically prefers `k` successors (Zipf weights)
+        self.succ = rng.integers(0, vocab_size,
+                                 size=(min(vocab_size, 65536), k))
+        w = 1.0 / np.arange(1, k + 1)
+        self.w = w / w.sum()
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        out = np.empty(n, np.int64)
+        t = int(rng.integers(0, self.succ.shape[0]))
+        for i in range(n):
+            out[i] = t
+            nxt = rng.choice(self.succ.shape[1], p=self.w)
+            t = int(self.succ[t % self.succ.shape[0], nxt])
+        return out
+
+
+def token_batches(dcfg: DataConfig, *, with_labels: bool = True,
+                  ignore_prefix: int = 0) -> Iterator[Dict]:
+    """Infinite iterator of {tokens, labels} batches (host-sharded)."""
+    corpus = SyntheticCorpus(dcfg.vocab_size, dcfg.seed)
+    rng = np.random.default_rng(dcfg.seed * dcfg.host_count + dcfg.host_id + 1)
+    B, S = dcfg.batch_size, dcfg.seq_len
+    while True:
+        toks = np.stack([corpus.sample(rng, S) for _ in range(B)])
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+        if with_labels:
+            batch["labels"] = shift_labels(batch["tokens"], ignore_prefix)
+        yield batch
+
+
+def batches_for_model(cfg: ModelConfig, shape: ShapeConfig, *, seed: int = 0
+                      ) -> Iterator[Dict]:
+    """Batches matching a model's input_specs (vision/audio stubs filled)."""
+    import jax
+
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        P = cfg.frontend.n_prefix_tokens
+        inner = token_batches(DataConfig(cfg.vocab_size, S - P, B, seed))
+        key = jax.random.PRNGKey(seed)
+        for batch in inner:
+            key, sub = jax.random.split(key)
+            vis = jax.random.normal(sub, (B, P, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+            labels = jnp.concatenate(
+                [jnp.full((B, P), -100, jnp.int32), batch["labels"]], axis=1)
+            yield {"tokens": batch["tokens"], "vision_embeds": vis,
+                   "labels": labels}
+    elif cfg.is_encdec:
+        n_frames = min(S, cfg.frontend.n_frames) if cfg.frontend else S
+        inner = token_batches(DataConfig(cfg.vocab_size, S, B, seed))
+        key = jax.random.PRNGKey(seed)
+        for batch in inner:
+            key, sub = jax.random.split(key)
+            frames = jax.random.normal(sub, (B, n_frames, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))
+            yield {"tokens": batch["tokens"], "frames": frames,
+                   "labels": batch["labels"]}
+    else:
+        yield from token_batches(DataConfig(cfg.vocab_size, S, B, seed))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the serving hot spots, with jnp oracles.
+
+* flash_attention — prefill/train attention (tiled online softmax)
+* decode_attention — flash-decode vs long KV caches
+* ssd_scan — Mamba2 chunked SSD
+* rglru_scan — Griffin RG-LRU linear recurrence
+
+``ops`` holds the jitted public wrappers (auto-interpret off-TPU);
+``ref`` holds the pure-jnp oracles used by the allclose test sweeps.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

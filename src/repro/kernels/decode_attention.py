@@ -1,0 +1,118 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Tiling: grid = (batch, Sk/block_kv) with the KV dimension sequential;
+all H query heads are processed together per tile (decode q is tiny:
+H×D ≤ 32×128).  The per-batch valid length masks ring/partially-filled
+caches.  GQA is computed by reshaping q to (Hkv, rep·D) groups so each
+KV tile is read once.
+
+This kernel is the TPU analogue of the paper's "intra-op parallelism"
+for decode: the KV cache's *length* dimension is what a thin instance
+shards across its chips (DESIGN.md §5), and within one chip this kernel
+tiles the same axis through VMEM.
+
+VMEM per step (defaults block_kv=512, Hkv=8, D=128, bf16):
+  k,v tiles 2×512×8×128×2B = 2 MiB + q/acc fp32 (H×D) ≈ 2.2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_kv: int, kv_tiles: int, rep: int,
+                   scale: float):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_lo = ki * block_kv
+
+    @pl.when(k_lo < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # (H, D)
+        k = k_ref[0].astype(jnp.float32)               # (bk, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        H, D = q.shape
+        Hkv = k.shape[1]
+        qg = q.reshape(Hkv, rep, D)
+        # scores (Hkv, rep, bk)
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]                            # (H,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2).reshape(H))
+        p = jnp.exp(s - m_new.reshape(Hkv, rep)[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        # (Hkv, rep, bk) @ (Hkv, bk, D) → (Hkv, rep, D)
+        pv = jax.lax.dot_general(
+            p, v.transpose(1, 0, 2),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=2).reshape(H)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(H, D)
+        m_scr[...] = m_new
+
+    @pl.when(ki == kv_tiles - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 512,
+                     interpret: bool = False):
+    """q: (B, 1, H, D); caches: (B, S, Hkv, D); lengths: (B,) int32.
+
+    Returns (B, 1, H, D).  Cache positions >= lengths[b] are masked.
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    assert H % Hkv == 0
+    rep = H // Hkv
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0
+    kv_tiles = S // block_kv
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel, block_kv=block_kv,
+                               kv_tiles=kv_tiles, rep=rep, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, D), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, Hkv, D), lambda b, ki: (b, ki, 0, 0)),
+            pl.BlockSpec((1, block_kv, Hkv, D), lambda b, ki: (b, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q[:, 0], k_cache, v_cache)
+    return out[:, None]

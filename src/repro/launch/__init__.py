@@ -1,0 +1,7 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs.
+
+NOTE: importing ``dryrun``/``profile_tpu`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` and must happen
+before any other jax initialization; ``mesh``/``hlo_analysis`` are safe
+to import anywhere.
+"""

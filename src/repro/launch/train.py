@@ -1,0 +1,106 @@
+"""Training launcher: real execution on available devices, any architecture.
+
+On this CPU container it trains *reduced* configs (examples/train_small.py
+drives a ~100M-param run); on a real TPU slice the same code paths shard
+params/optimizer/batch over the production mesh via
+distributed.sharding.  Checkpoint/restart is wired in: ``--resume``
+restores the latest committed step (fault-tolerance contract in
+training/checkpoint.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --reduced --steps 200 --batch 8 --seq 256 --ckpt /tmp/ckpt --resume
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ShapeConfig, get_config
+from ..data import batches_for_model
+from ..models import build_model
+from ..training import (AdamWConfig, Checkpointer, TrainConfig, init_adamw,
+                        make_train_step)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-trainable)")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        heads = max(4, args.d_model // 64)
+        cfg = cfg.reduced(n_repeats=max(1, args.layers // max(1, len(cfg.pattern))),
+                          d_model=args.d_model, n_heads=heads,
+                          d_ff=args.d_model * 3, vocab_size=args.vocab)
+    model = build_model(cfg)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    tcfg = TrainConfig(
+        adamw=AdamWConfig(learning_rate=args.lr, warmup_steps=20,
+                          decay_steps=max(args.steps, 100),
+                          state_dtype=cfg.train_state_dtype),
+        grad_accum=args.grad_accum)
+
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+    opt_state = init_adamw(tcfg.adamw, params)
+    ckpt = Checkpointer(args.ckpt, async_save=True) if args.ckpt else None
+    start_step = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        restored = ckpt.restore(like={"params": params,
+                                      "opt_state": opt_state})
+        params = restored["tree"]["params"]
+        opt_state = restored["tree"]["opt_state"]
+        start_step = restored["step"]
+        print(f"[train] resumed from step {start_step}")
+
+    from ..models.lm import param_count
+    print(f"[train] arch={cfg.name} params={param_count(params) / 1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    data = batches_for_model(cfg, shape, seed=args.seed)
+    t0 = time.perf_counter()
+    tokens_per_step = args.batch * args.seq
+    for step in range(start_step, args.steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            done = step + 1 - start_step
+            print(f"[train] step={step + 1:5d} loss={loss:.4f} "
+                  f"tok/s={done * tokens_per_step / max(dt, 1e-9):,.0f} "
+                  f"lr={float(metrics['lr']):.2e}")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, params, opt_state)
+    if ckpt:
+        ckpt.save(args.steps, params, opt_state)
+        ckpt.wait()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Model zoo: every assigned architecture as a pure-JAX functional model."""
+
+from .lm import (Model, active_param_count, build_model, cache_specs,
+                 decode_step, forward, init_cache, init_params, input_specs,
+                 param_count, prefill)
+
+__all__ = [
+    "Model", "active_param_count", "build_model", "cache_specs",
+    "decode_step", "forward", "init_cache", "init_params", "input_specs",
+    "param_count", "prefill",
+]

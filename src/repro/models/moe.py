@@ -1,0 +1,126 @@
+"""Mixture-of-experts layer (DeepSeek-V2/V3 style: shared + routed experts).
+
+Dispatch is gather/scatter based: token→expert assignments are turned
+into per-expert index lists (capacity-bounded), tokens are gathered into
+(E, C, d) tiles, run through stacked expert MLPs, and scatter-added back
+weighted by the router gates.  Unlike one-hot einsum dispatch, HLO FLOPs
+stay ≈ capacity_factor × algorithmic FLOPs, so roofline ratios are
+honest.  Gather/scatter become cross-shard collectives under pjit when
+experts are sharded (baseline); the optimized expert-parallel path with
+explicit all_to_all lives in repro.distributed.expert_parallel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from .common import _ACTS, dense_init
+
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> Dict:
+    moe = cfg.moe
+    assert moe is not None
+    d, ff, e = cfg.d_model, moe.expert_ff, moe.n_experts
+    keys = jax.random.split(rng, 6)
+    params = {
+        "router": dense_init(keys[0], (d, e), dtype=jnp.float32),
+        "gate": dense_init(keys[1], (e, d, ff), in_axis=1, dtype=dtype),
+        "up": dense_init(keys[2], (e, d, ff), in_axis=1, dtype=dtype),
+        "down": dense_init(keys[3], (e, ff, d), in_axis=1, dtype=dtype),
+    }
+    if moe.n_shared:
+        sff = moe.expert_ff * moe.n_shared
+        params["shared"] = {
+            "gate": dense_init(keys[4], (d, sff), dtype=dtype),
+            "up": dense_init(keys[5], (d, sff), dtype=dtype),
+            "down": dense_init(keys[4], (sff, d), dtype=dtype),
+        }
+    return params
+
+
+def router_probs(params, x, moe: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routing with renormalized softmax gates (DeepSeek style).
+
+    x: (T, d) → gates (T, k) fp32, experts (T, k) int32.
+    """
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, moe.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts
+
+
+def capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(math.ceil(n_tokens * moe.top_k * moe.capacity_factor / moe.n_experts))
+    return max(4, min(n_tokens, c))
+
+
+def moe_dispatch_indices(experts: jnp.ndarray, gates: jnp.ndarray,
+                         n_experts: int, cap: int):
+    """Build per-expert gather indices from (T, k) assignments.
+
+    Returns idx (E, C) int32 token ids (T = sentinel for empty slots),
+    slot_gate (E, C) fp32 gather weights.
+    """
+    T, k = experts.shape
+    flat_e = experts.reshape(-1)                       # (T·k,)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    # position of each assignment within its expert (leftmost-token priority)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)   # (T·k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)
+    pos = jnp.take_along_axis(pos_in_expert, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap                                   # capacity drop
+    scatter_idx = jnp.stack(
+        [jnp.where(keep, flat_e, n_experts),           # row (dropped → OOB)
+         jnp.where(keep, pos, cap)], axis=-1)          # col
+    idx = jnp.full((n_experts + 1, cap + 1), T, jnp.int32)
+    idx = idx.at[scatter_idx[:, 0], scatter_idx[:, 1]].set(flat_t)
+    gate_grid = jnp.zeros((n_experts + 1, cap + 1), jnp.float32)
+    gate_grid = gate_grid.at[scatter_idx[:, 0], scatter_idx[:, 1]].set(flat_g)
+    return idx[:n_experts, :cap], gate_grid[:n_experts, :cap]
+
+
+def apply_moe(params, x, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d) → (B, S, d)."""
+    moe = cfg.moe
+    assert moe is not None
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    T = B * S
+    gates, experts = router_probs(params, xt, moe)
+    cap = capacity(T, moe)
+    idx, slot_gate = moe_dispatch_indices(experts, gates, moe.n_experts, cap)
+
+    # gather tokens into (E, C, d); sentinel rows gather zeros via padding
+    xp = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    tiles = xp[idx]                                    # (E, C, d)
+    act = _ACTS[cfg.act]
+    h = act(jnp.einsum("ecd,edf->ecf", tiles, params["gate"])) \
+        * jnp.einsum("ecd,edf->ecf", tiles, params["up"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["down"])
+    y = y * slot_gate[..., None].astype(y.dtype)
+
+    out = jnp.zeros((T + 1, d), y.dtype).at[idx.reshape(-1)].add(
+        y.reshape(-1, d))[:T]
+
+    if moe.n_shared:
+        sp = params["shared"]
+        out = out + (act(xt @ sp["gate"]) * (xt @ sp["up"])) @ sp["down"]
+    return out.reshape(B, S, d).astype(x.dtype)
+
+
+def moe_model_flops(cfg: ModelConfig, n_tokens: int) -> float:
+    """Algorithmic FLOPs of one MoE layer on n_tokens (forward)."""
+    moe = cfg.moe
+    assert moe is not None
+    d, ff = cfg.d_model, moe.expert_ff
+    routed = 6 * n_tokens * moe.top_k * d * ff       # 3 matmuls × 2 FLOP/MAC
+    shared = 6 * n_tokens * d * ff * moe.n_shared
+    router = 2 * n_tokens * d * moe.n_experts
+    return routed + shared + router

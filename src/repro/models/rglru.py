@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin — arXiv:2402.19427).
+
+The temporal mixer is the Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(W_a x_t + b_a)                    (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                    (input gate)
+    a_t = exp(-c · softplus(Λ) ⊙ r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluate the recurrence with a log-depth
+``jax.lax.associative_scan`` (the TPU-idiomatic port of the paper's
+custom linear-scan kernel); decode is the O(1) update.  The block wraps
+the RG-LRU with the Griffin recurrent-block structure: parallel gelu
+gate branch, causal depthwise conv on the recurrent branch, and output
+projection.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init
+from .ssm import causal_conv, conv_decode
+
+
+def rglru_width(cfg: ModelConfig) -> int:
+    assert cfg.rglru is not None
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru_block(rng, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    w = rglru_width(cfg)
+    rg = cfg.rglru
+    k = jax.random.split(rng, 7)
+    nb = rg.gate_blocks
+    assert w % nb == 0
+    return {
+        "gate_proj": dense_init(k[0], (d, w), dtype=dtype),
+        "rec_proj": dense_init(k[1], (d, w), dtype=dtype),
+        "conv_w": dense_init(k[2], (rg.conv_kernel, w), dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # Griffin uses block-diagonal gate matrices (nb blocks)
+        "w_a": dense_init(k[3], (nb, w // nb, w // nb), in_axis=1,
+                          dtype=dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": dense_init(k[4], (nb, w // nb, w // nb), in_axis=1,
+                          dtype=dtype),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (paper init)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / rg.c_constant)),
+        "out_proj": dense_init(k[5], (w, d), dtype=dtype),
+    }
+
+
+def _block_diag_matmul(x, w):
+    """x: (..., W) @ block-diagonal w: (nb, W/nb, W/nb) → (..., W)."""
+    nb, bs, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], nb, bs)
+    yb = jnp.einsum("...nb,nbc->...nc", xb, w)
+    return yb.reshape(*x.shape)
+
+
+def rglru_gates(params, x, c_constant: float):
+    """Per-step gate computation. x: (..., W) → (a, b) of the recurrence
+    h' = a ⊙ h + b  with  b = sqrt(1-a²) ⊙ i ⊙ x."""
+    r = jax.nn.sigmoid(_block_diag_matmul(x, params["w_a"])
+                       .astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(_block_diag_matmul(x, params["w_x"])
+                       .astype(jnp.float32) + params["b_x"])
+    log_a = -c_constant * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed in log space for stability near a→1
+    sq = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = sq * i * x.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(params, x, c_constant: float,
+               init_h: Optional[jnp.ndarray] = None):
+    """Associative scan over time. x: (B, S, W) → (y, h_final)."""
+    a, b = rglru_gates(params, x, c_constant)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_h is not None:
+        h = h + a_cum * init_h[:, None]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(params, x_t, h, c_constant: float):
+    """O(1) decode update. x_t: (B, W); h: (B, W) fp32."""
+    a, b = rglru_gates(params, x_t, c_constant)
+    h = a * h + b
+    return h.astype(x_t.dtype), h
+
+
+def apply_rglru_block(params, x, cfg: ModelConfig, *, mode: str,
+                      cache: Optional[Dict] = None):
+    """Griffin recurrent block. x: (B, S, d) (S=1 for decode)."""
+    rg = cfg.rglru
+    assert rg is not None
+    gate = jax.nn.gelu(x @ params["gate_proj"], approximate=True)
+    rec = x @ params["rec_proj"]
+
+    if mode == "decode":
+        assert cache is not None
+        rec1, conv_state = conv_decode(rec[:, 0], cache["conv"],
+                                       params["conv_w"], params["conv_b"])
+        y, h = rglru_step(params, rec1, cache["h"], rg.c_constant)
+        out = (y[:, None] * gate) @ params["out_proj"]
+        return out, {"h": h, "conv": conv_state}
+
+    rec = causal_conv(rec, params["conv_w"], params["conv_b"])
+    y, h_final = rglru_scan(params, rec, rg.c_constant)
+    out = (y * gate) @ params["out_proj"]
+    if mode == "prefill":
+        K = rg.conv_kernel
+        conv_state = (x @ params["rec_proj"])[:, -(K - 1):]
+        return out, {"h": h_final, "conv": conv_state}
+    return out, None
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    w = rglru_width(cfg)
+    rg = cfg.rglru
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, rg.conv_kernel - 1, w), dtype),
+    }

@@ -1,0 +1,229 @@
+"""Mamba2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Training/prefill use the chunked SSD algorithm: quadratic attention-like
+computation *within* chunks of length Q plus a log-depth associative scan
+over per-chunk states (TPU-friendly: all large ops are matmuls; the
+recurrence touches only (H, P, N) states).  Decode is the O(1) recurrent
+update.  The Pallas kernel in repro.kernels.ssd_scan tiles the same
+chunked math for VMEM; repro.kernels.ref re-exports the functions here as
+the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    ssm = cfg.ssm
+    assert ssm is not None
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.n_groups * ssm.d_state
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_dim=conv_dim,
+                d_state=ssm.d_state, head_dim=ssm.head_dim,
+                n_groups=ssm.n_groups, conv_kernel=ssm.conv_kernel,
+                chunk=ssm.chunk_size)
+
+
+def init_ssm_block(rng, cfg: ModelConfig, dtype) -> Dict:
+    dims = ssm_dims(cfg)
+    d = cfg.d_model
+    di, nh, cd = dims["d_inner"], dims["n_heads"], dims["conv_dim"]
+    proj_out = 2 * di + 2 * dims["n_groups"] * dims["d_state"] + nh
+    k = jax.random.split(rng, 5)
+    return {
+        "in_proj": dense_init(k[0], (d, proj_out), dtype=dtype),
+        "conv_w": dense_init(k[1], (dims["conv_kernel"], cd), dtype=dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.zeros((di,), jnp.float32)},
+        "out_proj": dense_init(k[2], (di, d), dtype=dtype),
+    }
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv via K shifted adds. x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(pad[:, k:k + S] * w[k] for k in range(K))
+    return out + b
+
+
+def conv_decode(x_t, conv_state, w, b):
+    """One-token depthwise conv. x_t: (B,C); conv_state: (B,K-1,C)."""
+    K = w.shape[0]
+    hist = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", hist, w) + b
+    return y, hist[:, 1:]
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    dims = ssm_dims(cfg)
+    di, gn, nh = dims["d_inner"], dims["n_groups"] * dims["d_state"], dims["n_heads"]
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, a_log, B_in, C_in, *, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)    dt: (B, S, H)     a_log: (H,)
+    B_in/C_in: (B, S, G, N)
+    Returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    S_orig = S
+    if S % chunk:
+        # pad to a chunk multiple; dt=0 on pads makes them inert (dA=0,
+        # zero state contribution) and padded outputs are sliced off.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_in = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_in = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc, Q = S // chunk, chunk
+    rep = H // G
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) negative
+    dA = dt * A                                              # (B,S,H)
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    dAc = dA.reshape(Bb, nc, Q, H)
+    Bc = B_in.reshape(Bb, nc, Q, G, N)
+    Cc = C_in.reshape(Bb, nc, Q, G, N)
+
+    cs = jnp.cumsum(dAc, axis=2)                             # inclusive (B,nc,Q,H)
+    # ---- intra-chunk (attention-like) ------------------------------- #
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc,
+                        preferred_element_type=jnp.float32)  # (B,nc,G,Q,Q)
+    scores = jnp.repeat(scores, rep, axis=2)                 # (B,nc,H,Q,Q)
+    # decay[b,c,h,i,j] = cs_i - cs_j  (≤ 0 since dA ≤ 0 → exp is stable)
+    csh = cs.transpose(0, 1, 3, 2)                           # (B,nc,H,Q)
+    decay = csh[..., :, None] - csh[..., None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri, jnp.exp(decay), 0.0)                  # (B,nc,H,Q,Q)
+    dtx = xc * dtc[..., None]                                # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores * L, dtx)
+
+    # ---- per-chunk states: Σ_j exp(cs_end - cs_j)·dt_j·B_j⊗x_j ------- #
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)                     # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                         # (B,nc,Q,H,N)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", seg * dtc, Bh, xc)
+
+    # ---- inter-chunk recurrence (associative scan over chunks) ------- #
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                   # (B,nc,H)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2[..., None, None] * b1 + b2
+
+    a_scan, h_after = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    if init_state is not None:
+        h_after = h_after + (a_scan[..., None, None]
+                             * init_state[:, None].astype(h_after.dtype))
+    h_before = jnp.concatenate(
+        [jnp.zeros_like(h_after[:, :1]) if init_state is None
+         else init_state[:, None].astype(h_after.dtype),
+         h_after[:, :-1]], axis=1)                           # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ------------------------------------ #
+    Ch = jnp.repeat(Cc, rep, axis=3)                         # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch, h_before) \
+        * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), h_after[:, -1]                 # final (B,H,P,N)
+
+
+def ssd_decode_step(x_t, dt_t, a_log, B_t, C_t, state):
+    """O(1) recurrent update.  x_t: (B,H,P); dt_t: (B,H); B_t/C_t: (B,G,N);
+    state: (B,H,P,N) → (y (B,H,P), state')."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt_t * A)                                    # (B,H)
+    Bh = jnp.repeat(B_t, H // G, axis=1)                      # (B,H,N)
+    Ch = jnp.repeat(C_t, H // G, axis=1)
+    contrib = (dt_t[..., None, None] * x_t[..., None]
+               * Bh[:, :, None, :])                           # (B,H,P,N)
+    state = state * da[..., None, None] + contrib
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x_t.dtype), state
+
+
+def apply_ssm_block(params, x, cfg: ModelConfig, *, mode: str,
+                    cache: Optional[Dict] = None):
+    """Full Mamba2 block: in_proj → conv → SSD → gated norm → out_proj."""
+    dims = ssm_dims(cfg)
+    di, nh, P = dims["d_inner"], dims["n_heads"], dims["head_dim"]
+    G, N = dims["n_groups"], dims["d_state"]
+    gn = G * N
+
+    if mode == "decode":
+        assert cache is not None
+        B = x.shape[0]
+        proj = x[:, 0] @ params["in_proj"]                    # (B, proj)
+        z, xbc, dt_raw = _split_proj(cfg, proj)
+        xbc, conv_state = conv_decode(xbc, cache["conv"], params["conv_w"],
+                                      params["conv_b"])
+        xbc = jax.nn.silu(xbc)
+        xs, B_t, C_t = jnp.split(xbc, [di, di + gn], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+        y, state = ssd_decode_step(
+            xs.reshape(B, nh, P), dt, params["a_log"],
+            B_t.reshape(B, G, N), C_t.reshape(B, G, N), cache["state"])
+        y = y + params["d_skip"][None, :, None] * xs.reshape(B, nh, P)
+        y = y.reshape(B, 1, di)
+        y = rms_norm(y * jax.nn.silu(z[:, None].astype(jnp.float32)).astype(y.dtype),
+                     params["norm"]["scale"], cfg.norm_eps)
+        out = (y @ params["out_proj"]).astype(x.dtype)
+        return out, {"state": state, "conv": conv_state}
+
+    B, S, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, B_in, C_in = jnp.split(xbc, [di, di + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    y, state = ssd_chunked(
+        xs.reshape(B, S, nh, P), dt, params["a_log"],
+        B_in.reshape(B, S, G, N), C_in.reshape(B, S, G, N),
+        chunk=dims["chunk"])
+    y = y + params["d_skip"][None, None, :, None] * xs.reshape(B, S, nh, P)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"]["scale"], cfg.norm_eps)
+    out = (y @ params["out_proj"]).astype(x.dtype)
+    if mode == "prefill":
+        K = dims["conv_kernel"]
+        # conv ring state = last K-1 pre-activation conv inputs
+        raw_xbc = (x @ params["in_proj"])[..., di:di + di + 2 * gn]
+        conv_state = raw_xbc[:, -(K - 1):]
+        cache = {"state": state, "conv": conv_state}
+        return out, cache
+    return out, None
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    dims = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, dims["n_heads"], dims["head_dim"],
+                            dims["d_state"]), jnp.float32),
+        "conv": jnp.zeros((batch, dims["conv_kernel"] - 1, dims["conv_dim"]),
+                          dtype),
+    }

@@ -1,0 +1,17 @@
+"""Packrat serving runtime: dispatcher, workers, controller, simulator."""
+
+from .allocator import AllocationError, Placement, ResourceAllocator
+from .controller import ControllerConfig, PackratServer
+from .dispatcher import Dispatcher, DispatcherConfig
+from .instance import (CallableBackend, JaxBackend, LatencyBackend,
+                       TabulatedBackend, WorkerInstance)
+from .simulator import (ArrivalProcess, EventLoop, Request, Response,
+                        step_rate)
+
+__all__ = [
+    "AllocationError", "ArrivalProcess", "CallableBackend",
+    "ControllerConfig", "Dispatcher", "DispatcherConfig", "EventLoop",
+    "JaxBackend", "LatencyBackend", "PackratServer", "Placement", "Request",
+    "ResourceAllocator", "Response", "TabulatedBackend", "WorkerInstance",
+    "step_rate",
+]

@@ -1,0 +1,143 @@
+"""Resource allocator (paper §3.4): chip/core assignment for instances.
+
+Assigns each instance a *contiguous* run of compute units and never
+splits an instance across locality domains (CPU sockets in the paper;
+TPU pods here) unless unavoidable — the paper's NUMA rule (§7) carries
+over directly because cross-pod ICI hops behave like cross-socket QPI.
+Resources are statically pinned for an instance's lifetime; the
+allocator tracks idle/busy units so active-passive scaling can
+temporarily oversubscribe (paper Fig. 11's transient).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.knapsack import PackratConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    instance_id: int
+    threads: int
+    batch: int
+    units: Tuple[int, ...]          # global unit (core/chip) ids
+
+    @property
+    def domain(self) -> int:
+        return -1 if not self.units else self.units[0] // _DOMAIN_SENTINEL
+
+
+_DOMAIN_SENTINEL = 1 << 30  # replaced per-allocator; see domain_of()
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+class ResourceAllocator:
+    """Tracks unit occupancy across locality domains.
+
+    ``domain_size`` = units per socket/pod.  ``oversubscribe`` permits a
+    second allocation epoch to coexist (active-passive scale-up); the
+    paper notes reconfiguration transiently oversubscribes resources.
+    """
+
+    def __init__(self, total_units: int, domain_size: Optional[int] = None,
+                 *, oversubscribe_factor: int = 2) -> None:
+        if total_units < 1:
+            raise ValueError("total_units must be >= 1")
+        self.total_units = total_units
+        self.domain_size = domain_size or total_units
+        if self.domain_size < 1 or total_units % self.domain_size:
+            raise ValueError("domain_size must divide total_units")
+        self.oversubscribe_factor = oversubscribe_factor
+        self._occupancy: Dict[int, int] = {u: 0 for u in range(total_units)}
+        self._next_instance = 0
+
+    # ------------------------------------------------------------------ #
+    def domain_of(self, unit: int) -> int:
+        return unit // self.domain_size
+
+    def _find_run(self, n: int, max_occupancy: int) -> Optional[List[int]]:
+        """Contiguous run of n units within one domain at given occupancy."""
+        n_domains = self.total_units // self.domain_size
+        for d in range(n_domains):
+            base = d * self.domain_size
+            run: List[int] = []
+            for u in range(base, base + self.domain_size):
+                if self._occupancy[u] <= max_occupancy:
+                    run.append(u)
+                    if len(run) == n:
+                        return run
+                else:
+                    run = []
+        return None
+
+    def _find_spanning_run(self, n: int, max_occupancy: int
+                           ) -> Optional[List[int]]:
+        run: List[int] = []
+        for u in range(self.total_units):
+            if self._occupancy[u] <= max_occupancy:
+                run.append(u)
+                if len(run) == n:
+                    return run
+            else:
+                run = []
+        return None
+
+    def allocate(self, config: PackratConfig) -> List[Placement]:
+        """Place every instance of a ⟨i,t,b⟩ configuration.
+
+        Prefers idle units and domain-local runs; at most one instance
+        may span domains (paper §7).  Raises AllocationError if the
+        configuration cannot fit even with oversubscription.
+        """
+        placements: List[Placement] = []
+        spanned = False
+        try:
+            for group in config.groups:
+                for _ in range(group.i):
+                    units = None
+                    for occ in range(self.oversubscribe_factor):
+                        units = self._find_run(group.t, occ)
+                        if units is not None:
+                            break
+                    if units is None and not spanned:
+                        for occ in range(self.oversubscribe_factor):
+                            units = self._find_spanning_run(group.t, occ)
+                            if units is not None:
+                                spanned = True
+                                break
+                    if units is None:
+                        raise AllocationError(
+                            f"cannot place instance of {group} "
+                            f"(T={self.total_units}, oversubscribe="
+                            f"{self.oversubscribe_factor})")
+                    for u in units:
+                        self._occupancy[u] += 1
+                    placements.append(Placement(self._next_instance, group.t,
+                                                group.b, tuple(units)))
+                    self._next_instance += 1
+        except AllocationError:
+            self.release(placements)
+            raise
+        return placements
+
+    def release(self, placements: Sequence[Placement]) -> None:
+        for p in placements:
+            for u in p.units:
+                if self._occupancy[u] > 0:
+                    self._occupancy[u] -= 1
+
+    @property
+    def busy_units(self) -> int:
+        return sum(1 for v in self._occupancy.values() if v > 0)
+
+    @property
+    def oversubscribed_units(self) -> int:
+        return sum(1 for v in self._occupancy.values() if v > 1)
+
+    def spans_domains(self, placement: Placement) -> bool:
+        return len({self.domain_of(u) for u in placement.units}) > 1

@@ -1,0 +1,205 @@
+"""The Packrat serving controller (paper §3.1 architecture, Fig. 3).
+
+Ties every component together on the event loop:
+
+  requests → Dispatcher (aggregate B, partition per ⟨i,t,b⟩)
+           → WorkerInstances (latency backend)
+  queue depth → BatchSizeEstimator (EWMA + mode, §3.8)
+              → PackratOptimizer (2-D knapsack, §3.3) when B̃ ≠ B
+              → ResourceAllocator (§3.4)
+              → ActivePassiveController (zero-downtime swap, §3.7)
+
+Fault tolerance: worker failures are detected by heartbeat ticks and the
+worker is respawned (TorchServe behaviour, §4); elastic scaling re-runs
+the optimizer with the surviving unit count T′ — on TPU this is exactly
+how Packrat doubles as an elastic-scaling policy (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.estimator import BatchSizeEstimator, EstimatorConfig
+from ..core.knapsack import PackratConfig, PackratOptimizer
+from ..core.reconfig import ActivePassiveController, needs_active_passive
+from .allocator import ResourceAllocator
+from .dispatcher import Dispatcher, DispatcherConfig
+from .instance import LatencyBackend, WorkerInstance
+from .simulator import EventLoop, Request, Response
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    estimator: EstimatorConfig = dataclasses.field(default_factory=EstimatorConfig)
+    dispatcher: DispatcherConfig = dataclasses.field(default_factory=DispatcherConfig)
+    tick_interval: float = 0.100          # queue-depth sampling period
+    worker_spawn_time: float = 0.600      # per-worker start+load cost (§5.3.2)
+    worker_respawn_time: float = 0.600
+    drain_time: float = 0.250
+
+
+class PackratServer:
+    """A single-model Packrat serving endpoint on one server/pod."""
+
+    def __init__(self, loop: EventLoop, *, total_units: int,
+                 optimizer: PackratOptimizer, backend: LatencyBackend,
+                 initial_batch: int, config: Optional[ControllerConfig] = None,
+                 domain_size: Optional[int] = None) -> None:
+        self.loop = loop
+        self.total_units = total_units
+        self.optimizer = optimizer
+        self.backend = backend
+        self.ccfg = config or ControllerConfig()
+        self.allocator = ResourceAllocator(total_units, domain_size)
+        self.estimator = BatchSizeEstimator(self.ccfg.estimator,
+                                            initial_batch=initial_batch)
+        self.responses: List[Response] = []
+        self.reconfig_log: List[Tuple[float, int, PackratConfig]] = []
+        self._next_worker_id = 0
+        self._placements: Dict[int, list] = {}
+
+        first = self.optimizer.solve(total_units, initial_batch)
+        self.apc = ActivePassiveController(
+            spawn_cost=self._spawn_cost, drain_cost=lambda c: self.ccfg.drain_time,
+            on_swap=self._on_swap)
+        self.apc.start(first, now=loop.now)
+        workers = self._spawn_workers(first)
+        self.dispatcher = Dispatcher(loop, first, workers,
+                                     self._on_response, self.ccfg.dispatcher)
+        self.reconfig_log.append((loop.now, initial_batch, first))
+        self._schedule_tick()
+
+    # ------------------------------------------------------------------ #
+    # workers
+    # ------------------------------------------------------------------ #
+    def _spawn_cost(self, config: PackratConfig) -> float:
+        # workers start concurrently; cost ≈ slowest worker + const (the
+        # paper measures ~5 s for a full reconfiguration on TorchServe)
+        return self.ccfg.worker_spawn_time * max(
+            1.0, 1.0 + 0.1 * config.n_instances)
+
+    def _spawn_workers(self, config: PackratConfig) -> List[WorkerInstance]:
+        placements = self.allocator.allocate(config)
+        workers = []
+        for p in placements:
+            w = WorkerInstance(p.instance_id, p.threads, p.batch,
+                               self.backend, units=p.units)
+            w.busy_until = self.loop.now
+            workers.append(w)
+        self._placements[id(config)] = placements
+        return workers
+
+    def _release_workers(self, config: PackratConfig) -> None:
+        placements = self._placements.pop(id(config), None)
+        if placements:
+            self.allocator.release(placements)
+
+    # ------------------------------------------------------------------ #
+    # request/response path
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        self.dispatcher.on_request(req)
+
+    def _on_response(self, resp: Response) -> None:
+        self.responses.append(resp)
+
+    # ------------------------------------------------------------------ #
+    # control loop
+    # ------------------------------------------------------------------ #
+    def _schedule_tick(self) -> None:
+        self.loop.schedule(self.ccfg.tick_interval, self._tick)
+
+    def _tick(self) -> None:
+        self.estimator.observe(self.dispatcher.take_queue_highwater())
+        self.apc.tick(self.loop.now)
+        if self.apc.phase.value == "stable":
+            new_b = self.estimator.should_reconfigure(self.loop.now)
+            if new_b is not None:
+                self.reconfigure(new_b)
+        self._check_workers()
+        self._schedule_tick()
+
+    def reconfigure(self, new_batch: int) -> None:
+        """Run the optimizer for B̃ and transition via active-passive.
+
+        An over-estimated B̃ (queue backlog during overload can exceed
+        the largest servable batch T×b_max) is halved until feasible —
+        the largest feasible batch is also the throughput-optimal
+        response to overload.
+        """
+        new_cfg = None
+        while new_batch >= 1:
+            try:
+                new_cfg = self.optimizer.solve(self.total_units, new_batch)
+                break
+            except ValueError:
+                new_batch //= 2
+        if new_cfg is None:
+            return
+        self.estimator.commit(new_batch)
+        old_cfg = self.apc.active
+        if old_cfg is not None and new_cfg.groups == old_cfg.groups:
+            return
+        if old_cfg is not None and not needs_active_passive(old_cfg, new_cfg):
+            # paper case 1: same per-worker thread counts — plain worker
+            # scaling, no active-passive transition needed.
+            self._release_workers(old_cfg)
+            workers = self._spawn_workers(new_cfg)
+            self.dispatcher.set_config(new_cfg, workers)
+            self.apc.start(new_cfg, now=self.loop.now)
+            self.reconfig_log.append((self.loop.now, new_batch, new_cfg))
+            return
+        # paper case 2: thread counts change — spawn the passive set now
+        # (resources oversubscribe transiently), swap when ready.
+        new_workers = self._spawn_workers(new_cfg)
+        done = self.apc.request_reconfig(new_cfg, self.loop.now)
+        self.reconfig_log.append((self.loop.now, new_batch, new_cfg))
+
+        def finish_swap(old_cfg=old_cfg):
+            # swap happened inside apc.tick via on_swap; drain old set
+            if old_cfg is not None:
+                self._release_workers(old_cfg)
+
+        self._pending_workers = new_workers
+        self.loop.at(done, finish_swap)
+
+    def _on_swap(self, new_cfg: PackratConfig) -> None:
+        self.dispatcher.set_config(new_cfg, self._pending_workers)
+
+    # ------------------------------------------------------------------ #
+    # fault tolerance
+    # ------------------------------------------------------------------ #
+    def inject_failure(self, instance_idx: int = 0) -> None:
+        """Kill a live worker (tests/benchmarks call this)."""
+        live = [w for w in self.dispatcher.instances if not w.failed]
+        if live:
+            live[instance_idx % len(live)].fail()
+
+    def _check_workers(self) -> None:
+        """Heartbeat: respawn dead workers (TorchServe §4 behaviour)."""
+        for w in self.dispatcher.instances:
+            if w.failed:
+                self.loop.schedule(self.ccfg.worker_respawn_time,
+                                   lambda w=w: w.respawn(self.loop.now))
+
+    # ------------------------------------------------------------------ #
+    # elastic scaling (beyond paper; DESIGN.md §2)
+    # ------------------------------------------------------------------ #
+    def scale_units(self, new_total_units: int) -> None:
+        """Re-run Packrat for a changed unit count (nodes joined/left)."""
+        self.total_units = new_total_units
+        self.allocator = ResourceAllocator(new_total_units,
+                                           min(self.allocator.domain_size,
+                                               new_total_units))
+        self._placements.clear()
+        if self.apc.phase.value == "stable":
+            cfg = self.optimizer.solve(new_total_units,
+                                       self.estimator.current_batch)
+            if cfg.groups != (self.apc.active.groups
+                              if self.apc.active else None):
+                new_workers = self._spawn_workers(cfg)
+                self._pending_workers = new_workers
+                self.apc.request_reconfig(cfg, self.loop.now)
+                self.reconfig_log.append(
+                    (self.loop.now, self.estimator.current_batch, cfg))

@@ -1,0 +1,213 @@
+"""Dispatcher (paper §3.5): batch aggregation + batch partitioning.
+
+Aggregates incoming requests up to the configured batch size ``B`` with
+a user-provided batch timeout (a partial batch is dispatched when the
+timeout expires — §2, §3.5), then *partitions* each aggregate batch
+across instances according to the active ⟨i,t,b⟩ configuration (each
+instance of group j receives b_j items).
+
+Dispatch is batch-synchronous, matching the paper's execution model
+("process a batch of requests to completion up to some batch size B",
+§6): a new aggregate batch is issued when the previous one's instances
+are idle, so request backlog is visible in the dispatcher queue — which
+is exactly the signal the Batch Size Estimator tracks (§3.8).
+
+Beyond-paper fault tolerance (needed at cluster scale):
+* straggler re-dispatch — a sub-batch that has not completed by
+  ``straggler_factor ×`` its expected latency is re-issued to an idle
+  instance (first completion wins);
+* failed instances never receive work; their in-flight sub-batches are
+  re-dispatched by the watchdog.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Callable, Deque, Dict, List, Optional, Sequence
+
+from ..core.knapsack import PackratConfig
+from .instance import WorkerInstance
+from .simulator import EventLoop, Request, Response
+
+
+@dataclasses.dataclass
+class DispatcherConfig:
+    batch_timeout: float = 0.050      # paper's user-provided batch timeout
+    straggler_factor: float = 3.0     # re-dispatch threshold multiplier
+    max_redispatch: int = 2
+
+
+class Dispatcher:
+    """Routes aggregate batches onto the active instance set."""
+
+    def __init__(self, loop: EventLoop, config: PackratConfig,
+                 instances: Sequence[WorkerInstance],
+                 on_response: Callable[[Response], None],
+                 dcfg: Optional[DispatcherConfig] = None) -> None:
+        self.loop = loop
+        self.dcfg = dcfg or DispatcherConfig()
+        self.on_response = on_response
+        self.queue: Deque[Request] = collections.deque()
+        self.batch_size = 0
+        self.instances: List[WorkerInstance] = []
+        self._timeout_armed = False
+        self._wakeup_armed = False
+        self._done_requests: set = set()
+        self._batch_seq = itertools.count()
+        self._queue_highwater = 0
+        self.timeouts_fired = 0
+        self.redispatches = 0
+        self.batches_dispatched = 0
+        self.set_config(config, instances)
+
+    # ------------------------------------------------------------------ #
+    # configuration (atomically swapped by active-passive scaling)
+    # ------------------------------------------------------------------ #
+    def set_config(self, config: PackratConfig,
+                   instances: Sequence[WorkerInstance]) -> None:
+        self.config = config
+        self.instances = list(instances)
+        self.batch_size = config.total_batch
+        self._try_dispatch()
+
+    # ------------------------------------------------------------------ #
+    # request path
+    # ------------------------------------------------------------------ #
+    def on_request(self, req: Request) -> None:
+        self.queue.append(req)
+        if len(self.queue) >= self.batch_size:
+            self._try_dispatch()
+        elif not self._timeout_armed:
+            self._timeout_armed = True
+            self.loop.at(self.loop.now + self.dcfg.batch_timeout,
+                         self._on_timeout)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def take_queue_highwater(self) -> int:
+        """The estimator's Q̂: max queue depth observed *at dispatch
+        instants* since the last call (falling back to the live depth).
+        Sampling at dispatch time is the batch-synchronous analogue of
+        the paper's queue-depth tracking — fixed-tick sampling would
+        undersample a queue that drains exactly at B each batch.
+        """
+        hw = max(self._queue_highwater, len(self.queue))
+        self._queue_highwater = len(self.queue)
+        return hw
+
+    def _on_timeout(self) -> None:
+        self._timeout_armed = False
+        if self.queue:
+            self.timeouts_fired += 1
+            self._try_dispatch(force_partial=True)
+            if self.queue and not self._timeout_armed:
+                self._timeout_armed = True
+                self.loop.at(self.loop.now + self.dcfg.batch_timeout,
+                             self._on_timeout)
+
+    def _wakeup_at(self, t: float) -> None:
+        if not self._wakeup_armed:
+            self._wakeup_armed = True
+
+            def wake():
+                self._wakeup_armed = False
+                self._try_dispatch()
+
+            self.loop.at(max(t, self.loop.now), wake)
+
+    # ------------------------------------------------------------------ #
+    # batching + partitioning
+    # ------------------------------------------------------------------ #
+    def _live(self) -> List[WorkerInstance]:
+        return [w for w in self.instances if not w.failed]
+
+    def _try_dispatch(self, force_partial: bool = False) -> None:
+        """Issue the next aggregate batch if instances are free.
+
+        Dispatches when (queue ≥ B) or (timeout expired with a partial
+        batch), and the active instance set is idle.  Otherwise arms a
+        wake-up at the earliest instance completion.
+        """
+        while self.queue:
+            live = self._live()
+            if not live:
+                self._wakeup_at(self.loop.now + self.dcfg.batch_timeout)
+                return
+            if len(self.queue) < self.batch_size and not force_partial:
+                return
+            busy = [w for w in live if not w.is_idle(self.loop.now)]
+            if busy:
+                self._wakeup_at(min(w.busy_until for w in busy))
+                return
+            self._queue_highwater = max(self._queue_highwater,
+                                        len(self.queue))
+            n = min(len(self.queue), self.batch_size)
+            items = [self.queue.popleft() for _ in range(n)]
+            self._partition_and_submit(items)
+            self.batches_dispatched += 1
+            force_partial = False
+
+    def _partition_and_submit(self, items: List[Request]) -> None:
+        """Split one aggregate batch across instances per the ⟨i,t,b⟩ config."""
+        cursor = 0
+        for group in self.config.groups:
+            for _ in range(group.i):
+                if cursor >= len(items):
+                    return
+                sub = items[cursor:cursor + group.b]
+                cursor += group.b
+                self._submit(sub, group.t, redispatch=0)
+        while cursor < len(items):   # oversized leftovers → group-0 slices
+            group = self.config.groups[0]
+            sub = items[cursor:cursor + group.b]
+            cursor += group.b
+            self._submit(sub, group.t, redispatch=0)
+
+    def _pick_instance(self, threads: int) -> Optional[WorkerInstance]:
+        """Least-loaded live instance, preferring the matching thread count."""
+        live = [w for w in self._live() if w.threads == threads] or self._live()
+        if not live:
+            return None
+        return min(live, key=lambda w: w.busy_until)
+
+    def _submit(self, sub: List[Request], threads: int, redispatch: int
+                ) -> None:
+        worker = self._pick_instance(threads)
+        if worker is None:
+            self.loop.schedule(self.dcfg.batch_timeout,
+                               lambda: self._submit(sub, threads, redispatch))
+            return
+        n_live = len(self._live())
+        done_t = worker.process(len(sub), self.loop.now,
+                                n_live_instances=n_live)
+        expected = done_t - self.loop.now
+
+        def complete(worker=worker, sub=sub):
+            if worker.failed:
+                return  # the watchdog below re-dispatches
+            for r in sub:
+                if r.id in self._done_requests:
+                    continue
+                self._done_requests.add(r.id)
+                self.on_response(Response(
+                    request=r, completion=self.loop.now,
+                    batch_size=len(sub), instance_id=worker.id,
+                    redispatched=redispatch > 0))
+            self._try_dispatch()
+
+        self.loop.at(done_t, complete)
+
+        if redispatch < self.dcfg.max_redispatch:
+            deadline = self.loop.now + expected * self.dcfg.straggler_factor
+
+            def watchdog(sub=sub, threads=threads, redispatch=redispatch):
+                missing = [r for r in sub if r.id not in self._done_requests]
+                if missing:
+                    self.redispatches += 1
+                    self._submit(missing, threads, redispatch + 1)
+
+            self.loop.at(deadline, watchdog)

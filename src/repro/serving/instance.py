@@ -1,0 +1,163 @@
+"""Worker instances and latency backends (paper §3.6).
+
+A :class:`WorkerInstance` executes inference batches; its runtime comes
+from a :class:`LatencyBackend`:
+
+* :class:`TabulatedBackend` — profiled L[t,b] tables (+ optional
+  interference model applied by live-instance count, §5.2.2).
+* :class:`RooflineBackend` — the analytic TPU model (core.roofline).
+* :class:`JaxBackend` — *real* execution: runs a jitted model
+  ``decode_step``/``forward`` and measures wall-clock (micro models on
+  CPU; the integration tests use this so the serving stack is exercised
+  against genuine JAX inference, pre/post-processing included).
+
+Workers can fail and be respawned (TorchServe respawns dead workers —
+§4 Implementation); the dispatcher's straggler policy re-dispatches work
+stuck on failed/slow instances.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+from ..core.interference import CPUInterferenceModel, TPUInterferenceModel
+from ..core.knapsack import PackratConfig
+
+
+class LatencyBackend:
+    def batch_latency(self, t: int, b: int, *, n_live_instances: int = 1,
+                      total_units: int = 0) -> float:
+        raise NotImplementedError
+
+
+class TabulatedBackend(LatencyBackend):
+    def __init__(self, table: Mapping[Tuple[int, int], float],
+                 interference=None, total_units: int = 0) -> None:
+        self.table = dict(table)
+        self.interference = interference
+        self.total_units = total_units
+        self._bs_by_t: Dict[int, list] = {}
+        for (t, b) in self.table:
+            self._bs_by_t.setdefault(t, []).append(b)
+        for bs in self._bs_by_t.values():
+            bs.sort()
+
+    def _lookup(self, t: int, b: int) -> float:
+        """Exact hit, else round b up to the next profiled size (a partial
+        batch costs what its enclosing profiled batch costs), else scale
+        linearly above the largest profiled batch."""
+        if (t, b) in self.table:
+            return self.table[(t, b)]
+        bs = self._bs_by_t.get(t)
+        if not bs:
+            t = min(self._bs_by_t, key=lambda tt: abs(tt - t))
+            bs = self._bs_by_t[t]
+        for bb in bs:
+            if bb >= b:
+                return self.table[(t, bb)]
+        top = bs[-1]
+        return self.table[(t, top)] * (b / top)
+
+    def batch_latency(self, t, b, *, n_live_instances=1, total_units=0):
+        base = self._lookup(t, b)
+        if self.interference is None:
+            return base
+        # constant-factor multi-instance penalty (downclock + loaded DRAM)
+        from ..core.knapsack import InstanceGroup
+        cfg = PackratConfig(groups=(InstanceGroup(n_live_instances, t, b),),
+                            latency=base)
+        return self.interference.observed_latency(
+            cfg, total_units or self.total_units)
+
+
+class CallableBackend(LatencyBackend):
+    def __init__(self, fn: Callable[[int, int], float]) -> None:
+        self.fn = fn
+
+    def batch_latency(self, t, b, *, n_live_instances=1, total_units=0):
+        return self.fn(t, b)
+
+
+class JaxBackend(LatencyBackend):
+    """Measures real jitted execution of a model step for batch size b.
+
+    ``make_runner(b)`` returns a zero-arg callable running one batch of
+    size b to completion (``block_until_ready`` inside).  Thread count t
+    is recorded but cannot vary on a single-device CPU container; the
+    measured latency is per-instance ground truth for the e2e tests.
+    """
+
+    def __init__(self, make_runner: Callable[[int], Callable[[], None]],
+                 warmup: int = 2) -> None:
+        self._runners: Dict[int, Callable[[], None]] = {}
+        self._make = make_runner
+        self._warmup = warmup
+        self._measured: Dict[int, float] = {}
+
+    @staticmethod
+    def _round_batch(b: int) -> int:
+        """Round partial batches up to the next power of two: real servers
+        pad to compiled bucket sizes rather than recompiling per size."""
+        return 1 << max(0, (b - 1)).bit_length()
+
+    def batch_latency(self, t, b, *, n_live_instances=1, total_units=0):
+        b = self._round_batch(b)
+        if b not in self._measured:
+            runner = self._runners.setdefault(b, self._make(b))
+            for _ in range(self._warmup):
+                runner()
+            t0 = time.perf_counter()
+            runner()
+            self._measured[b] = time.perf_counter() - t0
+        return self._measured[b]
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    batches: int = 0
+    items: int = 0
+    busy_time: float = 0.0
+    failures: int = 0
+
+
+class WorkerInstance:
+    """One model instance pinned to `threads` units, serving batches ≤ b."""
+
+    def __init__(self, instance_id: int, threads: int, batch: int,
+                 backend: LatencyBackend, *, units: Tuple[int, ...] = ()):
+        self.id = instance_id
+        self.threads = threads
+        self.batch = batch
+        self.backend = backend
+        self.units = units
+        self.busy_until = 0.0
+        self.failed = False
+        self.stats = WorkerStats()
+
+    def is_idle(self, now: float) -> bool:
+        return not self.failed and self.busy_until <= now
+
+    def process(self, n_items: int, now: float, *,
+                n_live_instances: int = 1, total_units: int = 0) -> float:
+        """Start a batch; returns its completion time."""
+        if self.failed:
+            raise RuntimeError(f"instance {self.id} is failed")
+        lat = self.backend.batch_latency(
+            self.threads, max(1, n_items),
+            n_live_instances=n_live_instances, total_units=total_units)
+        start = max(now, self.busy_until)
+        self.busy_until = start + lat
+        self.stats.batches += 1
+        self.stats.items += n_items
+        self.stats.busy_time += lat
+        return self.busy_until
+
+    def fail(self) -> None:
+        self.failed = True
+        self.stats.failures += 1
+
+    def respawn(self, now: float) -> None:
+        self.failed = False
+        self.busy_until = now

@@ -1,0 +1,167 @@
+"""Sharded checkpointing with manifest + async save (no orbax dependency).
+
+Layout (one directory per step):
+
+    <dir>/step_000100/
+        manifest.json        {step, leaf paths, shapes, dtypes, shard files}
+        leaf_00000.npy ...   one file per pytree leaf (np.save, mmap-able)
+        _COMPLETE            commit marker written last (atomic restore rule)
+
+Fault-tolerance contract:
+* a checkpoint without ``_COMPLETE`` is ignored by ``latest_step`` — a
+  writer killed mid-save can never corrupt restore;
+* ``save`` can run in a background thread (async checkpointing overlaps
+  the next train steps — the standard large-scale trick);
+* ``keep`` bounds disk usage (old committed steps garbage-collected).
+
+On a multi-host deployment each host writes only the leaves it owns
+(``shard_filter``); the manifest records the global pytree structure.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+_COMPLETE = "_COMPLETE"
+
+# numpy cannot natively serialize ml_dtypes types; store them as raw
+# integer views and record the logical dtype in the manifest.
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[name]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if logical_dtype in _VIEW_DTYPES and arr.dtype == _VIEW_DTYPES[logical_dtype]:
+        return arr.view(np.dtype(getattr(ml_dtypes, logical_dtype)))
+    return arr
+
+
+def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = False,
+                 shard_filter: Optional[Callable[[str], bool]] = None):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self.shard_filter = shard_filter
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    def _step_dir(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:09d}"
+
+    def save(self, step: int, params: PyTree, opt_state: PyTree = None
+             ) -> None:
+        """Write a checkpoint (optionally in a background thread)."""
+        tree = {"params": params, "opt_state": opt_state}
+        # materialize to host memory synchronously (device buffers may be
+        # donated by the next step), then write async if requested
+        leaves = [(name, np.asarray(leaf)) for name, leaf in _leaf_paths(tree)
+                  if leaf is not None
+                  and (self.shard_filter is None or self.shard_filter(name))]
+
+        def write():
+            sd = self._step_dir(step)
+            tmp = sd.with_suffix(".tmp")
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "leaves": []}
+            for i, (name, arr) in enumerate(leaves):
+                fname = f"leaf_{i:05d}.npy"
+                storable, logical = _to_storable(arr)
+                np.save(tmp / fname, storable)
+                manifest["leaves"].append(
+                    {"name": name, "file": fname,
+                     "shape": list(arr.shape), "dtype": logical})
+            with open(tmp / "manifest.json", "w") as f:
+                json.dump(manifest, f)
+            (tmp / _COMPLETE).touch()
+            if sd.exists():
+                shutil.rmtree(sd)
+            tmp.rename(sd)
+            self._gc()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if p.is_dir() and (p / _COMPLETE).exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, like: PyTree = None
+                ) -> Dict:
+        """Load {params, opt_state}; ``like`` recovers the pytree structure."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        sd = self._step_dir(step)
+        if not (sd / _COMPLETE).exists():
+            raise FileNotFoundError(f"checkpoint {sd} is uncommitted")
+        with open(sd / "manifest.json") as f:
+            manifest = json.load(f)
+        by_name = {l["name"]: _from_storable(
+            np.load(sd / l["file"], mmap_mode="r"), l["dtype"])
+            for l in manifest["leaves"]}
+        if like is None:
+            return {"step": step, "arrays": by_name}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path, leaf in flat:
+            name = jax.tree_util.keystr(path)
+            if name not in by_name:
+                raise KeyError(f"checkpoint missing leaf {name}")
+            arr = np.asarray(by_name[name])
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {name}: ckpt {arr.shape} vs "
+                    f"model {leaf.shape}")
+            out.append(arr.astype(leaf.dtype))
+        return {"step": step,
+                "tree": jax.tree_util.tree_unflatten(treedef, out)}

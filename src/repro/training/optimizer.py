@@ -1,0 +1,115 @@
+"""AdamW with dtype-configurable state (no optax dependency).
+
+State dtypes matter at assigned-architecture scale: deepseek-v3-671b
+with fp32 moments needs >16 GiB/chip on a 512-chip mesh, so its config
+uses bf16 moments (the "8-bit Adam"-style distributed-optimization trick
+— see EXPERIMENTS.md §Dry-run memory notes).  Master weights are kept in
+fp32 when ``master_weights`` is set and params are low-precision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"      # moments dtype ("bfloat16" at 671B scale)
+    master_weights: bool = False      # keep fp32 master copy of bf16 params
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+    master: Optional[PyTree]
+
+
+def lr_schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * frac
+
+
+def init_adamw(cfg: AdamWConfig, params: PyTree) -> AdamWState:
+    sdt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sdt)
+    master = None
+    if cfg.master_weights:
+        master = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params),
+                      master=master)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+                 params: PyTree) -> Tuple[PyTree, AdamWState, dict]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    ref = state.master if state.master is not None else params
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32) * scale
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        p32 = p.astype(jnp.float32)
+        newp = p32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * p32)
+        return newp, mu32.astype(sdt), nu32.astype(sdt)
+
+    flat_ref, treedef = jax.tree_util.tree_flatten(ref)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    outs = [upd(g, m, n, p)
+            for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_ref)]
+    new_master32 = [o[0] for o in outs]
+    new_mu = treedef.unflatten([o[1] for o in outs])
+    new_nu = treedef.unflatten([o[2] for o in outs])
+
+    flat_params = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [m.astype(p.dtype) for m, p in zip(new_master32, flat_params)])
+    new_master = treedef.unflatten(new_master32) \
+        if state.master is not None else None
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_mu, new_nu, new_master), metrics

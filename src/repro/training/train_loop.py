@@ -1,0 +1,122 @@
+"""Training step + loop: cross-entropy LM training for every architecture.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) →
+(params, opt_state, metrics) function with optional gradient
+accumulation and per-block rematerialization; sharding is applied by the
+launcher (launch/train.py) via in/out shardings — the step itself is
+mesh-agnostic SPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.common import cross_entropy_loss
+from ..models.lm import Model, forward, head_weights
+from .optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    grad_accum: int = 1               # microbatches per optimizer step
+    remat: bool = False               # checkpoint the whole forward
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    # cfg.remat checkpoints each block inside the model (models.lm), the
+    # standard per-layer policy; nothing extra to do here.
+    hidden = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend is not None and cfg.frontend.kind == "vision" \
+            and "vision_embeds" in batch:
+        pass  # labels already cover prefix positions with ignore_index
+    return cross_entropy_loss(hidden, head_weights(params, cfg), labels,
+                              chunk=cfg.xent_chunk,
+                              softcap=cfg.logit_softcap)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig
+                    ) -> Callable[[PyTree, AdamWState, Dict], Tuple]:
+    """Build the SPMD train step (shift labels, grad, AdamW update)."""
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def single(params, batch):
+        return grad_fn(params, batch, cfg)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict):
+        if tcfg.grad_accum > 1:
+            # microbatch over the leading batch axis
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = single(params, mb)
+                grad_acc = jax.tree_util.tree_map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            B = batch["tokens"].shape[0]
+            k = tcfg.grad_accum
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(k, B // k, *x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbs)
+            loss = loss / k
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+        else:
+            loss, grads = single(params, batch)
+        params, opt_state, metrics = adamw_update(
+            tcfg.adamw, grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def shift_labels(tokens: jnp.ndarray, ignore_prefix: int = 0) -> jnp.ndarray:
+    """Next-token labels: labels[t] = tokens[t+1]; last and prefix = -100."""
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], -100)], axis=1)
+    if ignore_prefix:
+        labels = labels.at[:, :ignore_prefix].set(-100)
+    return labels
+
+
+def train(model: Model, tcfg: TrainConfig, data: Iterator[Dict], *,
+          steps: int, rng=None, params=None, opt_state=None,
+          log_every: int = 10,
+          on_step: Optional[Callable[[int, Dict], None]] = None,
+          checkpointer=None, checkpoint_every: int = 0):
+    """Single-host training loop (examples + tests; launch/train.py shards)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = model.init(rng)
+    if opt_state is None:
+        opt_state = init_adamw(tcfg.adamw, params)
+    step_fn = jax.jit(make_train_step(model.cfg, tcfg))
+    history = []
+    t0 = time.perf_counter()
+    start_step = int(opt_state.step)
+    for step in range(start_step, steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if on_step is not None:
+            on_step(step, metrics)
+        if (step + 1) % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            history.append({"step": step + 1, "loss": loss,
+                            "elapsed_s": dt})
+        if checkpointer is not None and checkpoint_every \
+                and (step + 1) % checkpoint_every == 0:
+            checkpointer.save(step + 1, params, opt_state)
+    return params, opt_state, history

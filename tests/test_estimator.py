@@ -1,0 +1,119 @@
+"""Tests for the batch-size estimator (paper §3.8)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BatchSizeEstimator, EstimatorConfig, floor_power_of_two
+
+
+def test_floor_power_of_two():
+    assert floor_power_of_two(1) == 1
+    assert floor_power_of_two(1.9) == 1
+    assert floor_power_of_two(2) == 2
+    assert floor_power_of_two(3) == 2
+    assert floor_power_of_two(64) == 64
+    assert floor_power_of_two(65.2) == 64
+    assert floor_power_of_two(0.3) == 1
+
+
+@given(st.floats(min_value=0, max_value=1e9, allow_nan=False))
+def test_floor_power_of_two_properties(x):
+    p = floor_power_of_two(x)
+    assert p >= 1 and (p & (p - 1)) == 0          # power of two
+    if x >= 1:
+        assert p <= x < 2 * p
+
+
+@given(st.lists(st.floats(min_value=0, max_value=1e6, allow_nan=False),
+                min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_estimates_always_powers_of_two(depths):
+    est = BatchSizeEstimator()
+    for d in depths:
+        b = est.observe(d)
+        assert b >= 1 and (b & (b - 1)) == 0
+    s = est.smoothed_batch()
+    assert s >= 1 and (s & (s - 1)) == 0
+
+
+def test_sustained_load_change_triggers_reconfig():
+    """A step in arrival rate (Fig. 11) eventually changes B̃."""
+    est = BatchSizeEstimator(EstimatorConfig(alpha=0.5, window=4,
+                                             reconfigure_timeout=1.0),
+                             initial_batch=8)
+    for _ in range(20):
+        est.observe(8)
+    assert est.smoothed_batch() == 8
+    assert est.should_reconfigure(now=10.0) is None
+    # request spike: queue depth jumps to ~100 (floors to B̂=64)
+    for _ in range(20):
+        est.observe(100)
+    new_b = est.should_reconfigure(now=20.0)
+    assert new_b == 64
+    est.commit(new_b)
+    assert est.should_reconfigure(now=30.0) is None
+
+
+def test_transient_spike_is_smoothed_away():
+    """Two-level smoothing avoids flip-flop on short bursts (§3.8)."""
+    est = BatchSizeEstimator(EstimatorConfig(alpha=0.25, window=8),
+                             initial_batch=8)
+    for _ in range(50):
+        est.observe(8)
+    # a 2-sample burst must not move the mode over an 8-deep window
+    est.observe(512)
+    est.observe(512)
+    assert est.smoothed_batch() == 8
+
+
+def test_reconfigure_rate_limited():
+    est = BatchSizeEstimator(EstimatorConfig(reconfigure_timeout=5.0),
+                             initial_batch=1)
+    for _ in range(10):
+        est.observe(32)
+    assert est.should_reconfigure(now=0.0) is not None or True
+    # first call consumed the timeout window; an immediate second check is
+    # rate-limited even though B̃ != B still holds
+    est2 = BatchSizeEstimator(EstimatorConfig(reconfigure_timeout=5.0),
+                              initial_batch=1)
+    for _ in range(10):
+        est2.observe(32)
+    first = est2.should_reconfigure(now=6.0)
+    assert first == 32
+    assert est2.should_reconfigure(now=6.5) is None   # < timeout later
+    assert est2.should_reconfigure(now=12.0) == 32    # still uncommitted
+
+
+def test_scale_down_also_works():
+    """§3.8: estimator scales B down when arrival rates drop."""
+    est = BatchSizeEstimator(EstimatorConfig(alpha=0.5, window=4,
+                                             reconfigure_timeout=0.0),
+                             initial_batch=64)
+    for _ in range(30):
+        est.observe(4)
+    assert est.should_reconfigure(now=1.0) == 4
+
+
+def test_ewma_tracks_mean():
+    est = BatchSizeEstimator(EstimatorConfig(alpha=0.2))
+    for _ in range(200):
+        est.observe(100.0)
+    assert abs(est.ewma - 100.0) < 1e-6
+
+
+def test_bounds_respected():
+    est = BatchSizeEstimator(EstimatorConfig(min_batch=2, max_batch=16))
+    assert est.observe(0) >= 2
+    for _ in range(50):
+        b = est.observe(10**6)
+    assert b <= 16
+
+
+def test_invalid_config():
+    with pytest.raises(ValueError):
+        BatchSizeEstimator(EstimatorConfig(alpha=0.0))
+    with pytest.raises(ValueError):
+        BatchSizeEstimator(EstimatorConfig(window=0))
+    est = BatchSizeEstimator()
+    with pytest.raises(ValueError):
+        est.observe(-1)

@@ -1,0 +1,204 @@
+"""Tests for Packrat's 2-D knapsack optimizer (paper §3.3, §5.2.2, §5.2.3)."""
+
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InstanceGroup, PackratOptimizer, apply_constant_penalty,
+                        brute_force_solve, fat_config,
+                        one_thread_per_core_config, powers_of_two)
+from repro.core.paper_profiles import (PAPER_BATCH_SIZES, PAPER_MODELS,
+                                       RESNET50)
+
+
+# --------------------------------------------------------------------- #
+# strategies
+# --------------------------------------------------------------------- #
+def profile_strategy(max_t=4, bs=(1, 2, 4)):
+    keys = [(t, b) for t in range(1, max_t + 1) for b in bs]
+    return st.lists(
+        st.floats(min_value=1e-3, max_value=10.0, allow_nan=False,
+                  allow_infinity=False),
+        min_size=len(keys), max_size=len(keys),
+    ).map(lambda vals: dict(zip(keys, vals)))
+
+
+# --------------------------------------------------------------------- #
+# exactness vs brute force
+# --------------------------------------------------------------------- #
+@settings(max_examples=60, deadline=None)
+@given(profile=profile_strategy(), T=st.integers(1, 6), B=st.integers(1, 10))
+def test_dp_matches_brute_force(profile, T, B):
+    opt = PackratOptimizer(profile)
+    try:
+        got = opt.solve(T, B)
+    except ValueError:
+        got = None
+    want = brute_force_solve(profile, T, B)
+    assert (got is None) == (want is None)
+    if got is not None:
+        assert math.isclose(got.latency, want.latency, rel_tol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(profile=profile_strategy(), T=st.integers(1, 6), B=st.integers(1, 10))
+def test_dp_matches_brute_force_with_slack(profile, T, B):
+    opt = PackratOptimizer(profile, allow_unused_threads=True)
+    try:
+        got = opt.solve(T, B)
+    except ValueError:
+        got = None
+    want = brute_force_solve(profile, T, B, allow_unused_threads=True)
+    assert (got is None) == (want is None)
+    if got is not None:
+        assert math.isclose(got.latency, want.latency, rel_tol=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# constraints (paper Eq. 2)
+# --------------------------------------------------------------------- #
+@settings(max_examples=60, deadline=None)
+@given(profile=profile_strategy(), T=st.integers(1, 8), B=st.integers(1, 16))
+def test_constraints_hold(profile, T, B):
+    try:
+        cfg = PackratOptimizer(profile).solve(T, B)
+    except ValueError:
+        return
+    assert cfg.total_threads == T      # Σ i_j · t_j = T
+    assert cfg.total_batch == B        # Σ i_j · b_j = B
+    # makespan is the max over used items (Eq. 1)
+    assert math.isclose(
+        cfg.latency, max(profile[(g.t, g.b)] for g in cfg.groups), rel_tol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(profile=profile_strategy(), T=st.integers(1, 8), B=st.integers(1, 16))
+def test_slack_constraints_hold(profile, T, B):
+    try:
+        cfg = PackratOptimizer(profile, allow_unused_threads=True).solve(T, B)
+    except ValueError:
+        return
+    assert cfg.total_threads <= T
+    assert cfg.total_batch == B
+
+
+# --------------------------------------------------------------------- #
+# §5.2.2: constant multiplicative interference penalty never changes argmin
+# --------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(profile=profile_strategy(), T=st.integers(1, 6), B=st.integers(1, 10),
+       c=st.floats(min_value=0.05, max_value=20.0))
+def test_scale_invariance(profile, T, B, c):
+    try:
+        base = PackratOptimizer(profile).solve(T, B)
+    except ValueError:
+        return
+    scaled = PackratOptimizer(apply_constant_penalty(profile, c)).solve(T, B)
+    assert scaled.groups == base.groups
+    assert math.isclose(scaled.latency, base.latency * c, rel_tol=1e-9)
+
+
+# --------------------------------------------------------------------- #
+# behaviour on the paper-calibrated profiles
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(PAPER_MODELS))
+def test_packrat_never_loses_to_fat(name):
+    """Fig. 6/10: Packrat >= fat baseline for every batch size."""
+    model = PAPER_MODELS[name]
+    profile = model.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    for B in PAPER_BATCH_SIZES:
+        cfg = opt.solve(16, B)
+        fat = fat_config(profile, 16, B)
+        assert cfg.latency <= fat.latency + 1e-12
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_MODELS))
+def test_packrat_never_loses_to_single_threaded(name):
+    """Fig. 7: Packrat always exceeds or matches T single-threaded instances."""
+    model = PAPER_MODELS[name]
+    profile = model.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    for B in PAPER_BATCH_SIZES:
+        st_cfg = one_thread_per_core_config(profile, 16, B)
+        if st_cfg is None:
+            continue
+        assert opt.solve(16, B).latency <= st_cfg.latency + 1e-12
+
+
+def test_table3_speedup_bands():
+    """Mean/max speedups match Table 3 (PyTorch graph mode) within 10%."""
+    import statistics
+    targets = {"resnet50": (1.53, 1.83), "inception_v3": (1.52, 1.88),
+               "gpt2": (1.18, 1.75), "bert": (1.13, 1.57)}
+    for name, (mean_t, max_t) in targets.items():
+        profile = PAPER_MODELS[name].profile(16, 1024)
+        opt = PackratOptimizer(profile)
+        sps = [opt.predicted_speedup(16, B) for B in PAPER_BATCH_SIZES]
+        assert abs(statistics.mean(sps) - mean_t) / mean_t < 0.10, name
+        assert abs(max(sps) - max_t) / max_t < 0.15, name
+
+
+def test_resnet_anchor_points():
+    """Absolute anchors from the paper: fat L(16,32)≈273ms, L(1,16)≈1224ms."""
+    assert abs(RESNET50.latency_ms(16, 32) - 273) / 273 < 0.05
+    assert abs(RESNET50.latency_ms(1, 16) - 1224) / 1224 < 0.10
+
+
+def test_nonuniform_configs_for_t14():
+    """§5.2.3 / Table 2: non-power-of-two T yields thin splits like <2,7,b>."""
+    profile = PAPER_MODELS["bert"].profile(14, 1024)
+    opt = PackratOptimizer(profile)
+    for B in [64, 128, 256]:
+        cfg = opt.solve(14, B)
+        assert cfg.total_threads == 14
+        assert cfg.n_instances > 1          # not the fat instance
+        assert cfg.latency <= fat_config(profile, 14, B).latency
+
+
+def test_nonuniform_mixture_recovered():
+    """The DP can return configurations mixing instance types (§5.2.3)."""
+    # Craft a profile where the optimum for (T=5, B=3) must mix <1,3,2>+<1,2,1>.
+    profile = {(3, 2): 1.0, (2, 1): 1.0,
+               (5, 3): 5.0, (1, 1): 4.0, (4, 2): 4.0, (2, 2): 4.0, (3, 1): 4.0,
+               (1, 2): 4.0, (1, 3): 4.0, (2, 3): 4.0, (4, 1): 4.0, (5, 1): 4.0,
+               (4, 3): 4.0, (5, 2): 4.0, (3, 3): 4.0}
+    cfg = PackratOptimizer(profile).solve(5, 3)
+    assert set(cfg.groups) == {InstanceGroup(1, 3, 2), InstanceGroup(1, 2, 1)}
+    assert cfg.latency == 1.0
+
+
+def test_optimizer_cache():
+    profile = RESNET50.profile(16, 64)
+    opt = PackratOptimizer(profile)
+    a = opt.solve(16, 32)
+    assert opt.solve(16, 32) is a  # memoised (§3.3: "cached to avoid repeated work")
+
+
+def test_dispatch_overhead_penalizes_many_instances():
+    profile = {(1, 1): 1.0, (2, 2): 1.0, (4, 4): 1.0}
+    no_oh = PackratOptimizer(profile).solve(4, 4)
+    with_oh = PackratOptimizer(profile, dispatch_overhead=0.5).solve(4, 4)
+    assert with_oh.latency >= no_oh.latency
+
+
+def test_powers_of_two():
+    assert powers_of_two(1) == [1]
+    assert powers_of_two(9) == [1, 2, 4, 8]
+    assert powers_of_two(0) == []
+
+
+def test_invalid_inputs():
+    with pytest.raises(ValueError):
+        PackratOptimizer({})
+    with pytest.raises(ValueError):
+        PackratOptimizer({(0, 1): 1.0})
+    with pytest.raises(ValueError):
+        PackratOptimizer({(1, 1): float("nan")})
+    opt = PackratOptimizer({(2, 2): 1.0})
+    with pytest.raises(ValueError):
+        opt.solve(1, 1)   # nothing fits
+    with pytest.raises(ValueError):
+        opt.solve(3, 2)   # T=3 not reachable with t'=2 items

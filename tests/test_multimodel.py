@@ -1,0 +1,71 @@
+"""Beyond-paper extensions: SLO-constrained + multi-model allocation."""
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.multimodel import (ModelWorkload, MultiModelAllocator,
+                                   solve_with_slo)
+from repro.core.paper_profiles import BERT, INCEPTION_V3, RESNET50
+
+
+def test_slo_picks_largest_feasible_batch():
+    profile = RESNET50.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    got = solve_with_slo(opt, 16, latency_slo=0.300, max_batch=1024)
+    assert got is not None
+    B, cfg = got
+    assert cfg.latency <= 0.300
+    # the next larger batch must violate the SLO
+    nxt = opt.solve(16, B * 2)
+    assert nxt.latency > 0.300
+    # throughput at the chosen point dominates all smaller batches
+    for b in (1, 2, 4):
+        if b < B:
+            assert cfg.throughput >= opt.solve(16, b).throughput
+
+
+def test_slo_infeasible_returns_none():
+    profile = RESNET50.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    assert solve_with_slo(opt, 16, latency_slo=1e-6) is None
+
+
+def test_multimodel_allocation_covers_all_models():
+    workloads = [
+        ModelWorkload("resnet", RESNET50.profile(16, 256), batch=32),
+        ModelWorkload("bert", BERT.profile(16, 256), batch=64),
+        ModelWorkload("inception", INCEPTION_V3.profile(16, 256), batch=16),
+    ]
+    alloc = MultiModelAllocator(workloads)
+    placements = alloc.allocate(16)
+    assert {p.name for p in placements} == {"resnet", "bert", "inception"}
+    assert sum(p.units for p in placements) <= 16
+    assert all(p.units >= 1 for p in placements)
+    for p in placements:
+        assert p.config.total_batch == {
+            "resnet": 32, "bert": 64, "inception": 16}[p.name]
+
+
+def test_multimodel_beats_even_split_makespan():
+    """The λ-search allocation should not lose to a naive even split."""
+    workloads = [
+        ModelWorkload("heavy", INCEPTION_V3.profile(16, 1024), batch=256),
+        ModelWorkload("light", BERT.profile(16, 1024), batch=8),
+    ]
+    alloc = MultiModelAllocator(workloads)
+    placements = alloc.allocate(16)
+    makespan = max(p.config.latency for p in placements)
+    even = []
+    for w in workloads:
+        opt = PackratOptimizer(w.profile, allow_unused_threads=True)
+        even.append(opt.solve(8, w.batch).latency)
+    assert makespan <= max(even) + 1e-9
+    # the heavy model should get the larger share
+    by_name = {p.name: p.units for p in placements}
+    assert by_name["heavy"] > by_name["light"]
+
+
+def test_multimodel_single_workload_uses_pod():
+    w = ModelWorkload("solo", RESNET50.profile(16, 256), batch=64)
+    placements = MultiModelAllocator([w]).allocate(16)
+    assert placements[0].units == 16   # leftover units folded back in

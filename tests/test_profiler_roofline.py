@@ -1,0 +1,126 @@
+"""Profiler, roofline-model and interference tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CPUInterferenceModel, MeasuredProfiler,
+                        PackratOptimizer, ProfileSpec, RooflineTerms,
+                        TPU_V5E, TPUInterferenceModel, apply_constant_penalty,
+                        profiling_cost_summary)
+from repro.core.knapsack import InstanceGroup, PackratConfig
+
+
+# --------------------------------------------------------------------- #
+# profiler grid (§3.2)
+# --------------------------------------------------------------------- #
+def test_profile_spec_grid_size():
+    spec = ProfileSpec(total_threads=16, max_batch=1024)
+    assert spec.n_configs == 16 * 11          # (n+1)·T with n=10
+    assert spec.n_exhaustive == 16 * 1024     # 2^n·T
+    s = profiling_cost_summary(spec)
+    assert s["reduction"] == pytest.approx(1024 / 11, rel=1e-6)
+
+
+def test_measured_profiler_counts_calls():
+    calls = []
+    clock = iter(float(i) for i in range(10_000))
+
+    def runner(t, b):
+        calls.append((t, b))
+
+    prof = MeasuredProfiler(runner, warmup=2, iters=3,
+                            clock=lambda: next(clock))
+    spec = ProfileSpec(total_threads=2, max_batch=4)
+    table = prof.profile(spec)
+    assert set(table) == {(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (2, 4)}
+    assert len(calls) == 6 * 5                 # warmup+iters per config
+    assert all(v > 0 for v in table.values())
+
+
+# --------------------------------------------------------------------- #
+# roofline terms
+# --------------------------------------------------------------------- #
+def test_roofline_terms_math():
+    terms = RooflineTerms(flops=197e12 * 4, hbm_bytes=819e9 * 2,
+                          collective_bytes=50e9 * 4, chips=4, hw=TPU_V5E)
+    assert terms.compute_s == pytest.approx(1.0)
+    assert terms.memory_s == pytest.approx(0.5)
+    assert terms.collective_s == pytest.approx(1.0)   # 4 links × 50 GB/s
+    assert terms.dominant in ("compute", "collective")
+    assert terms.latency == pytest.approx(1.0 + TPU_V5E.dispatch_overhead)
+    assert terms.latency_serial > terms.latency
+
+
+def test_roofline_fraction_counts_useful_flops():
+    terms = RooflineTerms(flops=2e12, hbm_bytes=1, collective_bytes=0,
+                          chips=1, hw=TPU_V5E)
+    full = terms.roofline_fraction()
+    useful = terms.roofline_fraction(model_flops=1e12)
+    assert useful == pytest.approx(full / 2, rel=1e-6)
+    assert 0 < useful <= 1.0
+
+
+@given(flops=st.floats(1e9, 1e18), hbm=st.floats(1e6, 1e15),
+       coll=st.floats(0, 1e13), chips=st.sampled_from([1, 8, 256]))
+@settings(max_examples=30, deadline=None)
+def test_roofline_latency_is_max_term(flops, hbm, coll, chips):
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+                          chips=chips)
+    assert terms.latency == pytest.approx(
+        max(terms.compute_s, terms.memory_s, terms.collective_s)
+        + TPU_V5E.dispatch_overhead)
+
+
+# --------------------------------------------------------------------- #
+# interference models (§5.2.2)
+# --------------------------------------------------------------------- #
+def test_cpu_interference_monotone():
+    m = CPUInterferenceModel()
+    assert m.downclock_factor(0, 16) == pytest.approx(1.0)
+    assert m.downclock_factor(16, 16) == pytest.approx(2.6 / 2.2)
+    assert m.memory_factor(1) == pytest.approx(1.0)
+    assert m.memory_factor(16) > m.memory_factor(4) >= 1.0
+
+
+def test_cpu_interference_fig9_magnitudes():
+    """Fig. 9: full downclock ≈ +15%/core clock; combined gap ~30-40%."""
+    m = CPUInterferenceModel()
+    cfg = PackratConfig(groups=(InstanceGroup(16, 1, 16),), latency=1.224)
+    slow = m.slowdown(cfg, 16)
+    assert 1.25 < slow < 1.5
+
+
+def test_tpu_interference_negligible():
+    m = TPUInterferenceModel()
+    cfg = PackratConfig(groups=(InstanceGroup(16, 16, 8),), latency=1.0)
+    assert m.slowdown(cfg, 256) < 1.06
+
+
+def test_constant_penalty_validation():
+    with pytest.raises(ValueError):
+        apply_constant_penalty({(1, 1): 1.0}, 0.0)
+    scaled = apply_constant_penalty({(1, 1): 2.0}, 0.5)
+    assert scaled == {(1, 1): 1.0}
+
+
+# --------------------------------------------------------------------- #
+# the TPU L(t,b) profile drives the DP sensibly
+# --------------------------------------------------------------------- #
+def test_tpu_profile_feeds_knapsack():
+    """Synthetic decode-like profile: collective floor ⇒ thin instances win."""
+    def L(t, b):
+        compute = 1e-3 * b / t
+        collective = 5e-3 * math.log2(max(2, t))   # grows with group size
+        overhead = 5e-5
+        return max(compute, collective) + overhead
+
+    table = {(t, b): L(t, b)
+             for t in (8, 16, 32, 64, 128, 256)
+             for b in (1, 4, 16, 64)}
+    opt = PackratOptimizer(table)
+    cfg = opt.solve(256, 64)
+    fat = table[(256, 64)]
+    assert cfg.latency < fat                 # partitioning beats fat pod
+    assert all(g.t < 256 for g in cfg.groups)

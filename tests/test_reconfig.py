@@ -1,0 +1,90 @@
+"""Tests for active-passive scaling (paper §3.7, Fig. 5)."""
+
+import pytest
+
+from repro.core import (ActivePassiveController, InstanceGroup, PackratConfig,
+                        Phase, needs_active_passive)
+
+
+def cfg(i, t, b, lat=1.0):
+    return PackratConfig(groups=(InstanceGroup(i, t, b),), latency=lat)
+
+
+def make_controller(spawn=5.0, drain=1.0, swaps=None):
+    return ActivePassiveController(
+        spawn_cost=lambda c: spawn,
+        drain_cost=lambda c: drain,
+        on_swap=(swaps.append if swaps is not None else None),
+    )
+
+
+def test_needs_active_passive():
+    # instance-count-only change -> plain worker scaling (paper case 1)
+    assert not needs_active_passive(cfg(2, 4, 8), cfg(4, 4, 4))
+    # per-worker thread change -> active-passive required (paper case 2)
+    assert needs_active_passive(cfg(2, 4, 8), cfg(4, 2, 4))
+    assert not needs_active_passive(None, cfg(1, 16, 32))
+
+
+def test_three_step_transition():
+    swaps = []
+    ctl = make_controller(spawn=5.0, drain=2.0, swaps=swaps)
+    old, new = cfg(1, 16, 32), cfg(8, 2, 4)
+    ctl.start(old, now=0.0)
+    done = ctl.request_reconfig(new, now=10.0)
+    assert done == pytest.approx(17.0)  # 10 + 5 spawn + 2 drain
+    # during scale-up the OLD config still serves: zero downtime
+    assert ctl.tick(12.0) is Phase.SCALE_UP_PASSIVE
+    assert ctl.serving_config == old
+    assert ctl.oversubscribed            # both sets hold resources (Fig. 11 bump)
+    # after spawn completes, dispatch swaps atomically
+    assert ctl.tick(15.5) is Phase.DRAIN_OLD
+    assert ctl.serving_config == new
+    assert swaps == [new]
+    # drain finishes -> stable, passive set released
+    assert ctl.tick(17.5) is Phase.STABLE
+    assert ctl.passive is None
+    assert ctl.serving_config == new
+
+
+def test_zero_downtime_invariant():
+    """serving_config is never None at any instant of a reconfiguration."""
+    ctl = make_controller(spawn=3.0, drain=1.0)
+    ctl.start(cfg(1, 16, 64), now=0.0)
+    ctl.request_reconfig(cfg(4, 4, 16), now=1.0)
+    t = 0.0
+    while t < 10.0:
+        ctl.tick(t)
+        assert ctl.serving_config is not None
+        t += 0.1
+    assert ctl.phase is Phase.STABLE
+
+
+def test_reconfig_while_busy_rejected():
+    ctl = make_controller()
+    ctl.start(cfg(1, 16, 64), now=0.0)
+    ctl.request_reconfig(cfg(4, 4, 16), now=1.0)
+    with pytest.raises(RuntimeError):
+        ctl.request_reconfig(cfg(2, 8, 32), now=2.0)
+    # once stable again, new reconfigs are accepted
+    ctl.tick(100.0)
+    assert ctl.phase is Phase.STABLE
+    ctl.request_reconfig(cfg(2, 8, 32), now=101.0)
+
+
+def test_event_log_records_fig5_sequence():
+    ctl = make_controller(spawn=5.0, drain=2.0)
+    ctl.start(cfg(1, 16, 32), now=0.0)
+    ctl.request_reconfig(cfg(8, 2, 4), now=10.0)
+    ctl.tick(100.0)
+    phases = [e.phase for e in ctl.events]
+    assert phases == [Phase.STABLE, Phase.SCALE_UP_PASSIVE, Phase.SWAP,
+                      Phase.DRAIN_OLD]
+
+
+def test_start_via_request_reconfig():
+    ctl = make_controller()
+    done = ctl.request_reconfig(cfg(1, 4, 4), now=3.0)
+    assert done == 3.0
+    assert ctl.phase is Phase.STABLE
+    assert ctl.serving_config == cfg(1, 4, 4)

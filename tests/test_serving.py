@@ -1,0 +1,242 @@
+"""End-to-end serving tests: dispatcher, allocator, controller, faults."""
+
+import collections
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.knapsack import InstanceGroup, PackratConfig
+from repro.core.paper_profiles import INCEPTION_V3, RESNET50
+from repro.serving import (AllocationError, ArrivalProcess, ControllerConfig,
+                           EventLoop, PackratServer, Request,
+                           ResourceAllocator, TabulatedBackend, step_rate)
+from repro.serving.dispatcher import Dispatcher, DispatcherConfig
+from repro.serving.instance import WorkerInstance
+
+
+def cfg_of(*groups):
+    return PackratConfig(groups=tuple(InstanceGroup(*g) for g in groups),
+                         latency=1.0)
+
+
+# --------------------------------------------------------------------- #
+# allocator (§3.4)
+# --------------------------------------------------------------------- #
+def test_allocator_round_robin_and_release():
+    alloc = ResourceAllocator(16, domain_size=8)
+    placements = alloc.allocate(cfg_of((4, 4, 8)))
+    assert len(placements) == 4
+    assert alloc.busy_units == 16
+    # each instance within one domain (paper §7: NUMA locality)
+    for p in placements:
+        assert not alloc.spans_domains(p)
+    alloc.release(placements)
+    assert alloc.busy_units == 0
+
+
+def test_allocator_oversubscription_for_active_passive():
+    alloc = ResourceAllocator(8)
+    a = alloc.allocate(cfg_of((1, 8, 16)))
+    b = alloc.allocate(cfg_of((4, 2, 4)))       # passive set, occ 2
+    assert alloc.oversubscribed_units == 8
+    alloc.release(a)
+    assert alloc.oversubscribed_units == 0
+    alloc.release(b)
+
+
+def test_allocator_at_most_one_spanning_instance():
+    alloc = ResourceAllocator(8, domain_size=4, oversubscribe_factor=1)
+    # a 5-thread instance cannot fit in a 4-unit domain: spans (allowed once)
+    ps = alloc.allocate(cfg_of((1, 5, 8)))
+    assert alloc.spans_domains(ps[0])
+    # remaining units stay usable for domain-local instances
+    ps2 = alloc.allocate(cfg_of((1, 3, 4)))
+    assert not alloc.spans_domains(ps2[0])
+    # two spanning instances are refused (paper §7: at most one)
+    alloc2 = ResourceAllocator(8, domain_size=4, oversubscribe_factor=1)
+    with pytest.raises(AllocationError):
+        alloc2.allocate(cfg_of((2, 5, 8)))
+
+
+def test_allocator_rejects_infeasible():
+    alloc = ResourceAllocator(4, oversubscribe_factor=1)
+    alloc.allocate(cfg_of((1, 4, 8)))
+    with pytest.raises(AllocationError):
+        alloc.allocate(cfg_of((1, 4, 8)))
+
+
+# --------------------------------------------------------------------- #
+# dispatcher (§3.5)
+# --------------------------------------------------------------------- #
+def _mk_dispatcher(loop, config, backend, responses):
+    workers = [WorkerInstance(j, g.t, g.b, backend)
+               for j, g in enumerate(
+                   g for g in config.groups for _ in range(g.i))]
+    return Dispatcher(loop, config, workers, responses.append,
+                      DispatcherConfig(batch_timeout=0.05))
+
+
+def test_batch_aggregation_and_partitioning():
+    profile = RESNET50.profile(16, 64)
+    backend = TabulatedBackend(profile)
+    loop = EventLoop()
+    responses = []
+    config = PackratConfig(groups=(InstanceGroup(4, 4, 8),),
+                           latency=profile[(4, 8)])
+    disp = _mk_dispatcher(loop, config, backend, responses)
+    for i in range(32):
+        loop.at(0.001 * i, lambda i=i: disp.on_request(Request(i, 0.001 * i)))
+    loop.run_until(10.0)
+    assert len(responses) == 32
+    # batch of 32 partitioned into 4 sub-batches of 8
+    sizes = collections.Counter(r.batch_size for r in responses)
+    assert sizes == {8: 32}
+    assert len({r.instance_id for r in responses}) == 4
+
+
+def test_partial_batch_timeout():
+    profile = RESNET50.profile(16, 64)
+    loop = EventLoop()
+    responses = []
+    config = PackratConfig(groups=(InstanceGroup(2, 8, 16),),
+                           latency=profile[(8, 16)])
+    disp = _mk_dispatcher(loop, config, TabulatedBackend(profile), responses)
+    for i in range(5):   # much less than B=32
+        loop.at(0.0, lambda i=i: disp.on_request(Request(i, 0.0)))
+    loop.run_until(5.0)
+    assert len(responses) == 5
+    assert disp.timeouts_fired >= 1
+
+
+def test_straggler_redispatch_on_failure():
+    profile = RESNET50.profile(16, 64)
+    loop = EventLoop()
+    responses = []
+    config = PackratConfig(groups=(InstanceGroup(2, 8, 8),),
+                           latency=profile[(8, 8)])
+    disp = _mk_dispatcher(loop, config, TabulatedBackend(profile), responses)
+    for i in range(16):
+        loop.at(0.0, lambda i=i: disp.on_request(Request(i, 0.0)))
+    # fail worker 0 right after dispatch: its sub-batch must be re-issued
+    loop.at(0.001, lambda: disp.instances[0].fail())
+    loop.run_until(30.0)
+    assert len(responses) == 16           # nothing lost
+    assert disp.redispatches >= 1
+    assert any(r.redispatched for r in responses)
+
+
+# --------------------------------------------------------------------- #
+# controller end-to-end (Fig. 3 / Fig. 11)
+# --------------------------------------------------------------------- #
+def _run_server(rate_fn, duration, initial_batch=8, units=16, profile=None,
+                drain=30.0, ccfg=None):
+    profile = profile or INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=units, optimizer=opt,
+                           backend=TabulatedBackend(profile),
+                           initial_batch=initial_batch, config=ccfg)
+    arrivals = ArrivalProcess.uniform(rate_fn, duration)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.run_until(duration + drain)
+    return server, arrivals
+
+
+def test_steady_state_serves_everything():
+    """Load matched to B=8 (the paper's Fig.-11 setup: 'the multi-instance
+    configuration for B=8 ... correctly corresponds to the load generated
+    by the client'): queue depth at dispatch ≈ 8 → no reconfiguration."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8 = opt.solve(16, 8)
+    server, arrivals = _run_server(lambda t: 8 / cfg8.latency, 10.0)
+    assert len(server.responses) == len(arrivals)
+    # no spurious reconfig while traffic flows (post-drain scale-down ok)
+    assert not [t for t, b, c in server.reconfig_log if 0 < t < 10.0]
+
+
+def test_underload_scales_batch_down():
+    """At fractional load, Packrat converges to a smaller B — smaller
+    batches at low arrival rates minimize per-request latency (§3.8
+    'scale up and scale down ... as request arrival rates change')."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8 = opt.solve(16, 8)
+    server, arrivals = _run_server(lambda t: 0.5 * 8 / cfg8.latency, 20.0,
+                                   drain=40.0)
+    assert len(server.responses) == len(arrivals)
+    assert server.estimator.current_batch < 8
+
+
+def test_rate_step_triggers_reconfig_and_recovers():
+    """Fig. 11: step in request rate → reconfiguration → latency recovers."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8, cfg64 = opt.solve(16, 8), opt.solve(16, 64)
+    # high phase at 0.9× capacity so the overload backlog can drain
+    rate = step_rate(8 / cfg8.latency, 0.9 * 64 / cfg64.latency, 8.0)
+    # hold the stale config ~10 s like the paper ("we force the server to
+    # not activate a change in batch size immediately") so the degraded
+    # window is observable before the reconfiguration lands
+    from repro.core import EstimatorConfig
+    ccfg = ControllerConfig(estimator=EstimatorConfig(
+        reconfigure_timeout=10.0))
+    server, arrivals = _run_server(rate, 40.0, drain=60.0, ccfg=ccfg)
+    assert len(server.responses) == len(arrivals)
+    during = [(t, b) for t, b, c in server.reconfig_log if 0 < t <= 40.0]
+    assert during, "no reconfiguration after the rate step"
+    assert during[0][1] > 8                    # scaled the batch size up
+    # latency in the final stable window beats the un-reconfigured window
+    # right before the reconfiguration (paper Fig. 11: 1.54× at B=64)
+    t_reconf = during[0][0]
+    mid = [r.latency for r in server.responses
+           if t_reconf - 2.0 < r.request.arrival < t_reconf]
+    late = [r.latency for r in server.responses
+            if 30.0 < r.request.arrival < 40.0]
+    assert mid and late
+    assert sorted(late)[len(late) // 2] < sorted(mid)[len(mid) // 2]
+
+
+def test_no_downtime_during_reconfig():
+    """Responses keep flowing in every 1 s window around a reconfig."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8, cfg64 = opt.solve(16, 8), opt.solve(16, 64)
+    rate = step_rate(8 / cfg8.latency, 0.95 * 64 / cfg64.latency, 8.0)
+    server, _ = _run_server(rate, 30.0, drain=60.0)
+    done_by_s = collections.Counter(int(r.completion) for r in server.responses)
+    for s in range(1, 28):
+        assert done_by_s.get(s, 0) > 0, f"stall at t={s}s"
+
+
+def test_worker_failure_respawn():
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8 = opt.solve(16, 8)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile), initial_batch=8)
+    arrivals = ArrivalProcess.uniform(lambda t: 0.8 * 8 / cfg8.latency, 15.0)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.at(5.0, lambda: server.inject_failure(0))
+    loop.run_until(45.0)
+    assert len(server.responses) == len(arrivals)     # nothing lost
+    assert all(not w.failed for w in server.dispatcher.instances)  # respawned
+
+
+def test_elastic_scale_down_reoptimizes():
+    """Losing units re-runs the optimizer with T' (beyond-paper elastic)."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile), initial_batch=32)
+    before = server.apc.active
+    loop.run_until(1.0)
+    server.scale_units(8)
+    loop.run_until(30.0)
+    after = server.apc.active
+    assert after.total_threads == 8
+    assert after.groups != before.groups

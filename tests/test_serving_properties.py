@@ -1,0 +1,68 @@
+"""Hypothesis property tests for the serving runtime's core invariants."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PackratOptimizer
+from repro.core.paper_profiles import RESNET50
+from repro.serving import (ArrivalProcess, EventLoop, PackratServer, Request,
+                           TabulatedBackend)
+
+PROFILE = RESNET50.profile(16, 1024)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rate_frac=st.floats(min_value=0.2, max_value=1.2),
+    initial_batch=st.sampled_from([4, 8, 16, 32]),
+    failures=st.lists(st.tuples(st.floats(1.0, 8.0), st.integers(0, 3)),
+                      max_size=3),
+)
+def test_no_request_lost_under_failures(rate_frac, initial_batch, failures):
+    """Every submitted request completes exactly once, for arbitrary loads
+    (including overload) and arbitrary mid-run worker failures."""
+    opt = PackratOptimizer(PROFILE)
+    cfg = opt.solve(16, initial_batch)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(PROFILE),
+                           initial_batch=initial_batch)
+    rate = rate_frac * initial_batch / cfg.latency
+    arrivals = ArrivalProcess.uniform(lambda t: rate, 10.0)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    for t, idx in failures:
+        loop.at(t, (lambda idx=idx: server.inject_failure(idx)))
+    loop.run_until(10.0 + 120.0)
+    ids = [r.request.id for r in server.responses]
+    assert len(ids) == len(arrivals), "requests lost"
+    assert len(set(ids)) == len(ids), "duplicate completions"
+    # latencies are physical: completion after arrival
+    assert all(r.latency >= 0 for r in server.responses)
+
+
+@settings(max_examples=10, deadline=None)
+@given(units=st.sampled_from([4, 8, 14, 16]),
+       batch=st.sampled_from([8, 32, 128]))
+def test_dispatcher_config_constraints_always_hold(units, batch):
+    """Whatever the estimator does, the live config satisfies Eq. 2."""
+    opt = PackratOptimizer(RESNET50.profile(units, 1024))
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=units, optimizer=opt,
+                           backend=TabulatedBackend(
+                               RESNET50.profile(units, 1024)),
+                           initial_batch=batch)
+    cfg = opt.solve(units, batch)
+    rate = batch / cfg.latency
+    for i, t in enumerate(ArrivalProcess.uniform(lambda t: rate, 5.0)):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    checks = []
+
+    def check():
+        c = server.apc.serving_config
+        checks.append((c.total_threads, c.total_batch))
+        assert c.total_threads <= units
+        loop.schedule(0.5, check)
+
+    loop.schedule(0.25, check)
+    loop.run_until(20.0)
+    assert checks
