@@ -15,7 +15,8 @@ import sys
 
 
 def main() -> None:
-    from . import fig11_reconfig, paper_figures, roofline_table, tpu_packrat
+    from . import (fig11_reconfig, paper_figures, roofline_table, scenarios,
+                   tpu_packrat)
 
     benches = [
         paper_figures.fig1_intra_op,
@@ -27,6 +28,7 @@ def main() -> None:
         paper_figures.profiling_cost,
         paper_figures.dp_runtime,
         fig11_reconfig.fig11_reconfig,
+        scenarios.bench_scenarios,
         tpu_packrat.tpu_packrat,
         roofline_table.roofline_table,
     ]

@@ -1,0 +1,58 @@
+"""Scenario benchmark: adaptive Packrat vs static baseline under
+time-varying load (beyond-paper; InferLine/Harpagon-style evaluation).
+
+Runs a subset of the registered workload scenarios (short durations so
+the harness stays fast) through the full controller and emits one CSV
+row per scenario × policy with p99 latency, goodput and reconfiguration
+count.  Sanity assertions: the adaptive policy must actually
+reconfigure on shifting load, the static baseline must never
+reconfigure, and on the Fig.-11-style step the adaptive policy's p99
+must beat the stale static configuration.
+
+Full sweep: ``PYTHONPATH=src python -m repro.launch.bench_serving
+--scenario all --duration 60``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.paper_profiles import INCEPTION_V3
+from repro.launch.bench_serving import run_scenario
+from repro.serving.scenarios import get_scenario
+
+from .common import Row, emit
+
+SCENARIOS = ("step-up", "bursty", "diurnal")
+DURATION = 24.0
+
+
+def bench_scenarios() -> List[Row]:
+    rows: List[Row] = []
+    results = {}
+    for name in SCENARIOS:
+        t0 = time.perf_counter()
+        result = run_scenario(
+            get_scenario(name), model=INCEPTION_V3, units=16,
+            duration=DURATION, seed=0, initial_batch=8, max_batch=256,
+            slo_factor=4.0, reconfigure_timeout=4.0)
+        us = (time.perf_counter() - t0) * 1e6  # both policies, one trace
+        results[name] = result
+        for policy in ("static", "packrat"):
+            rep = result[policy]
+            rows.append((
+                f"scenario/{name}/{policy}", us / 2,
+                f"p99={rep['latency_ms']['p99']:.0f}ms "
+                f"goodput={rep['goodput_rps']:.1f}/s "
+                f"reconfigs={rep['reconfigurations']}"))
+            if policy == "static":
+                assert rep["reconfigurations"] == 0, \
+                    f"static baseline reconfigured on {name}"
+        assert result["packrat"]["reconfigurations"] >= 1, \
+            f"adaptive policy never reconfigured on {name}"
+    step = results["step-up"]
+    assert (step["packrat"]["latency_ms"]["p99"]
+            < step["static"]["latency_ms"]["p99"]), \
+        "adaptive policy lost to the stale static config on a load step"
+    return emit(rows)

@@ -1,0 +1,18 @@
+"""Scenario benchmark in 30 seconds: adaptive Packrat vs a static fat
+instance under a diurnal load curve.
+
+Drives the full controller (estimator → knapsack → allocator →
+active-passive reconfig → dispatcher) on the deterministic event loop
+and prints the JSON report.  Swap ``diurnal`` for any name printed by
+``--list`` (bursty MMPP, Fig.-11 steps, ramps, flash-crowd trace
+replay), or replay your own trace with ``--trace my_trace.json``.
+
+Run:  PYTHONPATH=src python examples/bench_scenarios.py
+"""
+
+import sys
+
+from repro.launch.bench_serving import main
+
+if __name__ == "__main__":
+    sys.exit(main(["--scenario", "diurnal", "--duration", "30"]))

@@ -1,0 +1,31 @@
+"""jax-version compatibility shims for distributed code.
+
+Two renames separate the installed jax (0.4.x) from current jax:
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` to the
+  top-level ``jax`` namespace;
+* its replication-check flag was renamed ``check_rep`` → ``check_vma``.
+
+``shard_map(...)`` here accepts the modern spelling and translates.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    except TypeError:  # 0.4.x spells the flag check_rep
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+__all__ = ["shard_map"]

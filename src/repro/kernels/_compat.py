@@ -1,0 +1,13 @@
+"""jax-version compatibility shims for the Pallas TPU kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the installed jax (0.4.x) only has the old name.  Kernels import the
+symbol from here so they run on either side of the rename.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

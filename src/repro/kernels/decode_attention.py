@@ -26,6 +26,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 
@@ -111,7 +113,7 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 512,
             pltpu.VMEM((H,), jnp.float32),
             pltpu.VMEM((H, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.astype(jnp.int32), q[:, 0], k_cache, v_cache)

@@ -1,4 +1,5 @@
-"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs.
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs, and
+the scenario-driven serving benchmark (``bench_serving``).
 
 NOTE: importing ``dryrun``/``profile_tpu`` sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` and must happen

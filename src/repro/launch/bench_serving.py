@@ -1,0 +1,233 @@
+"""Trace-driven serving benchmark: scenarios × {static, packrat} policies.
+
+Runs named workload scenarios (``repro.serving.scenarios``) through the
+*full* Packrat controller — estimator → knapsack optimizer → allocator →
+active-passive reconfiguration → dispatcher → simulated workers — and
+compares two policies on **identical arrival traces**:
+
+* ``static``  — the paper's baseline: one fat instance on all T units
+  at a fixed batch size, never reconfigured;
+* ``packrat`` — the adaptive policy: the batch-size estimator (§3.8)
+  re-runs the 2-D knapsack (§3.3) online and swaps configurations via
+  the active-passive controller (§3.7).
+
+Everything is seeded and runs on the deterministic event loop, so two
+invocations with the same flags produce byte-identical JSON reports.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.bench_serving \
+        --scenario diurnal --duration 60
+    PYTHONPATH=src python -m repro.launch.bench_serving --scenario all \
+        --model gpt2 --out report.json
+    PYTHONPATH=src python -m repro.launch.bench_serving --list
+    PYTHONPATH=src python -m repro.launch.bench_serving \
+        --trace my_trace.json --duration 120        # replay a recorded trace
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+from ..core.knapsack import PackratOptimizer
+from ..core.paper_profiles import PAPER_MODELS, ProfileModel
+from ..serving import (ControllerConfig, EventLoop, MetricsCollector,
+                       PackratServer, Request, TabulatedBackend)
+from ..serving.scenarios import (Scenario, ScenarioContext, get_scenario,
+                                 list_scenarios)
+from ..serving.workloads import TraceWorkload
+
+POLICIES = ("static", "packrat")
+
+# how long past the offered-load window the simulation keeps draining
+# queued work before declaring the remainder incomplete
+DRAIN_FACTOR = 1.0
+DRAIN_MIN_S = 30.0
+
+
+def _static_optimizer(model: ProfileModel, units: int, max_batch: int
+                      ) -> PackratOptimizer:
+    """An optimizer that can only produce the fat ⟨1,T,b⟩ configuration."""
+    full = model.profile(units, max_batch)
+    fat_only = {(t, b): lat for (t, b), lat in full.items() if t == units}
+    return PackratOptimizer(fat_only)
+
+
+def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
+               units: int, duration: float, initial_batch: int,
+               max_batch: int, slo_deadline: float,
+               reconfigure_timeout: float) -> Dict[str, object]:
+    """One policy over one fixed arrival trace → metrics dict."""
+    if policy == "static":
+        opt = _static_optimizer(model, units, max_batch)
+        # one fat instance serves at most the largest profiled batch
+        initial_batch = min(initial_batch, max_batch)
+        # a reconfigure timeout beyond the run pins the initial config
+        ccfg = ControllerConfig()
+        ccfg.estimator.reconfigure_timeout = 10.0 * duration + 1e6
+    elif policy == "packrat":
+        opt = PackratOptimizer(model.profile(units, max_batch))
+        ccfg = ControllerConfig()
+        ccfg.estimator.reconfigure_timeout = reconfigure_timeout
+        ccfg.estimator.max_batch = max_batch
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=units, optimizer=opt,
+                           backend=TabulatedBackend(model.profile(
+                               units, max_batch)),
+                           initial_batch=initial_batch, config=ccfg)
+    metrics = MetricsCollector(slo_deadline=slo_deadline)
+    drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
+    metrics.attach(server, sample_interval=min(0.25, duration / 100.0),
+                   until=duration + drain)
+    for i, t in enumerate(arrivals):
+        metrics.on_request(Request(i, t))
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.run_until(duration + drain)
+
+    rep = metrics.report(duration=duration)
+    rep["reconfigurations"] = len(server.reconfig_log) - 1
+    rep["final_config"] = str(server.reconfig_log[-1][2])
+    rep["reconfig_log"] = [
+        {"t": t, "batch": b, "config": str(cfg)}
+        for t, b, cfg in server.reconfig_log
+    ]
+    return rep
+
+
+def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
+                 duration: float, seed: int, initial_batch: int,
+                 max_batch: int, slo_factor: float,
+                 reconfigure_timeout: float,
+                 policies: tuple = POLICIES) -> Dict[str, object]:
+    """Both policies on the scenario's (seeded, shared) arrival trace."""
+    opt = PackratOptimizer(model.profile(units, max_batch))
+    # T instances at the largest profiled per-instance batch is the
+    # biggest servable aggregate batch; clamp batch references into it
+    initial_batch = max(1, min(initial_batch, units * max_batch))
+    ctx = ScenarioContext(threads=units, optimizer=opt, duration=duration,
+                          seed=seed, max_total_batch=units * max_batch)
+    workload = sc.build(ctx)
+    arrivals = workload.arrivals(duration, seed=seed)
+    # SLO: a multiple of the *optimal* latency at the initial batch —
+    # model-relative, so the deadline is equally tight for every model
+    slo = slo_factor * opt.solve(units, initial_batch).latency
+    out: Dict[str, object] = {
+        "scenario": sc.name,
+        "description": sc.description,
+        "workload": workload.name,
+        "offered": len(arrivals),
+        "offered_rate_rps": len(arrivals) / duration,
+        "slo_deadline_ms": slo * 1e3,
+    }
+    for policy in policies:
+        out[policy] = run_policy(
+            policy, arrivals, model=model, units=units, duration=duration,
+            initial_batch=initial_batch, max_batch=max_batch,
+            slo_deadline=slo, reconfigure_timeout=reconfigure_timeout)
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Scenario-driven serving benchmark "
+                    "(static baseline vs adaptive Packrat)")
+    ap.add_argument("--scenario", default="all",
+                    help="registered scenario name, or 'all'")
+    ap.add_argument("--trace", default=None,
+                    help="JSON/CSV arrival trace to replay instead of a "
+                         "registered scenario")
+    ap.add_argument("--model", default="inception_v3",
+                    choices=sorted(PAPER_MODELS))
+    ap.add_argument("--units", type=int, default=16,
+                    help="total threads/chips T")
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="seconds of offered load")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--initial-batch", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--slo-factor", type=float, default=4.0,
+                    help="SLO deadline as a multiple of the optimal "
+                         "latency at --initial-batch")
+    ap.add_argument("--reconfigure-timeout", type=float, default=5.0,
+                    help="estimator check period for the packrat policy")
+    ap.add_argument("--out", default=None, help="write JSON report here "
+                                                "(default: stdout)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for sc in list_scenarios():
+            print(f"{sc.name:16s} {sc.description}")
+        return 0
+
+    if args.duration <= 0:
+        ap.error("--duration must be > 0")
+    if args.units < 1 or args.initial_batch < 1 or args.max_batch < 1:
+        ap.error("--units, --initial-batch and --max-batch must be >= 1")
+
+    model = PAPER_MODELS[args.model]
+    if args.trace:
+        try:
+            trace = TraceWorkload.from_file(args.trace)
+        except (OSError, ValueError, KeyError) as e:
+            ap.error(f"cannot load trace {args.trace!r}: {e}")
+        scenarios = [Scenario(name=f"trace:{args.trace}",
+                              description="user-supplied trace replay",
+                              build=lambda ctx: trace)]
+    elif args.scenario == "all":
+        scenarios = list_scenarios()
+    else:
+        try:
+            scenarios = [get_scenario(args.scenario)]
+        except KeyError as e:
+            ap.error(e.args[0])
+
+    report: Dict[str, object] = {
+        "model": args.model,
+        "units": args.units,
+        "duration_s": args.duration,
+        "seed": args.seed,
+        "initial_batch": args.initial_batch,
+        "max_batch": args.max_batch,
+        "slo_factor": args.slo_factor,
+        "policies": list(POLICIES),
+        "scenarios": {},
+    }
+    for sc in scenarios:
+        result = run_scenario(
+            sc, model=model, units=args.units, duration=args.duration,
+            seed=args.seed, initial_batch=args.initial_batch,
+            max_batch=args.max_batch, slo_factor=args.slo_factor,
+            reconfigure_timeout=args.reconfigure_timeout)
+        report["scenarios"][sc.name] = result
+        st, pk = result["static"], result["packrat"]
+
+        def fmt(ms):
+            return "n/a" if ms is None else f"{ms:.0f}ms"
+
+        print(f"[bench] {sc.name:16s} offered={result['offered']:6d}  "
+              f"static: p99={fmt(st['latency_ms']['p99'])} "
+              f"goodput={st['goodput_rps']:.1f}/s  "
+              f"packrat: p99={fmt(pk['latency_ms']['p99'])} "
+              f"goodput={pk['goodput_rps']:.1f}/s "
+              f"reconfigs={pk['reconfigurations']}",
+              file=sys.stderr)
+
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"[bench] report written to {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,20 +11,30 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed after jax 0.4.37; every axis defaults to Auto there
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` where supported, nothing otherwise."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_submesh(n_chips: int, *, model_parallel: Optional[int] = None
@@ -39,5 +49,4 @@ def make_submesh(n_chips: int, *, model_parallel: Optional[int] = None
     if n_chips % tp:
         raise ValueError(f"{tp=} must divide {n_chips=}")
     dp = n_chips // tp
-    return jax.make_mesh((dp, tp), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return jax.make_mesh((dp, tp), ("data", "model"), **_axis_kwargs(2))

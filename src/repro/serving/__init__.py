@@ -1,17 +1,27 @@
-"""Packrat serving runtime: dispatcher, workers, controller, simulator."""
+"""Packrat serving runtime: dispatcher, workers, controller, simulator,
+workload scenario engine, and SLO metrics."""
 
 from .allocator import AllocationError, Placement, ResourceAllocator
 from .controller import ControllerConfig, PackratServer
 from .dispatcher import Dispatcher, DispatcherConfig
 from .instance import (CallableBackend, JaxBackend, LatencyBackend,
                        TabulatedBackend, WorkerInstance)
+from .metrics import LatencyBucket, MetricsCollector, nearest_rank
+from .scenarios import (Scenario, ScenarioContext, get_scenario,
+                        list_scenarios, register_scenario, scenario)
 from .simulator import (ArrivalProcess, EventLoop, Request, Response,
                         step_rate)
+from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
+                        RampWorkload, StepWorkload, TraceWorkload, Workload)
 
 __all__ = [
     "AllocationError", "ArrivalProcess", "CallableBackend",
-    "ControllerConfig", "Dispatcher", "DispatcherConfig", "EventLoop",
-    "JaxBackend", "LatencyBackend", "PackratServer", "Placement", "Request",
-    "ResourceAllocator", "Response", "TabulatedBackend", "WorkerInstance",
-    "step_rate",
+    "ControllerConfig", "Dispatcher", "DispatcherConfig", "DiurnalWorkload",
+    "EventLoop", "JaxBackend", "LatencyBackend", "LatencyBucket",
+    "MMPPWorkload", "MetricsCollector", "PackratServer", "Placement",
+    "PoissonWorkload", "RampWorkload", "Request", "ResourceAllocator",
+    "Response", "Scenario", "ScenarioContext", "StepWorkload",
+    "TabulatedBackend", "TraceWorkload", "WorkerInstance", "Workload",
+    "get_scenario", "list_scenarios", "nearest_rank", "register_scenario",
+    "scenario", "step_rate",
 ]

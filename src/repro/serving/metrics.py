@@ -1,0 +1,195 @@
+"""SLO metrics collection for serving runs.
+
+A :class:`MetricsCollector` observes a live :class:`PackratServer`
+without touching the dispatcher/event-loop hot paths:
+
+* **responses** are captured by chaining the dispatcher's existing
+  ``on_response`` callback (``attach``) or fed after the run
+  (``ingest``);
+* **queue depth** is sampled by a periodic event scheduled on the same
+  virtual clock, reading the dispatcher's public ``queue_depth``.
+
+It produces the quantities serving papers report: per-request latency
+histogram (log₂ buckets), p50/p95/p99 (nearest-rank), goodput against
+an SLO deadline (completed-within-deadline per second of offered load —
+requests that never complete count against goodput, which is what makes
+it an honest overload metric), and the queue-depth timeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .simulator import EventLoop, Request, Response
+
+
+def nearest_rank(sorted_values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in (0, 100]) of pre-sorted values."""
+    if not sorted_values:
+        return float("nan")
+    if not (0.0 < q <= 100.0):
+        raise ValueError(f"q must be in (0, 100], got {q}")
+    rank = max(1, math.ceil(q / 100.0 * len(sorted_values)))
+    return sorted_values[rank - 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyBucket:
+    lo_ms: float          # inclusive
+    hi_ms: float          # exclusive
+    count: int
+
+
+class MetricsCollector:
+    """Per-request latency + SLO accounting for one serving run."""
+
+    def __init__(self, *, slo_deadline: Optional[float] = None) -> None:
+        self.slo_deadline = slo_deadline     # seconds, None = no SLO
+        self.offered = 0
+        self.latencies: List[float] = []     # seconds, completion order
+        self.redispatched = 0
+        self.queue_timeline: List[Tuple[float, int]] = []
+        self._batch_sizes: List[int] = []
+
+    # ------------------------------------------------------------------ #
+    # feeding
+    # ------------------------------------------------------------------ #
+    def on_request(self, req: Request) -> None:
+        self.offered += 1
+
+    def on_response(self, resp: Response) -> None:
+        self.latencies.append(resp.latency)
+        self._batch_sizes.append(resp.batch_size)
+        if resp.redispatched:
+            self.redispatched += 1
+
+    def ingest(self, responses: Sequence[Response], *,
+               offered: Optional[int] = None) -> None:
+        """Post-hoc feeding from ``server.responses``."""
+        for r in responses:
+            self.on_response(r)
+        if offered is not None:
+            self.offered = offered
+
+    def attach(self, server, *, sample_interval: float = 0.1,
+               until: Optional[float] = None) -> None:
+        """Hook a live ``PackratServer`` without modifying its hot path.
+
+        Chains the dispatcher's ``on_response`` (the dispatcher already
+        calls through an attribute, so swapping the attribute is safe
+        mid-run) and schedules a queue-depth sampler on the server's
+        event loop.  ``until`` bounds the sampler so ``loop.run()``
+        still terminates.
+        """
+        prev = server.dispatcher.on_response
+
+        def chained(resp: Response) -> None:
+            prev(resp)
+            self.on_response(resp)
+
+        server.dispatcher.on_response = chained
+        self.attach_queue_sampler(server.loop, server.dispatcher,
+                                  interval=sample_interval, until=until)
+
+    def attach_queue_sampler(self, loop: EventLoop, dispatcher, *,
+                             interval: float = 0.1,
+                             until: Optional[float] = None) -> None:
+        def sample() -> None:
+            self.queue_timeline.append((loop.now, dispatcher.queue_depth))
+            if until is None or loop.now + interval <= until:
+                loop.schedule(interval, sample)
+
+        loop.schedule(interval, sample)
+
+    # ------------------------------------------------------------------ #
+    # derived metrics
+    # ------------------------------------------------------------------ #
+    @property
+    def completed(self) -> int:
+        return len(self.latencies)
+
+    def percentile(self, q: float) -> float:
+        return nearest_rank(sorted(self.latencies), q)
+
+    def within_slo(self) -> int:
+        if self.slo_deadline is None:
+            return self.completed
+        return sum(1 for lat in self.latencies if lat <= self.slo_deadline)
+
+    def goodput(self, duration: float) -> float:
+        """Requests completed within the SLO per second of offered load."""
+        if duration <= 0:
+            raise ValueError("duration must be > 0")
+        return self.within_slo() / duration
+
+    def slo_attainment(self) -> float:
+        """Fraction of *offered* requests that completed within the SLO.
+
+        Dividing by offered (not completed) makes dropped/never-finished
+        requests SLO violations rather than silently vanishing.
+        """
+        denom = max(self.offered, self.completed)
+        return self.within_slo() / denom if denom else 1.0
+
+    def queue_peak(self) -> int:
+        return max((d for _, d in self.queue_timeline), default=0)
+
+    def queue_mean(self) -> float:
+        if not self.queue_timeline:
+            return 0.0
+        return sum(d for _, d in self.queue_timeline) / len(self.queue_timeline)
+
+    def histogram(self) -> List[LatencyBucket]:
+        """Log₂ latency buckets from 1 ms up, covering every sample."""
+        if not self.latencies:
+            return []
+        buckets: Dict[int, int] = {}
+        for lat in self.latencies:
+            ms = lat * 1e3
+            k = 0 if ms < 1.0 else int(math.floor(math.log2(ms))) + 1
+            buckets[k] = buckets.get(k, 0) + 1
+        out = []
+        for k in sorted(buckets):
+            lo = 0.0 if k == 0 else 2.0 ** (k - 1)
+            out.append(LatencyBucket(lo_ms=lo, hi_ms=2.0 ** k,
+                                     count=buckets[k]))
+        return out
+
+    # ------------------------------------------------------------------ #
+    def report(self, *, duration: float) -> Dict[str, object]:
+        """The JSON-serializable summary the benchmark CLI emits."""
+        lats = sorted(self.latencies)
+        n = len(lats)
+        rep: Dict[str, object] = {
+            "offered": max(self.offered, n),
+            "completed": n,
+            "incomplete": max(self.offered - n, 0),
+            "redispatched": self.redispatched,
+            "latency_ms": {
+                "mean": (sum(lats) / n * 1e3) if n else None,
+                "p50": nearest_rank(lats, 50) * 1e3 if n else None,
+                "p95": nearest_rank(lats, 95) * 1e3 if n else None,
+                "p99": nearest_rank(lats, 99) * 1e3 if n else None,
+                "max": lats[-1] * 1e3 if n else None,
+            },
+            "slo_deadline_ms": (self.slo_deadline * 1e3
+                                if self.slo_deadline is not None else None),
+            "within_slo": self.within_slo(),
+            "goodput_rps": self.within_slo() / duration,
+            "slo_attainment": self.slo_attainment(),
+            "queue_depth": {
+                "peak": self.queue_peak(),
+                "mean": self.queue_mean(),
+                "samples": len(self.queue_timeline),
+            },
+            "latency_histogram": [
+                {"lo_ms": b.lo_ms, "hi_ms": b.hi_ms, "count": b.count}
+                for b in self.histogram()
+            ],
+        }
+        return rep
+
+
+__all__ = ["LatencyBucket", "MetricsCollector", "nearest_rank"]

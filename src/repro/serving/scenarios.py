@@ -1,0 +1,170 @@
+"""Scenario registry: named, capacity-relative serving workloads.
+
+A *scenario* pairs a workload shape (Poisson, bursty MMPP, diurnal,
+step, ramp, trace replay) with rates expressed **relative to the served
+model's capacity**, so the same scenario stresses ResNet-50 and GPT-2
+equally hard.  Capacity comes from the Packrat optimizer itself: the
+sustainable throughput at batch ``b`` is ``b / L*(T, b)`` where ``L*``
+is the optimal makespan (:class:`ScenarioContext`).
+
+Scenarios register by name (``@scenario``); the benchmark CLI
+(``repro.launch.bench_serving``) looks them up and runs each through
+the full controller under both a static baseline and the adaptive
+Packrat policy.  Adding a scenario is one decorated function — see
+``docs/ARCHITECTURE.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from ..core.knapsack import PackratOptimizer
+from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
+                        RampWorkload, StepWorkload, TraceWorkload, Workload)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioContext:
+    """What a scenario builder may depend on: capacity and run shape."""
+
+    threads: int                  # T, total units on the server
+    optimizer: PackratOptimizer   # solves ⟨T,B⟩ → optimal config
+    duration: float               # seconds of offered load
+    seed: int = 0
+    max_total_batch: Optional[int] = None   # largest feasible aggregate B
+
+    def capacity_rps(self, batch: int) -> float:
+        """Sustainable throughput (req/s) at aggregate batch ``batch``.
+
+        The built-in scenarios reference the paper's batch grid (B=8/32/
+        64); under a small ``--max-batch`` those may exceed the largest
+        servable aggregate batch, so clamp rather than crash the solve.
+        """
+        if self.max_total_batch is not None:
+            batch = max(1, min(batch, self.max_total_batch))
+        cfg = self.optimizer.solve(self.threads, batch)
+        return batch / cfg.latency
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    build: Callable[[ScenarioContext], Workload]
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(name: str, description: str,
+                      build: Callable[[ScenarioContext], Workload]) -> Scenario:
+    if name in _REGISTRY:
+        raise ValueError(f"scenario {name!r} already registered")
+    sc = Scenario(name=name, description=description, build=build)
+    _REGISTRY[name] = sc
+    return sc
+
+
+def scenario(name: str, description: str):
+    """Decorator form of :func:`register_scenario`."""
+
+    def deco(fn: Callable[[ScenarioContext], Workload]):
+        register_scenario(name, description, fn)
+        return fn
+
+    return deco
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_scenarios() -> List[Scenario]:
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+# --------------------------------------------------------------------- #
+# built-in scenarios
+#
+# Rates are fractions of the capacity at a reference batch size, so
+# every scenario is meaningful for any profiled model.  Batch sizes
+# follow the paper's evaluation grid (B=8 "low", B=64 "high").
+# --------------------------------------------------------------------- #
+@scenario("steady-poisson",
+          "steady Poisson load at 70% of the B=32 capacity")
+def _steady(ctx: ScenarioContext) -> Workload:
+    return PoissonWorkload(rate_rps=0.7 * ctx.capacity_rps(32))
+
+
+@scenario("bursty",
+          "MMPP on/off bursts: quiet at 30% of B=8 capacity, bursts to "
+          "85% of B=64 capacity")
+def _bursty(ctx: ScenarioContext) -> Workload:
+    quiet = 0.3 * ctx.capacity_rps(8)
+    burst = 0.85 * ctx.capacity_rps(64)
+    # dwell times scaled to the run so several bursts land per run
+    return MMPPWorkload(rates=(quiet, burst),
+                        mean_dwell=(ctx.duration / 6.0, ctx.duration / 12.0))
+
+
+@scenario("diurnal",
+          "sinusoidal day/night curve around 55% of B=32 capacity "
+          "(one period per run)")
+def _diurnal(ctx: ScenarioContext) -> Workload:
+    return DiurnalWorkload(base_rps=0.55 * ctx.capacity_rps(32),
+                           amplitude=0.7, period=ctx.duration)
+
+
+@scenario("step-up",
+          "Fig.-11 step: B=8-matched load jumping to 90% of B=64 "
+          "capacity at 30% of the run")
+def _step_up(ctx: ScenarioContext) -> Workload:
+    return StepWorkload(low=0.8 * ctx.capacity_rps(8),
+                        high=0.9 * ctx.capacity_rps(64),
+                        t_step=0.3 * ctx.duration)
+
+
+@scenario("step-down",
+          "load collapse: 90% of B=64 capacity dropping to B=8-matched "
+          "load at 40% of the run")
+def _step_down(ctx: ScenarioContext) -> Workload:
+    return StepWorkload(low=0.9 * ctx.capacity_rps(64),
+                        high=0.8 * ctx.capacity_rps(8),
+                        t_step=0.4 * ctx.duration)
+
+
+@scenario("ramp",
+          "linear ramp from 20% to 90% of B=64 capacity across the run")
+def _ramp(ctx: ScenarioContext) -> Workload:
+    cap = ctx.capacity_rps(64)
+    return RampWorkload(start_rps=0.2 * cap, end_rps=0.9 * cap,
+                        t0=0.0, t1=ctx.duration)
+
+
+@scenario("flash-crowd",
+          "trace replay: quiet Poisson interrupted by a 10x flash crowd "
+          "for 15% of the run (exercises the trace pipeline)")
+def _flash_crowd(ctx: ScenarioContext) -> Workload:
+    quiet = 0.25 * ctx.capacity_rps(8)
+    spike_start = 0.5 * ctx.duration
+    spike_len = 0.15 * ctx.duration
+    base = PoissonWorkload(rate_rps=quiet)
+    spike = PoissonWorkload(rate_rps=min(10.0 * quiet,
+                                         0.95 * ctx.capacity_rps(64)))
+    times = [t for t in base.arrivals(ctx.duration, seed=ctx.seed)
+             if not (spike_start <= t < spike_start + spike_len)]
+    times += [spike_start + t for t in spike.arrivals(spike_len,
+                                                      seed=ctx.seed + 1)]
+    return TraceWorkload(times=tuple(sorted(times)), name="flash-crowd")
+
+
+__all__ = [
+    "Scenario", "ScenarioContext", "get_scenario", "list_scenarios",
+    "register_scenario", "scenario",
+]

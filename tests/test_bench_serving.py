@@ -1,0 +1,132 @@
+"""Scenario registry + end-to-end benchmark CLI tests (ISSUE 1)."""
+
+import json
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.paper_profiles import RESNET50
+from repro.launch import bench_serving
+from repro.serving.scenarios import (ScenarioContext, get_scenario,
+                                     list_scenarios, register_scenario)
+from repro.serving.workloads import PoissonWorkload, TraceWorkload
+
+EXPECTED_SCENARIOS = {"steady-poisson", "bursty", "diurnal", "step-up",
+                      "step-down", "ramp", "flash-crowd"}
+
+
+def small_ctx(duration=12.0, units=8, seed=0):
+    opt = PackratOptimizer(RESNET50.profile(units, 128))
+    return ScenarioContext(threads=units, optimizer=opt, duration=duration,
+                           seed=seed)
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+def test_builtin_scenarios_registered():
+    names = {sc.name for sc in list_scenarios()}
+    assert EXPECTED_SCENARIOS <= names
+
+
+def test_get_unknown_scenario_raises():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("no-such-scenario")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario("steady-poisson", "dup",
+                          lambda ctx: PoissonWorkload(rate_rps=1.0))
+
+
+def test_scenario_builders_produce_workloads():
+    ctx = small_ctx()
+    for sc in list_scenarios():
+        wl = sc.build(ctx)
+        times = wl.arrivals(ctx.duration, seed=ctx.seed)
+        assert times == sorted(times)
+        assert all(0 <= t < ctx.duration for t in times)
+        assert times, f"scenario {sc.name} generated no load"
+
+
+def test_capacity_rps_matches_optimizer():
+    ctx = small_ctx()
+    cfg = ctx.optimizer.solve(8, 16)
+    assert ctx.capacity_rps(16) == pytest.approx(16 / cfg.latency)
+
+
+def test_flash_crowd_uses_trace_replay():
+    wl = get_scenario("flash-crowd").build(small_ctx())
+    assert isinstance(wl, TraceWorkload)
+
+
+# --------------------------------------------------------------------- #
+# end-to-end runner
+# --------------------------------------------------------------------- #
+RUN_KW = dict(model=RESNET50, units=8, duration=10.0, seed=0,
+              initial_batch=4, max_batch=64, slo_factor=4.0,
+              reconfigure_timeout=2.0)
+
+
+def test_run_scenario_reports_both_policies():
+    result = bench_serving.run_scenario(get_scenario("step-up"), **RUN_KW)
+    assert result["offered"] > 0
+    for policy in ("static", "packrat"):
+        rep = result[policy]
+        assert rep["latency_ms"]["p50"] is not None
+        assert rep["latency_ms"]["p99"] is not None
+        assert rep["goodput_rps"] >= 0
+        assert "reconfigurations" in rep
+    assert result["static"]["reconfigurations"] == 0
+    assert result["packrat"]["reconfigurations"] >= 1
+
+
+def test_run_scenario_is_deterministic():
+    a = bench_serving.run_scenario(get_scenario("bursty"), **RUN_KW)
+    b = bench_serving.run_scenario(get_scenario("bursty"), **RUN_KW)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_static_policy_uses_fat_config_only():
+    result = bench_serving.run_scenario(get_scenario("diurnal"), **RUN_KW)
+    assert result["static"]["final_config"].startswith("[<1,8,")
+
+
+def test_cli_writes_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    rc = bench_serving.main([
+        "--scenario", "step-up", "--model", "resnet50", "--units", "8",
+        "--duration", "8", "--initial-batch", "4", "--max-batch", "64",
+        "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["model"] == "resnet50"
+    sc = report["scenarios"]["step-up"]
+    for policy in ("static", "packrat"):
+        assert sc[policy]["latency_ms"]["p99"] is not None
+        assert "goodput_rps" in sc[policy]
+        assert "reconfigurations" in sc[policy]
+
+
+def test_cli_trace_replay(tmp_path):
+    trace = TraceWorkload.record(PoissonWorkload(rate_rps=6.0), 8.0, seed=1)
+    path = tmp_path / "trace.json"
+    trace.save_json(path)
+    out = tmp_path / "report.json"
+    rc = bench_serving.main([
+        "--trace", str(path), "--model", "resnet50", "--units", "8",
+        "--duration", "8", "--initial-batch", "4", "--max-batch", "64",
+        "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    (name, sc), = report["scenarios"].items()
+    assert name.startswith("trace:")
+    assert sc["offered"] == len(trace.times)
+
+
+def test_cli_list(capsys):
+    assert bench_serving.main(["--list"]) == 0
+    listed = capsys.readouterr().out
+    for name in EXPECTED_SCENARIOS:
+        assert name in listed

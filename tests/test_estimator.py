@@ -1,6 +1,7 @@
 """Tests for the batch-size estimator (paper §3.8)."""
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import BatchSizeEstimator, EstimatorConfig, floor_power_of_two

@@ -4,6 +4,7 @@ import math
 import random
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (InstanceGroup, PackratOptimizer, apply_constant_penalty,

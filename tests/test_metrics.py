@@ -1,0 +1,157 @@
+"""SLO metrics collector tests: percentiles, goodput, histogram, and the
+non-invasive hookup to a live server (ISSUE 1 tentpole coverage)."""
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.paper_profiles import RESNET50
+from repro.serving import (EventLoop, MetricsCollector, PackratServer,
+                           PoissonWorkload, Request, Response,
+                           TabulatedBackend)
+from repro.serving.metrics import nearest_rank
+
+
+def mk_response(i, latency, *, batch=4, redispatched=False):
+    return Response(request=Request(i, 0.0), completion=latency,
+                    batch_size=batch, instance_id=0,
+                    redispatched=redispatched)
+
+
+def hand_built_collector(slo=None):
+    """100 responses with latencies exactly 1..100 ms."""
+    m = MetricsCollector(slo_deadline=slo)
+    for i in range(100):
+        m.on_request(Request(i, 0.0))
+        m.on_response(mk_response(i, (i + 1) * 1e-3))
+    return m
+
+
+# --------------------------------------------------------------------- #
+# percentiles (nearest-rank is exact on this construction)
+# --------------------------------------------------------------------- #
+def test_percentiles_on_hand_built_set():
+    m = hand_built_collector()
+    assert m.percentile(50) == pytest.approx(0.050)
+    assert m.percentile(95) == pytest.approx(0.095)
+    assert m.percentile(99) == pytest.approx(0.099)
+    assert m.percentile(100) == pytest.approx(0.100)
+
+
+def test_nearest_rank_edges():
+    assert nearest_rank([1.0, 2.0, 3.0], 1) == 1.0     # rank never < 1
+    assert nearest_rank([1.0, 2.0, 3.0], 100) == 3.0
+    assert nearest_rank([5.0], 50) == 5.0
+    assert nearest_rank([], 50) != nearest_rank([], 50)  # NaN on empty
+    with pytest.raises(ValueError):
+        nearest_rank([1.0], 0)
+    with pytest.raises(ValueError):
+        nearest_rank([1.0], 101)
+
+
+# --------------------------------------------------------------------- #
+# goodput / SLO attainment
+# --------------------------------------------------------------------- #
+def test_goodput_against_slo_deadline():
+    m = hand_built_collector(slo=0.050)        # 50 of 100 make the deadline
+    assert m.within_slo() == 50
+    assert m.slo_attainment() == pytest.approx(0.5)
+    assert m.goodput(duration=10.0) == pytest.approx(5.0)
+
+
+def test_no_slo_counts_everything():
+    m = hand_built_collector(slo=None)
+    assert m.within_slo() == 100
+    assert m.slo_attainment() == pytest.approx(1.0)
+
+
+def test_incomplete_requests_hurt_attainment():
+    m = MetricsCollector(slo_deadline=1.0)
+    for i in range(10):
+        m.on_request(Request(i, 0.0))
+    for i in range(4):                          # only 4 of 10 ever complete
+        m.on_response(mk_response(i, 0.010))
+    assert m.slo_attainment() == pytest.approx(0.4)
+    rep = m.report(duration=1.0)
+    assert rep["offered"] == 10 and rep["completed"] == 4
+    assert rep["incomplete"] == 6
+
+
+def test_goodput_rejects_bad_duration():
+    with pytest.raises(ValueError):
+        hand_built_collector().goodput(duration=0.0)
+
+
+# --------------------------------------------------------------------- #
+# histogram
+# --------------------------------------------------------------------- #
+def test_histogram_buckets_cover_all_samples():
+    m = hand_built_collector()
+    buckets = m.histogram()
+    assert sum(b.count for b in buckets) == 100
+    for b in buckets:                           # log2 bucket edges
+        assert b.hi_ms == pytest.approx(max(1.0, 2 * b.lo_ms))
+    # 1ms lands in [0,1); 1..100ms spans up to the [64,128) bucket
+    assert buckets[-1].hi_ms == 128.0
+
+
+def test_histogram_empty():
+    assert MetricsCollector().histogram() == []
+
+
+# --------------------------------------------------------------------- #
+# report shape
+# --------------------------------------------------------------------- #
+def test_report_is_json_shaped():
+    import json
+    m = hand_built_collector(slo=0.080)
+    rep = m.report(duration=5.0)
+    text = json.dumps(rep)                      # must serialize cleanly
+    back = json.loads(text)
+    assert back["latency_ms"]["p50"] == pytest.approx(50.0)
+    assert back["latency_ms"]["p99"] == pytest.approx(99.0)
+    assert back["goodput_rps"] == pytest.approx(80 / 5.0)
+    assert back["slo_deadline_ms"] == pytest.approx(80.0)
+
+
+# --------------------------------------------------------------------- #
+# live attachment: queue sampling + response chaining, no hot-path edits
+# --------------------------------------------------------------------- #
+class FakeDispatcher:
+    def __init__(self):
+        self.queue_depth = 0
+
+
+def test_queue_sampler_timeline():
+    loop = EventLoop()
+    disp = FakeDispatcher()
+    m = MetricsCollector()
+    m.attach_queue_sampler(loop, disp, interval=0.5, until=2.0)
+    loop.at(0.6, lambda: setattr(disp, "queue_depth", 7))
+    loop.at(1.6, lambda: setattr(disp, "queue_depth", 2))
+    loop.run()
+    assert [t for t, _ in m.queue_timeline] == [0.5, 1.0, 1.5, 2.0]
+    assert [d for _, d in m.queue_timeline] == [0, 7, 7, 2]
+    assert m.queue_peak() == 7
+    assert m.queue_mean() == pytest.approx(4.0)
+
+
+def test_attach_to_live_server():
+    profile = RESNET50.profile(8, 64)
+    opt = PackratOptimizer(profile)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=8, optimizer=opt,
+                           backend=TabulatedBackend(profile),
+                           initial_batch=4)
+    m = MetricsCollector(slo_deadline=60.0)
+    m.attach(server, sample_interval=0.5, until=10.0)
+    arrivals = PoissonWorkload(rate_rps=10.0).arrivals(8.0, seed=0)
+    for i, t in enumerate(arrivals):
+        m.on_request(Request(i, t))
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.run_until(40.0)
+    # every response seen by the server was also seen by the collector,
+    # and the server's own bookkeeping was not disturbed
+    assert m.completed == len(server.responses) == len(arrivals)
+    assert m.offered == len(arrivals)
+    assert sorted(m.latencies) == sorted(r.latency for r in server.responses)
+    assert m.queue_timeline, "queue sampler never fired"

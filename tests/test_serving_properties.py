@@ -1,5 +1,8 @@
 """Hypothesis property tests for the serving runtime's core invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PackratOptimizer

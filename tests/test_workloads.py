@@ -1,0 +1,184 @@
+"""Workload scenario engine tests: seeded determinism, rate fidelity,
+trace round-trips (ISSUE 1 tentpole coverage)."""
+
+import math
+
+import pytest
+
+from repro.serving.workloads import (DiurnalWorkload, MMPPWorkload,
+                                     PoissonWorkload, RampWorkload,
+                                     StepWorkload, TraceWorkload, Workload)
+
+ALL_GENERATORS = [
+    PoissonWorkload(rate_rps=40.0),
+    StepWorkload(low=10.0, high=60.0, t_step=10.0),
+    RampWorkload(start_rps=5.0, end_rps=50.0, t0=0.0, t1=20.0),
+    DiurnalWorkload(base_rps=30.0, amplitude=0.6, period=20.0),
+    MMPPWorkload(rates=(5.0, 50.0), mean_dwell=(4.0, 2.0)),
+]
+
+
+# --------------------------------------------------------------------- #
+# determinism + basic well-formedness
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("wl", ALL_GENERATORS, ids=lambda w: w.name)
+def test_seeded_determinism(wl):
+    a = wl.arrivals(20.0, seed=7)
+    b = wl.arrivals(20.0, seed=7)
+    assert a == b, "same seed must give identical arrivals"
+    c = wl.arrivals(20.0, seed=8)
+    assert a != c, "different seeds must give different sample paths"
+
+
+@pytest.mark.parametrize("wl", ALL_GENERATORS, ids=lambda w: w.name)
+def test_arrivals_sorted_and_bounded(wl):
+    times = wl.arrivals(20.0, seed=0)
+    assert times == sorted(times)
+    assert all(0.0 <= t < 20.0 for t in times)
+
+
+# --------------------------------------------------------------------- #
+# empirical rate vs configured rate
+# --------------------------------------------------------------------- #
+def test_poisson_empirical_rate():
+    wl = PoissonWorkload(rate_rps=50.0)
+    duration = 80.0
+    n = len(wl.arrivals(duration, seed=3))
+    # Poisson(50*80=4000): 4 sigma ≈ 253, so ±10% is a safe bound
+    assert abs(n / duration - 50.0) / 50.0 < 0.10
+
+
+def test_step_rates_before_and_after():
+    wl = StepWorkload(low=10.0, high=80.0, t_step=30.0)
+    assert wl.rate(0.0) == 10.0 and wl.rate(29.999) == 10.0
+    assert wl.rate(30.0) == 80.0
+    times = wl.arrivals(60.0, seed=1)
+    before = sum(1 for t in times if t < 30.0) / 30.0
+    after = sum(1 for t in times if t >= 30.0) / 30.0
+    assert abs(before - 10.0) / 10.0 < 0.35
+    assert abs(after - 80.0) / 80.0 < 0.15
+
+
+def test_ramp_rate_function():
+    wl = RampWorkload(start_rps=10.0, end_rps=50.0, t0=5.0, t1=15.0)
+    assert wl.rate(0.0) == 10.0
+    assert wl.rate(10.0) == pytest.approx(30.0)
+    assert wl.rate(20.0) == 50.0
+    assert wl.max_rate(20.0) == 50.0
+
+
+def test_diurnal_rate_curve_and_mean():
+    wl = DiurnalWorkload(base_rps=40.0, amplitude=0.5, period=40.0)
+    assert wl.rate(10.0) == pytest.approx(60.0)   # peak: base*(1+amp)
+    assert wl.rate(30.0) == pytest.approx(20.0)   # trough: base*(1-amp)
+    assert wl.max_rate(40.0) == pytest.approx(60.0)
+    # sin integrates to ~0 over whole periods → mean ≈ base
+    assert wl.mean_rate(40.0) == pytest.approx(40.0, rel=0.02)
+    n = len(wl.arrivals(80.0, seed=5))            # two full periods
+    assert abs(n / 80.0 - 40.0) / 40.0 < 0.12
+
+
+def test_diurnal_rejects_bad_amplitude():
+    with pytest.raises(ValueError):
+        DiurnalWorkload(base_rps=10.0, amplitude=1.5)
+
+
+def test_mmpp_stationary_rate_and_burstiness():
+    wl = MMPPWorkload(rates=(5.0, 50.0), mean_dwell=(6.0, 3.0))
+    stat = wl.stationary_rate()
+    assert stat == pytest.approx((6 * 5 + 3 * 50) / 9.0)
+    assert wl.rate(12.3) == stat
+    # long-run empirical rate converges to the stationary rate
+    duration = 400.0
+    n = len(wl.arrivals(duration, seed=2))
+    assert abs(n / duration - stat) / stat < 0.25
+    # burstiness: a Poisson process of equal mean rate has exponential
+    # gaps with CV=1; MMPP gaps must be over-dispersed (CV > 1)
+    times = wl.arrivals(duration, seed=2)
+    gaps = [b - a for a, b in zip(times, times[1:])]
+    mean = sum(gaps) / len(gaps)
+    var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+    assert math.sqrt(var) / mean > 1.1
+
+
+def test_mmpp_arrivals_align_with_state_path():
+    # the published state path must describe the arrivals of the same
+    # seed: during a (strictly positive-length) zero-rate dwell there
+    # are no arrivals at all
+    wl = MMPPWorkload(rates=(0.0, 80.0), mean_dwell=(5.0, 5.0))
+    duration, seed = 200.0, 6
+    path = wl.state_path(duration, seed=seed)
+    times = wl.arrivals(duration, seed=seed)
+    bounds = [t for t, _ in path[1:]] + [duration]
+    assert times, "high-rate dwells must produce arrivals"
+    for (t0, k), t1 in zip(path, bounds):
+        n = sum(1 for t in times if t0 <= t < t1)
+        if wl.rates[k] == 0.0:
+            assert n == 0, f"arrival inside zero-rate dwell [{t0},{t1})"
+
+
+def test_mmpp_state_path_seeded():
+    wl = MMPPWorkload(rates=(1.0, 10.0), mean_dwell=(5.0, 5.0))
+    p1 = wl.state_path(100.0, seed=4)
+    assert p1 == wl.state_path(100.0, seed=4)
+    assert p1[0] == (0.0, 0)
+    states = [k for _, k in p1]
+    assert states == [i % 2 for i in range(len(states))]  # cyclic chain
+
+
+def test_mmpp_rejects_mismatched_states():
+    with pytest.raises(ValueError):
+        MMPPWorkload(rates=(1.0, 2.0, 3.0), mean_dwell=(1.0, 2.0))
+
+
+# --------------------------------------------------------------------- #
+# trace replay
+# --------------------------------------------------------------------- #
+def test_trace_round_trip_json(tmp_path):
+    src = PoissonWorkload(rate_rps=30.0)
+    trace = TraceWorkload.record(src, 10.0, seed=9)
+    path = tmp_path / "trace.json"
+    trace.save_json(path)
+    loaded = TraceWorkload.from_json(path)
+    assert loaded.times == trace.times
+    assert TraceWorkload.from_file(path).times == trace.times
+
+
+def test_trace_round_trip_csv(tmp_path):
+    trace = TraceWorkload(times=(0.125, 1.5, 2.75, 9.0625))
+    path = tmp_path / "trace.csv"
+    trace.save_csv(path)
+    loaded = TraceWorkload.from_csv(path)
+    assert loaded.times == trace.times          # repr() round-trips floats
+    assert TraceWorkload.from_file(path).times == trace.times
+
+
+def test_trace_replay_ignores_seed_and_clips():
+    trace = TraceWorkload(times=(1.0, 2.0, 3.0, 14.0))
+    assert trace.arrivals(10.0, seed=0) == trace.arrivals(10.0, seed=99)
+    assert trace.arrivals(10.0) == [1.0, 2.0, 3.0]
+    assert trace.mean_rate(10.0) == pytest.approx(0.3)
+
+
+def test_trace_rejects_unsorted():
+    with pytest.raises(ValueError):
+        TraceWorkload(times=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        TraceWorkload(times=(-1.0, 1.0))
+
+
+def test_trace_empirical_rate_window():
+    trace = TraceWorkload(times=(1.0, 1.1, 1.2, 5.0))
+    assert trace.rate(1.1, window=1.0) == pytest.approx(3.0)
+    assert trace.rate(5.0) == pytest.approx(1.0)
+
+
+def test_record_freezes_any_workload():
+    wl = StepWorkload(low=5.0, high=40.0, t_step=5.0)
+    trace = TraceWorkload.record(wl, 10.0, seed=3)
+    assert list(trace.times) == wl.arrivals(10.0, seed=3)
+
+
+def test_base_workload_abstract():
+    with pytest.raises(NotImplementedError):
+        Workload().rate(0.0)
