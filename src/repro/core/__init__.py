@@ -8,7 +8,8 @@
 * :mod:`repro.core.interference` — multi-instance contention models.
 """
 
-from .estimator import BatchSizeEstimator, EstimatorConfig, floor_power_of_two
+from .estimator import (ArrivalRateSignal, BatchSizeEstimator,
+                        EstimatorConfig, floor_power_of_two)
 from .interference import (CPUInterferenceModel, TPUInterferenceModel,
                            apply_constant_penalty)
 from .knapsack import (InstanceGroup, PackratConfig, PackratOptimizer,
@@ -25,6 +26,7 @@ from .roofline import (TPU_V5E, HardwareSpec, RooflineTerms, model_flops_ratio)
 __all__ = [
     "ActivePassiveController",
     "AnalyticProfiler",
+    "ArrivalRateSignal",
     "BatchSizeEstimator",
     "CPUInterferenceModel",
     "EstimatorConfig",

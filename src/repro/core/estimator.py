@@ -10,6 +10,17 @@ After each reconfiguration timeout, B̃ is compared with the currently
 configured batch size B; a difference triggers reconfiguration (handled
 by the controller, see serving/controller.py).  This deliberately avoids
 "flip-flopping" between configurations (§3.8).
+
+The Q̂ fed to :meth:`BatchSizeEstimator.observe` is a *signal source*
+selectable per dispatch policy (serving/policy.py):
+
+* batch-synchronous dispatch samples the queue highwater at dispatch
+  instants — the paper's signal, since backlog accumulates while the
+  instance set barriers on the previous aggregate batch;
+* continuous per-instance dispatch drains the queue the moment any
+  instance goes idle, so dispatch-instant highwater undersamples; it
+  instead feeds max(outstanding work, λ̂·L) where λ̂ comes from
+  :class:`ArrivalRateSignal` — Little's-law work-in-system.
 """
 
 from __future__ import annotations
@@ -38,6 +49,41 @@ class EstimatorConfig:
     # forever; 25% headroom keeps the paper's next-lower-power-of-two rule
     # for any load not sitting exactly on a boundary.
     headroom: float = 0.25
+
+
+class ArrivalRateSignal:
+    """EWMA arrival-rate tracker: the estimator signal source for
+    continuous dispatch policies.
+
+    Smooths the inter-arrival gap with an EWMA and reports the inverse
+    as req/s; with ``now`` supplied, a growing silence since the last
+    arrival decays the rate instead of freezing it at the last burst.
+    """
+
+    def __init__(self, alpha: float = 0.25) -> None:
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._last: Optional[float] = None
+        self._mean_gap: Optional[float] = None
+
+    def observe(self, now: float) -> None:
+        """Record one arrival at virtual time ``now``."""
+        if self._last is not None:
+            gap = max(now - self._last, 1e-9)
+            self._mean_gap = (
+                gap if self._mean_gap is None
+                else self.alpha * gap + (1.0 - self.alpha) * self._mean_gap)
+        self._last = now
+
+    def rate(self, now: Optional[float] = None) -> float:
+        """Smoothed arrivals/sec (0.0 until two arrivals were seen)."""
+        if self._mean_gap is None:
+            return 0.0
+        gap = self._mean_gap
+        if now is not None and self._last is not None:
+            gap = max(gap, now - self._last)
+        return 1.0 / gap
 
 
 class BatchSizeEstimator:

@@ -1,15 +1,23 @@
-"""Trace-driven serving benchmark: scenarios × {static, packrat} policies.
+"""Trace-driven serving benchmark: scenarios × policy × dispatch axes.
 
 Runs named workload scenarios (``repro.serving.scenarios``) through the
 *full* Packrat controller — estimator → knapsack optimizer → allocator →
 active-passive reconfiguration → dispatcher → simulated workers — and
-compares two policies on **identical arrival traces**:
+compares configuration policies × dispatch policies on **identical
+arrival traces**:
 
 * ``static``  — the paper's baseline: one fat instance on all T units
   at a fixed batch size, never reconfigured;
 * ``packrat`` — the adaptive policy: the batch-size estimator (§3.8)
   re-runs the 2-D knapsack (§3.3) online and swaps configurations via
-  the active-passive controller (§3.7).
+  the active-passive controller (§3.7);
+
+each under two dispatch policies (``serving/policy.py``):
+
+* ``sync`` — paper-faithful batch-synchronous dispatch (the report keys
+  are the bare policy names, ``static``/``packrat``, for continuity);
+* ``continuous`` — per-instance queues, no instance-set barrier (report
+  keys ``static+continuous``/``packrat+continuous``).
 
 Everything is seeded and runs on the deterministic event loop, so two
 invocations with the same flags produce byte-identical JSON reports.
@@ -19,6 +27,8 @@ Usage:
         --scenario diurnal --duration 60
     PYTHONPATH=src python -m repro.launch.bench_serving --scenario all \
         --model gpt2 --out report.json
+    PYTHONPATH=src python -m repro.launch.bench_serving \
+        --scenario bursty --dispatch continuous      # one dispatch mode only
     PYTHONPATH=src python -m repro.launch.bench_serving --list
     PYTHONPATH=src python -m repro.launch.bench_serving \
         --trace my_trace.json --duration 120        # replay a recorded trace
@@ -29,17 +39,25 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from ..core.knapsack import PackratOptimizer
 from ..core.paper_profiles import PAPER_MODELS, ProfileModel
 from ..serving import (ControllerConfig, EventLoop, MetricsCollector,
-                       PackratServer, Request, TabulatedBackend)
+                       PackratServer, Request, TabulatedBackend,
+                       instance_report)
 from ..serving.scenarios import (Scenario, ScenarioContext, get_scenario,
                                  list_scenarios)
 from ..serving.workloads import TraceWorkload
 
 POLICIES = ("static", "packrat")
+DISPATCHES = ("sync", "continuous")
+
+
+def policy_key(policy: str, dispatch: str) -> str:
+    """Report key for one (policy, dispatch) combination; sync keeps the
+    bare policy name so pre-existing report consumers stay valid."""
+    return policy if dispatch == "sync" else f"{policy}+{dispatch}"
 
 # how long past the offered-load window the simulation keeps draining
 # queued work before declaring the remainder incomplete
@@ -58,8 +76,9 @@ def _static_optimizer(model: ProfileModel, units: int, max_batch: int
 def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
                units: int, duration: float, initial_batch: int,
                max_batch: int, slo_deadline: float,
-               reconfigure_timeout: float) -> Dict[str, object]:
-    """One policy over one fixed arrival trace → metrics dict."""
+               reconfigure_timeout: float,
+               dispatch: str = "sync") -> Dict[str, object]:
+    """One (policy, dispatch) combination over one fixed trace → metrics."""
     if policy == "static":
         opt = _static_optimizer(model, units, max_batch)
         # one fat instance serves at most the largest profiled batch
@@ -74,6 +93,7 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
         ccfg.estimator.max_batch = max_batch
     else:
         raise ValueError(f"unknown policy {policy!r}")
+    ccfg.dispatch_policy = dispatch
 
     loop = EventLoop()
     server = PackratServer(loop, total_units=units, optimizer=opt,
@@ -90,12 +110,14 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
     loop.run_until(duration + drain)
 
     rep = metrics.report(duration=duration)
+    rep["dispatch"] = dispatch
     rep["reconfigurations"] = len(server.reconfig_log) - 1
     rep["final_config"] = str(server.reconfig_log[-1][2])
     rep["reconfig_log"] = [
         {"t": t, "batch": b, "config": str(cfg)}
         for t, b, cfg in server.reconfig_log
     ]
+    rep["instances"] = instance_report(server.workers_ever, loop.now)
     return rep
 
 
@@ -103,8 +125,10 @@ def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
                  duration: float, seed: int, initial_batch: int,
                  max_batch: int, slo_factor: float,
                  reconfigure_timeout: float,
-                 policies: tuple = POLICIES) -> Dict[str, object]:
-    """Both policies on the scenario's (seeded, shared) arrival trace."""
+                 policies: tuple = POLICIES,
+                 dispatches: Tuple[str, ...] = ("sync",)
+                 ) -> Dict[str, object]:
+    """Every policy × dispatch combo on one (seeded, shared) trace."""
     opt = PackratOptimizer(model.profile(units, max_batch))
     # T instances at the largest profiled per-instance batch is the
     # biggest servable aggregate batch; clamp batch references into it
@@ -123,12 +147,15 @@ def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
         "offered": len(arrivals),
         "offered_rate_rps": len(arrivals) / duration,
         "slo_deadline_ms": slo * 1e3,
+        "policies": [policy_key(p, d) for p in policies for d in dispatches],
     }
     for policy in policies:
-        out[policy] = run_policy(
-            policy, arrivals, model=model, units=units, duration=duration,
-            initial_batch=initial_batch, max_batch=max_batch,
-            slo_deadline=slo, reconfigure_timeout=reconfigure_timeout)
+        for dispatch in dispatches:
+            out[policy_key(policy, dispatch)] = run_policy(
+                policy, arrivals, model=model, units=units,
+                duration=duration, initial_batch=initial_batch,
+                max_batch=max_batch, slo_deadline=slo,
+                reconfigure_timeout=reconfigure_timeout, dispatch=dispatch)
     return out
 
 
@@ -155,6 +182,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "latency at --initial-batch")
     ap.add_argument("--reconfigure-timeout", type=float, default=5.0,
                     help="estimator check period for the packrat policy")
+    ap.add_argument("--dispatch", default="both",
+                    choices=("sync", "continuous", "both"),
+                    help="dispatch policy axis: paper-faithful batch-sync, "
+                         "continuous per-instance, or both")
     ap.add_argument("--out", default=None, help="write JSON report here "
                                                 "(default: stdout)")
     ap.add_argument("--list", action="store_true",
@@ -188,6 +219,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         except KeyError as e:
             ap.error(e.args[0])
 
+    dispatches = (DISPATCHES if args.dispatch == "both"
+                  else (args.dispatch,))
+    keys = [policy_key(p, d) for p in POLICIES for d in dispatches]
     report: Dict[str, object] = {
         "model": args.model,
         "units": args.units,
@@ -196,7 +230,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         "initial_batch": args.initial_batch,
         "max_batch": args.max_batch,
         "slo_factor": args.slo_factor,
-        "policies": list(POLICIES),
+        "dispatches": list(dispatches),
+        "policies": keys,
         "scenarios": {},
     }
     for sc in scenarios:
@@ -204,20 +239,21 @@ def main(argv: Optional[List[str]] = None) -> int:
             sc, model=model, units=args.units, duration=args.duration,
             seed=args.seed, initial_batch=args.initial_batch,
             max_batch=args.max_batch, slo_factor=args.slo_factor,
-            reconfigure_timeout=args.reconfigure_timeout)
+            reconfigure_timeout=args.reconfigure_timeout,
+            dispatches=dispatches)
         report["scenarios"][sc.name] = result
-        st, pk = result["static"], result["packrat"]
 
         def fmt(ms):
             return "n/a" if ms is None else f"{ms:.0f}ms"
 
+        parts = []
+        for key in keys:
+            rep = result[key]
+            parts.append(f"{key}: p95={fmt(rep['latency_ms']['p95'])} "
+                         f"p99={fmt(rep['latency_ms']['p99'])} "
+                         f"goodput={rep['goodput_rps']:.1f}/s")
         print(f"[bench] {sc.name:16s} offered={result['offered']:6d}  "
-              f"static: p99={fmt(st['latency_ms']['p99'])} "
-              f"goodput={st['goodput_rps']:.1f}/s  "
-              f"packrat: p99={fmt(pk['latency_ms']['p99'])} "
-              f"goodput={pk['goodput_rps']:.1f}/s "
-              f"reconfigs={pk['reconfigurations']}",
-              file=sys.stderr)
+              + "  ".join(parts), file=sys.stderr)
 
     text = json.dumps(report, indent=2, sort_keys=True)
     if args.out:

@@ -6,7 +6,10 @@ from .controller import ControllerConfig, PackratServer
 from .dispatcher import Dispatcher, DispatcherConfig
 from .instance import (CallableBackend, JaxBackend, LatencyBackend,
                        TabulatedBackend, WorkerInstance)
-from .metrics import LatencyBucket, MetricsCollector, nearest_rank
+from .metrics import (LatencyBucket, MetricsCollector, instance_report,
+                      log2_ms_histogram, nearest_rank)
+from .policy import (BatchSyncPolicy, ContinuousPolicy, DispatchPolicy,
+                     make_policy)
 from .scenarios import (Scenario, ScenarioContext, get_scenario,
                         list_scenarios, register_scenario, scenario)
 from .simulator import (ArrivalProcess, EventLoop, Request, Response,
@@ -15,13 +18,15 @@ from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
                         RampWorkload, StepWorkload, TraceWorkload, Workload)
 
 __all__ = [
-    "AllocationError", "ArrivalProcess", "CallableBackend",
-    "ControllerConfig", "Dispatcher", "DispatcherConfig", "DiurnalWorkload",
+    "AllocationError", "ArrivalProcess", "BatchSyncPolicy",
+    "CallableBackend", "ContinuousPolicy", "ControllerConfig",
+    "DispatchPolicy", "Dispatcher", "DispatcherConfig", "DiurnalWorkload",
     "EventLoop", "JaxBackend", "LatencyBackend", "LatencyBucket",
     "MMPPWorkload", "MetricsCollector", "PackratServer", "Placement",
     "PoissonWorkload", "RampWorkload", "Request", "ResourceAllocator",
     "Response", "Scenario", "ScenarioContext", "StepWorkload",
     "TabulatedBackend", "TraceWorkload", "WorkerInstance", "Workload",
-    "get_scenario", "list_scenarios", "nearest_rank", "register_scenario",
-    "scenario", "step_rate",
+    "get_scenario", "instance_report", "list_scenarios",
+    "log2_ms_histogram", "make_policy", "nearest_rank",
+    "register_scenario", "scenario", "step_rate",
 ]

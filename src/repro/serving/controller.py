@@ -22,10 +22,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from ..core.estimator import BatchSizeEstimator, EstimatorConfig
 from ..core.knapsack import PackratConfig, PackratOptimizer
-from ..core.reconfig import ActivePassiveController, needs_active_passive
+from ..core.reconfig import (ActivePassiveController, Phase,
+                             needs_active_passive)
 from .allocator import ResourceAllocator
 from .dispatcher import Dispatcher, DispatcherConfig
 from .instance import LatencyBackend, WorkerInstance
+from .policy import make_policy
 from .simulator import EventLoop, Request, Response
 
 
@@ -37,6 +39,7 @@ class ControllerConfig:
     worker_spawn_time: float = 0.600      # per-worker start+load cost (§5.3.2)
     worker_respawn_time: float = 0.600
     drain_time: float = 0.250
+    dispatch_policy: str = "sync"         # "sync" (paper) or "continuous"
 
 
 class PackratServer:
@@ -58,15 +61,21 @@ class PackratServer:
         self.reconfig_log: List[Tuple[float, int, PackratConfig]] = []
         self._next_worker_id = 0
         self._placements: Dict[int, list] = {}
+        self._workers_by_cfg: Dict[int, List[WorkerInstance]] = {}
+        self._pending_workers: Optional[List[WorkerInstance]] = None
+        self._deferred_batch: Optional[int] = None
+        self._draining_cfg: Optional[PackratConfig] = None
+        self.workers_ever: List[WorkerInstance] = []   # for metrics reports
 
         first = self.optimizer.solve(total_units, initial_batch)
         self.apc = ActivePassiveController(
-            spawn_cost=self._spawn_cost, drain_cost=lambda c: self.ccfg.drain_time,
+            spawn_cost=self._spawn_cost, drain_cost=self._drain_cost,
             on_swap=self._on_swap)
         self.apc.start(first, now=loop.now)
         workers = self._spawn_workers(first)
         self.dispatcher = Dispatcher(loop, first, workers,
-                                     self._on_response, self.ccfg.dispatcher)
+                                     self._on_response, self.ccfg.dispatcher,
+                                     policy=make_policy(self.ccfg.dispatch_policy))
         self.reconfig_log.append((loop.now, initial_batch, first))
         self._schedule_tick()
 
@@ -79,21 +88,35 @@ class PackratServer:
         return self.ccfg.worker_spawn_time * max(
             1.0, 1.0 + 0.1 * config.n_instances)
 
+    def _drain_cost(self, config: PackratConfig) -> float:
+        # under continuous dispatch the outgoing instance set may still
+        # hold queued work in per-instance queues — drain waits on that,
+        # not just on busy_until (extra is 0 for batch-sync)
+        extra = 0.0
+        dispatcher = getattr(self, "dispatcher", None)
+        if dispatcher is not None:
+            extra = dispatcher.estimated_extra_drain(self.loop.now)
+        return self.ccfg.drain_time + extra
+
     def _spawn_workers(self, config: PackratConfig) -> List[WorkerInstance]:
         placements = self.allocator.allocate(config)
         workers = []
         for p in placements:
             w = WorkerInstance(p.instance_id, p.threads, p.batch,
-                               self.backend, units=p.units)
-            w.busy_until = self.loop.now
+                               self.backend, units=p.units,
+                               spawned_at=self.loop.now)
             workers.append(w)
         self._placements[id(config)] = placements
+        self._workers_by_cfg[id(config)] = workers
+        self.workers_ever.extend(workers)
         return workers
 
     def _release_workers(self, config: PackratConfig) -> None:
         placements = self._placements.pop(id(config), None)
         if placements:
             self.allocator.release(placements)
+        for w in self._workers_by_cfg.pop(id(config), ()):
+            w.released_at = self.loop.now   # bounds utilization accounting
 
     # ------------------------------------------------------------------ #
     # request/response path
@@ -111,9 +134,20 @@ class PackratServer:
         self.loop.schedule(self.ccfg.tick_interval, self._tick)
 
     def _tick(self) -> None:
-        self.estimator.observe(self.dispatcher.take_queue_highwater())
+        self.estimator.observe(self.dispatcher.take_signal())
         self.apc.tick(self.loop.now)
-        if self.apc.phase.value == "stable":
+        if self.apc.phase is Phase.STABLE:
+            # the drained set is released on the APC's own transition to
+            # STABLE (never from a pre-computed completion estimate, which
+            # can lag it when drain cost is re-evaluated over a different
+            # instance set) so a follow-up reconfigure can always allocate
+            if self._draining_cfg is not None:
+                self._release_workers(self._draining_cfg)
+                self._draining_cfg = None
+            if self._deferred_batch is not None:
+                deferred, self._deferred_batch = self._deferred_batch, None
+                self.reconfigure(deferred)
+        if self.apc.phase is Phase.STABLE:
             new_b = self.estimator.should_reconfigure(self.loop.now)
             if new_b is not None:
                 self.reconfigure(new_b)
@@ -127,7 +161,16 @@ class PackratServer:
         the largest servable batch T×b_max) is halved until feasible —
         the largest feasible batch is also the throughput-optimal
         response to overload.
+
+        A reconfiguration requested while a transition is already in
+        flight is *deferred* (latest request wins, applied on the next
+        stable tick) — spawning a second passive set mid-swap would
+        clobber ``_pending_workers`` and strand the first passive set's
+        allocator units.
         """
+        if self.apc.phase is not Phase.STABLE:
+            self._deferred_batch = new_batch
+            return
         new_cfg = None
         while new_batch >= 1:
             try:
@@ -151,18 +194,13 @@ class PackratServer:
             self.reconfig_log.append((self.loop.now, new_batch, new_cfg))
             return
         # paper case 2: thread counts change — spawn the passive set now
-        # (resources oversubscribe transiently), swap when ready.
+        # (resources oversubscribe transiently), swap when ready; the old
+        # set is released when the APC finishes draining (see _tick).
         new_workers = self._spawn_workers(new_cfg)
-        done = self.apc.request_reconfig(new_cfg, self.loop.now)
+        self.apc.request_reconfig(new_cfg, self.loop.now)
         self.reconfig_log.append((self.loop.now, new_batch, new_cfg))
-
-        def finish_swap(old_cfg=old_cfg):
-            # swap happened inside apc.tick via on_swap; drain old set
-            if old_cfg is not None:
-                self._release_workers(old_cfg)
-
         self._pending_workers = new_workers
-        self.loop.at(done, finish_swap)
+        self._draining_cfg = old_cfg
 
     def _on_swap(self, new_cfg: PackratConfig) -> None:
         self.dispatcher.set_config(new_cfg, self._pending_workers)
@@ -178,10 +216,17 @@ class PackratServer:
 
     def _check_workers(self) -> None:
         """Heartbeat: respawn dead workers (TorchServe §4 behaviour)."""
+
+        def respawn(w):
+            if not w.failed:
+                return   # an earlier heartbeat's respawn already landed
+            w.respawn(self.loop.now)
+            self.dispatcher.notify_respawn(w)
+
         for w in self.dispatcher.instances:
             if w.failed:
                 self.loop.schedule(self.ccfg.worker_respawn_time,
-                                   lambda w=w: w.respawn(self.loop.now))
+                                   lambda w=w: respawn(w))
 
     # ------------------------------------------------------------------ #
     # elastic scaling (beyond paper; DESIGN.md §2)
@@ -193,13 +238,15 @@ class PackratServer:
                                            min(self.allocator.domain_size,
                                                new_total_units))
         self._placements.clear()
-        if self.apc.phase.value == "stable":
+        if self.apc.phase is Phase.STABLE:
             cfg = self.optimizer.solve(new_total_units,
                                        self.estimator.current_batch)
             if cfg.groups != (self.apc.active.groups
                               if self.apc.active else None):
+                old_cfg = self.apc.active
                 new_workers = self._spawn_workers(cfg)
                 self._pending_workers = new_workers
                 self.apc.request_reconfig(cfg, self.loop.now)
                 self.reconfig_log.append(
                     (self.loop.now, self.estimator.current_batch, cfg))
+                self._draining_cfg = old_cfg

@@ -1,16 +1,18 @@
-"""Dispatcher (paper §3.5): batch aggregation + batch partitioning.
+"""Dispatch router (paper §3.5): queueing, execution, fault handling.
 
-Aggregates incoming requests up to the configured batch size ``B`` with
-a user-provided batch timeout (a partial batch is dispatched when the
-timeout expires — §2, §3.5), then *partitions* each aggregate batch
-across instances according to the active ⟨i,t,b⟩ configuration (each
-instance of group j receives b_j items).
+The dispatcher owns the *mechanics* of serving — the central arrival
+queue, sub-batch execution on workers, straggler watchdogs, duplicate
+suppression, and completed-id retirement — while the *decision* of when
+work moves and which instance runs it lives in a pluggable
+:class:`~repro.serving.policy.DispatchPolicy`:
 
-Dispatch is batch-synchronous, matching the paper's execution model
-("process a batch of requests to completion up to some batch size B",
-§6): a new aggregate batch is issued when the previous one's instances
-are idle, so request backlog is visible in the dispatcher queue — which
-is exactly the signal the Batch Size Estimator tracks (§3.8).
+* ``BatchSyncPolicy`` (default) — the paper's batch-synchronous model:
+  aggregate up to ``B`` with a user-provided batch timeout (§2, §3.5),
+  partition each aggregate batch per the active ⟨i,t,b⟩ configuration,
+  and barrier on the instance set ("process a batch of requests to
+  completion up to some batch size B", §6).
+* ``ContinuousPolicy`` — per-instance bounded queues; any instance is
+  fed a ≤ b_j sub-batch the moment it goes idle (no barrier).
 
 Beyond-paper fault tolerance (needed at cluster scale):
 * straggler re-dispatch — a sub-batch that has not completed by
@@ -24,11 +26,11 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 from ..core.knapsack import PackratConfig
 from .instance import WorkerInstance
+from .policy import BatchSyncPolicy, DispatchPolicy
 from .simulator import EventLoop, Request, Response
 
 
@@ -40,26 +42,28 @@ class DispatcherConfig:
 
 
 class Dispatcher:
-    """Routes aggregate batches onto the active instance set."""
+    """Routes requests onto the active instance set via a dispatch policy."""
 
     def __init__(self, loop: EventLoop, config: PackratConfig,
                  instances: Sequence[WorkerInstance],
                  on_response: Callable[[Response], None],
-                 dcfg: Optional[DispatcherConfig] = None) -> None:
+                 dcfg: Optional[DispatcherConfig] = None,
+                 policy: Optional[DispatchPolicy] = None) -> None:
         self.loop = loop
         self.dcfg = dcfg or DispatcherConfig()
         self.on_response = on_response
         self.queue: Deque[Request] = collections.deque()
         self.batch_size = 0
         self.instances: List[WorkerInstance] = []
-        self._timeout_armed = False
-        self._wakeup_armed = False
         self._done_requests: set = set()
-        self._batch_seq = itertools.count()
+        self._retire_at: Dict[int, float] = {}
+        self._deferred_ids: set = set()   # awaiting a live worker
         self._queue_highwater = 0
         self.timeouts_fired = 0
         self.redispatches = 0
         self.batches_dispatched = 0
+        self.policy = policy or BatchSyncPolicy()
+        self.policy.bind(self)
         self.set_config(config, instances)
 
     # ------------------------------------------------------------------ #
@@ -67,105 +71,43 @@ class Dispatcher:
     # ------------------------------------------------------------------ #
     def set_config(self, config: PackratConfig,
                    instances: Sequence[WorkerInstance]) -> None:
+        old = self.instances
         self.config = config
         self.instances = list(instances)
         self.batch_size = config.total_batch
-        self._try_dispatch()
+        self.policy.on_config_change(old)
 
     # ------------------------------------------------------------------ #
     # request path
     # ------------------------------------------------------------------ #
     def on_request(self, req: Request) -> None:
         self.queue.append(req)
-        if len(self.queue) >= self.batch_size:
-            self._try_dispatch()
-        elif not self._timeout_armed:
-            self._timeout_armed = True
-            self.loop.at(self.loop.now + self.dcfg.batch_timeout,
-                         self._on_timeout)
+        self.policy.on_arrival(req)
 
     @property
     def queue_depth(self) -> int:
-        return len(self.queue)
+        """Undispatched requests: central queue + per-instance queues."""
+        return len(self.queue) + self.policy.queued_in_instances()
 
-    def take_queue_highwater(self) -> int:
-        """The estimator's Q̂: max queue depth observed *at dispatch
-        instants* since the last call (falling back to the live depth).
-        Sampling at dispatch time is the batch-synchronous analogue of
-        the paper's queue-depth tracking — fixed-tick sampling would
-        undersample a queue that drains exactly at B each batch.
-        """
-        hw = max(self._queue_highwater, len(self.queue))
-        self._queue_highwater = len(self.queue)
-        return hw
+    def take_signal(self) -> float:
+        """The estimator's Q̂ for this tick — policy-defined (§3.8)."""
+        return self.policy.take_signal(self.loop.now)
 
-    def _on_timeout(self) -> None:
-        self._timeout_armed = False
-        if self.queue:
-            self.timeouts_fired += 1
-            self._try_dispatch(force_partial=True)
-            if self.queue and not self._timeout_armed:
-                self._timeout_armed = True
-                self.loop.at(self.loop.now + self.dcfg.batch_timeout,
-                             self._on_timeout)
+    # back-compat name from the pre-policy dispatcher
+    take_queue_highwater = take_signal
 
-    def _wakeup_at(self, t: float) -> None:
-        if not self._wakeup_armed:
-            self._wakeup_armed = True
+    def notify_respawn(self, worker: WorkerInstance) -> None:
+        self.policy.on_respawn(worker)
 
-            def wake():
-                self._wakeup_armed = False
-                self._try_dispatch()
-
-            self.loop.at(max(t, self.loop.now), wake)
+    def estimated_extra_drain(self, now: float) -> float:
+        """Extra drain time for queued per-instance work (0 for sync)."""
+        return self.policy.extra_drain(now)
 
     # ------------------------------------------------------------------ #
-    # batching + partitioning
+    # execution (shared by all policies)
     # ------------------------------------------------------------------ #
     def _live(self) -> List[WorkerInstance]:
         return [w for w in self.instances if not w.failed]
-
-    def _try_dispatch(self, force_partial: bool = False) -> None:
-        """Issue the next aggregate batch if instances are free.
-
-        Dispatches when (queue ≥ B) or (timeout expired with a partial
-        batch), and the active instance set is idle.  Otherwise arms a
-        wake-up at the earliest instance completion.
-        """
-        while self.queue:
-            live = self._live()
-            if not live:
-                self._wakeup_at(self.loop.now + self.dcfg.batch_timeout)
-                return
-            if len(self.queue) < self.batch_size and not force_partial:
-                return
-            busy = [w for w in live if not w.is_idle(self.loop.now)]
-            if busy:
-                self._wakeup_at(min(w.busy_until for w in busy))
-                return
-            self._queue_highwater = max(self._queue_highwater,
-                                        len(self.queue))
-            n = min(len(self.queue), self.batch_size)
-            items = [self.queue.popleft() for _ in range(n)]
-            self._partition_and_submit(items)
-            self.batches_dispatched += 1
-            force_partial = False
-
-    def _partition_and_submit(self, items: List[Request]) -> None:
-        """Split one aggregate batch across instances per the ⟨i,t,b⟩ config."""
-        cursor = 0
-        for group in self.config.groups:
-            for _ in range(group.i):
-                if cursor >= len(items):
-                    return
-                sub = items[cursor:cursor + group.b]
-                cursor += group.b
-                self._submit(sub, group.t, redispatch=0)
-        while cursor < len(items):   # oversized leftovers → group-0 slices
-            group = self.config.groups[0]
-            sub = items[cursor:cursor + group.b]
-            cursor += group.b
-            self._submit(sub, group.t, redispatch=0)
 
     def _pick_instance(self, threads: int) -> Optional[WorkerInstance]:
         """Least-loaded live instance, preferring the matching thread count."""
@@ -178,36 +120,79 @@ class Dispatcher:
                 ) -> None:
         worker = self._pick_instance(threads)
         if worker is None:
+            # no live worker: retry after a timeout.  The ids are marked
+            # deferred so retirement doesn't count them abandoned while
+            # this retry loop still owns a deliverable copy.
+            self._deferred_ids.update(r.id for r in sub)
             self.loop.schedule(self.dcfg.batch_timeout,
                                lambda: self._submit(sub, threads, redispatch))
             return
+        self._deferred_ids.difference_update(r.id for r in sub)
+        self._execute(worker, sub, threads, redispatch)
+
+    def _execute(self, worker: WorkerInstance, sub: List[Request],
+                 threads: int, redispatch: int) -> None:
+        """Run one sub-batch on ``worker``: schedules the completion
+        callback plus a watchdog that re-dispatches stragglers and
+        retires completed ids once no copy can still deliver them."""
         n_live = len(self._live())
         done_t = worker.process(len(sub), self.loop.now,
                                 n_live_instances=n_live)
         expected = done_t - self.loop.now
+        deadline = self.loop.now + expected * self.dcfg.straggler_factor
+        for r in sub:
+            self._retire_at[r.id] = max(self._retire_at.get(r.id, 0.0),
+                                        deadline)
 
-        def complete(worker=worker, sub=sub):
+        def complete(worker=worker, sub=sub, redispatch=redispatch):
             if worker.failed:
                 return  # the watchdog below re-dispatches
+            delivered = 0
             for r in sub:
                 if r.id in self._done_requests:
                     continue
                 self._done_requests.add(r.id)
+                delivered += 1
                 self.on_response(Response(
                     request=r, completion=self.loop.now,
                     batch_size=len(sub), instance_id=worker.id,
                     redispatched=redispatch > 0))
-            self._try_dispatch()
+            self.policy.on_batch_done(worker, delivered)
 
         self.loop.at(done_t, complete)
 
-        if redispatch < self.dcfg.max_redispatch:
-            deadline = self.loop.now + expected * self.dcfg.straggler_factor
-
-            def watchdog(sub=sub, threads=threads, redispatch=redispatch):
-                missing = [r for r in sub if r.id not in self._done_requests]
+        def watchdog(sub=sub, threads=threads, redispatch=redispatch):
+            if redispatch < self.dcfg.max_redispatch:
+                missing = [r for r in sub
+                           if r.id not in self._done_requests]
                 if missing:
                     self.redispatches += 1
                     self._submit(missing, threads, redispatch + 1)
+            self._retire(sub)
 
-            self.loop.at(deadline, watchdog)
+        self.loop.at(deadline, watchdog)
+
+    def _retire(self, sub: List[Request]) -> None:
+        """Prune completed ids whose last watchdog deadline has passed.
+
+        Every delivery attempt for a request fires no later than its
+        submission's watchdog deadline (completion is scheduled at
+        ``done_t`` < deadline, and a failed worker's completion never
+        delivers), so once the *latest* deadline across all copies is in
+        the past the id can no longer be double-delivered — dropping it
+        bounds ``_done_requests`` at millions of requests.
+        """
+        now = self.loop.now + 1e-12
+        abandoned = 0
+        for r in sub:
+            if self._retire_at.get(r.id, 0.0) <= now:
+                # undelivered ids (watchdog exhausted on dead workers) are
+                # dropped too — a later deferred re-submit re-registers them
+                if (r.id in self._retire_at
+                        and r.id not in self._done_requests
+                        and r.id not in self._deferred_ids):
+                    abandoned += 1
+                self._retire_at.pop(r.id, None)
+                self._done_requests.discard(r.id)
+        if abandoned:
+            self.policy.on_abandoned(abandoned)

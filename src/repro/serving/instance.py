@@ -18,12 +18,14 @@ stuck on failed/slow instances.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Dict, Mapping, Optional, Tuple
+from typing import Callable, Deque, Dict, Mapping, Optional, Tuple
 
 from ..core.interference import CPUInterferenceModel, TPUInterferenceModel
 from ..core.knapsack import PackratConfig
+from .metrics import log2_ms_bucket
 
 
 class LatencyBackend:
@@ -119,25 +121,54 @@ class WorkerStats:
     batches: int = 0
     items: int = 0
     busy_time: float = 0.0
+    idle_time: float = 0.0
     failures: int = 0
 
 
 class WorkerInstance:
-    """One model instance pinned to `threads` units, serving batches ≤ b."""
+    """One model instance pinned to `threads` units, serving batches ≤ b.
+
+    Each worker *owns* a bounded work queue (``queue``): under the
+    continuous dispatch policy, the router moves requests into it and
+    the worker is fed a ≤ b sub-batch the moment it goes idle.  The
+    batch-synchronous policy leaves it empty.  Idle gaps (time between
+    becoming free and starting the next batch) are recorded so the
+    per-instance utilization win of continuous dispatch is measurable.
+    """
 
     def __init__(self, instance_id: int, threads: int, batch: int,
-                 backend: LatencyBackend, *, units: Tuple[int, ...] = ()):
+                 backend: LatencyBackend, *, units: Tuple[int, ...] = (),
+                 spawned_at: float = 0.0):
         self.id = instance_id
         self.threads = threads
         self.batch = batch
         self.backend = backend
         self.units = units
-        self.busy_until = 0.0
+        self.spawned_at = spawned_at
+        self.released_at: Optional[float] = None  # set when swapped out
+        self.busy_until = spawned_at
         self.failed = False
         self.stats = WorkerStats()
+        self.queue: Deque = collections.deque()   # per-instance work queue
+        self.coalesce_armed = False               # continuous-policy timer
+        # idle gaps as log₂-ms bucket counts: O(1) memory at any run length
+        self.idle_gap_buckets: Dict[int, int] = {}
 
     def is_idle(self, now: float) -> bool:
         return not self.failed and self.busy_until <= now
+
+    def utilization(self, now: float) -> float:
+        """Fraction of this worker's *active* lifetime spent executing
+        batches.  Swapped-out instances stop accruing lifetime once
+        released and drained (a release mid-batch still counts the
+        in-flight work's runtime), so utilization is not diluted by the
+        rest of the run."""
+        if self.released_at is None:
+            end = now
+        else:
+            end = min(now, max(self.released_at, self.busy_until))
+        alive = end - self.spawned_at
+        return self.stats.busy_time / alive if alive > 0 else 0.0
 
     def process(self, n_items: int, now: float, *,
                 n_live_instances: int = 1, total_units: int = 0) -> float:
@@ -148,6 +179,11 @@ class WorkerInstance:
             self.threads, max(1, n_items),
             n_live_instances=n_live_instances, total_units=total_units)
         start = max(now, self.busy_until)
+        gap = start - self.busy_until
+        if gap > 0:
+            self.stats.idle_time += gap
+            k = log2_ms_bucket(gap)
+            self.idle_gap_buckets[k] = self.idle_gap_buckets.get(k, 0) + 1
         self.busy_until = start + lat
         self.stats.batches += 1
         self.stats.items += n_items

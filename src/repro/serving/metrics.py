@@ -42,6 +42,60 @@ class LatencyBucket:
     count: int
 
 
+def log2_ms_bucket(value_s: float) -> int:
+    """Bucket index of a duration (seconds) in the log₂-ms scheme."""
+    ms = value_s * 1e3
+    return 0 if ms < 1.0 else int(math.floor(math.log2(ms))) + 1
+
+
+def buckets_to_histogram(buckets: Dict[int, int]) -> List[LatencyBucket]:
+    """Materialize {bucket index: count} into ordered LatencyBuckets."""
+    out = []
+    for k in sorted(buckets):
+        lo = 0.0 if k == 0 else 2.0 ** (k - 1)
+        out.append(LatencyBucket(lo_ms=lo, hi_ms=2.0 ** k, count=buckets[k]))
+    return out
+
+
+def log2_ms_histogram(values_s: Sequence[float]) -> List[LatencyBucket]:
+    """Log₂ millisecond buckets from 1 ms up, covering every sample."""
+    buckets: Dict[int, int] = {}
+    for v in values_s:
+        k = log2_ms_bucket(v)
+        buckets[k] = buckets.get(k, 0) + 1
+    return buckets_to_histogram(buckets)
+
+
+def instance_report(workers, now: float) -> List[Dict[str, object]]:
+    """Per-instance utilization + idle-gap summary (JSON-serializable).
+
+    ``workers`` is any iterable of :class:`WorkerInstance` — e.g. a
+    ``PackratServer.workers_ever`` log, so swapped-out instance sets are
+    included.  The idle-gap histogram is what makes the dispatch-policy
+    comparison measurable: batch-synchronous dispatch barriers the whole
+    set on the slowest sub-batch, which shows up as wide idle gaps on
+    thin instances; continuous dispatch collapses them.
+    """
+    out = []
+    for w in sorted(workers, key=lambda w: w.id):
+        out.append({
+            "id": w.id,
+            "threads": w.threads,
+            "batch": w.batch,
+            "batches": w.stats.batches,
+            "items": w.stats.items,
+            "busy_time_s": w.stats.busy_time,
+            "idle_time_s": w.stats.idle_time,
+            "utilization": w.utilization(now),
+            "failures": w.stats.failures,
+            "idle_gap_hist": [
+                {"lo_ms": b.lo_ms, "hi_ms": b.hi_ms, "count": b.count}
+                for b in buckets_to_histogram(w.idle_gap_buckets)
+            ],
+        })
+    return out
+
+
 class MetricsCollector:
     """Per-request latency + SLO accounting for one serving run."""
 
@@ -143,19 +197,7 @@ class MetricsCollector:
 
     def histogram(self) -> List[LatencyBucket]:
         """Log₂ latency buckets from 1 ms up, covering every sample."""
-        if not self.latencies:
-            return []
-        buckets: Dict[int, int] = {}
-        for lat in self.latencies:
-            ms = lat * 1e3
-            k = 0 if ms < 1.0 else int(math.floor(math.log2(ms))) + 1
-            buckets[k] = buckets.get(k, 0) + 1
-        out = []
-        for k in sorted(buckets):
-            lo = 0.0 if k == 0 else 2.0 ** (k - 1)
-            out.append(LatencyBucket(lo_ms=lo, hi_ms=2.0 ** k,
-                                     count=buckets[k]))
-        return out
+        return log2_ms_histogram(self.latencies)
 
     # ------------------------------------------------------------------ #
     def report(self, *, duration: float) -> Dict[str, object]:
@@ -192,4 +234,5 @@ class MetricsCollector:
         return rep
 
 
-__all__ = ["LatencyBucket", "MetricsCollector", "nearest_rank"]
+__all__ = ["LatencyBucket", "MetricsCollector", "instance_report",
+           "log2_ms_histogram", "nearest_rank"]

@@ -147,6 +147,16 @@ def _ramp(ctx: ScenarioContext) -> Workload:
                         t0=0.0, t1=ctx.duration)
 
 
+@scenario("choppy",
+          "fast on/off MMPP (~15 bursts/run): stresses dispatch "
+          "granularity — instance-set barriers leave thin instances idle")
+def _choppy(ctx: ScenarioContext) -> Workload:
+    lo = 0.25 * ctx.capacity_rps(8)
+    hi = 0.9 * ctx.capacity_rps(64)
+    return MMPPWorkload(rates=(lo, hi),
+                        mean_dwell=(ctx.duration / 10.0, ctx.duration / 20.0))
+
+
 @scenario("flash-crowd",
           "trace replay: quiet Poisson interrupted by a 10x flash crowd "
           "for 15% of the run (exercises the trace pipeline)")

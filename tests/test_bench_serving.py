@@ -11,8 +11,8 @@ from repro.serving.scenarios import (ScenarioContext, get_scenario,
                                      list_scenarios, register_scenario)
 from repro.serving.workloads import PoissonWorkload, TraceWorkload
 
-EXPECTED_SCENARIOS = {"steady-poisson", "bursty", "diurnal", "step-up",
-                      "step-down", "ramp", "flash-crowd"}
+EXPECTED_SCENARIOS = {"steady-poisson", "bursty", "choppy", "diurnal",
+                      "step-up", "step-down", "ramp", "flash-crowd"}
 
 
 def small_ctx(duration=12.0, units=8, seed=0):
@@ -85,6 +85,27 @@ def test_run_scenario_reports_both_policies():
 def test_run_scenario_is_deterministic():
     a = bench_serving.run_scenario(get_scenario("bursty"), **RUN_KW)
     b = bench_serving.run_scenario(get_scenario("bursty"), **RUN_KW)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_run_scenario_dispatch_axis():
+    """dispatches=("sync", "continuous") adds +continuous report keys
+    (sync keeps the bare policy names) and stays deterministic."""
+    kw = dict(RUN_KW, dispatches=("sync", "continuous"))
+    a = bench_serving.run_scenario(get_scenario("bursty"), **kw)
+    assert a["policies"] == ["static", "static+continuous",
+                             "packrat", "packrat+continuous"]
+    for key in a["policies"]:
+        rep = a[key]
+        assert rep["latency_ms"]["p95"] is not None
+        assert rep["dispatch"] == ("continuous" if "+" in key else "sync")
+        assert rep["instances"], f"no per-instance stats for {key}"
+    # the sync keys are the same runs the single-axis report produces
+    sync_only = bench_serving.run_scenario(get_scenario("bursty"), **RUN_KW)
+    for key in ("static", "packrat"):
+        assert (json.dumps(a[key], sort_keys=True)
+                == json.dumps(sync_only[key], sort_keys=True))
+    b = bench_serving.run_scenario(get_scenario("bursty"), **kw)
     assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
 
 

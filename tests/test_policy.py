@@ -1,0 +1,510 @@
+"""Dispatch-policy tests (ISSUE 2).
+
+* ``BatchSyncPolicy`` must be *indistinguishable* from the pre-refactor
+  monolithic dispatcher: a verbatim copy of that dispatcher
+  (``LegacyDispatcher``, from commit 29c2308) is raced against the
+  policy-based router on hypothesis-generated seeded traces, and a full
+  controller run is pinned against a golden timeline hash captured
+  before the refactor.
+* ``ContinuousPolicy`` engine behaviour: per-instance feeding without
+  the instance-set barrier, queue draining across reconfigurations,
+  straggler re-dispatch, failure/respawn.
+* Satellite fixes: completed-id retirement, reconfigure-overlap guard,
+  best-fit leftover partitioning.
+"""
+
+import collections
+import hashlib
+import itertools
+import json
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.knapsack import InstanceGroup, PackratConfig
+from repro.core.paper_profiles import INCEPTION_V3, RESNET50
+from repro.serving import (ControllerConfig, EventLoop, PackratServer,
+                           Request, Response, TabulatedBackend,
+                           WorkerInstance, make_policy)
+from repro.serving.dispatcher import Dispatcher, DispatcherConfig
+from repro.serving.workloads import MMPPWorkload, PoissonWorkload
+
+
+# --------------------------------------------------------------------- #
+# verbatim pre-refactor dispatcher (commit 29c2308) — the test oracle
+# --------------------------------------------------------------------- #
+class LegacyDispatcher:
+    """The monolithic batch-synchronous dispatcher before the policy
+    refactor, kept verbatim as an equivalence oracle."""
+
+    def __init__(self, loop, config, instances, on_response, dcfg=None):
+        self.loop = loop
+        self.dcfg = dcfg or DispatcherConfig()
+        self.on_response = on_response
+        self.queue = collections.deque()
+        self.batch_size = 0
+        self.instances = []
+        self._timeout_armed = False
+        self._wakeup_armed = False
+        self._done_requests = set()
+        self._batch_seq = itertools.count()
+        self._queue_highwater = 0
+        self.timeouts_fired = 0
+        self.redispatches = 0
+        self.batches_dispatched = 0
+        self.set_config(config, instances)
+
+    def set_config(self, config, instances):
+        self.config = config
+        self.instances = list(instances)
+        self.batch_size = config.total_batch
+        self._try_dispatch()
+
+    def on_request(self, req):
+        self.queue.append(req)
+        if len(self.queue) >= self.batch_size:
+            self._try_dispatch()
+        elif not self._timeout_armed:
+            self._timeout_armed = True
+            self.loop.at(self.loop.now + self.dcfg.batch_timeout,
+                         self._on_timeout)
+
+    def _on_timeout(self):
+        self._timeout_armed = False
+        if self.queue:
+            self.timeouts_fired += 1
+            self._try_dispatch(force_partial=True)
+            if self.queue and not self._timeout_armed:
+                self._timeout_armed = True
+                self.loop.at(self.loop.now + self.dcfg.batch_timeout,
+                             self._on_timeout)
+
+    def _wakeup_at(self, t):
+        if not self._wakeup_armed:
+            self._wakeup_armed = True
+
+            def wake():
+                self._wakeup_armed = False
+                self._try_dispatch()
+
+            self.loop.at(max(t, self.loop.now), wake)
+
+    def _live(self):
+        return [w for w in self.instances if not w.failed]
+
+    def _try_dispatch(self, force_partial=False):
+        while self.queue:
+            live = self._live()
+            if not live:
+                self._wakeup_at(self.loop.now + self.dcfg.batch_timeout)
+                return
+            if len(self.queue) < self.batch_size and not force_partial:
+                return
+            busy = [w for w in live if not w.is_idle(self.loop.now)]
+            if busy:
+                self._wakeup_at(min(w.busy_until for w in busy))
+                return
+            self._queue_highwater = max(self._queue_highwater,
+                                        len(self.queue))
+            n = min(len(self.queue), self.batch_size)
+            items = [self.queue.popleft() for _ in range(n)]
+            self._partition_and_submit(items)
+            self.batches_dispatched += 1
+            force_partial = False
+
+    def _partition_and_submit(self, items):
+        cursor = 0
+        for group in self.config.groups:
+            for _ in range(group.i):
+                if cursor >= len(items):
+                    return
+                sub = items[cursor:cursor + group.b]
+                cursor += group.b
+                self._submit(sub, group.t, redispatch=0)
+        while cursor < len(items):
+            group = self.config.groups[0]
+            sub = items[cursor:cursor + group.b]
+            cursor += group.b
+            self._submit(sub, group.t, redispatch=0)
+
+    def _pick_instance(self, threads):
+        live = [w for w in self._live() if w.threads == threads] or self._live()
+        if not live:
+            return None
+        return min(live, key=lambda w: w.busy_until)
+
+    def _submit(self, sub, threads, redispatch):
+        worker = self._pick_instance(threads)
+        if worker is None:
+            self.loop.schedule(self.dcfg.batch_timeout,
+                               lambda: self._submit(sub, threads, redispatch))
+            return
+        n_live = len(self._live())
+        done_t = worker.process(len(sub), self.loop.now,
+                                n_live_instances=n_live)
+        expected = done_t - self.loop.now
+
+        def complete(worker=worker, sub=sub):
+            if worker.failed:
+                return
+            for r in sub:
+                if r.id in self._done_requests:
+                    continue
+                self._done_requests.add(r.id)
+                self.on_response(Response(
+                    request=r, completion=self.loop.now,
+                    batch_size=len(sub), instance_id=worker.id,
+                    redispatched=redispatch > 0))
+            self._try_dispatch()
+
+        self.loop.at(done_t, complete)
+
+        if redispatch < self.dcfg.max_redispatch:
+            deadline = self.loop.now + expected * self.dcfg.straggler_factor
+
+            def watchdog(sub=sub, threads=threads, redispatch=redispatch):
+                missing = [r for r in sub if r.id not in self._done_requests]
+                if missing:
+                    self.redispatches += 1
+                    self._submit(missing, threads, redispatch + 1)
+
+            self.loop.at(deadline, watchdog)
+
+
+PROFILE = RESNET50.profile(16, 64)
+TWO_GROUP_CONFIG = PackratConfig(
+    groups=(InstanceGroup(2, 4, 8), InstanceGroup(1, 8, 16)),
+    latency=PROFILE[(8, 16)])
+
+
+def _workers(config, backend):
+    return [WorkerInstance(j, g.t, g.b, backend)
+            for j, g in enumerate(
+                g for g in config.groups for _ in range(g.i))]
+
+
+def _run_dispatcher(make, arrivals, fail_at, duration=60.0):
+    loop = EventLoop()
+    responses = []
+    disp = make(loop, responses)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: disp.on_request(Request(i, t))))
+    if fail_at is not None:
+        loop.at(fail_at, lambda: disp.instances[0].fail())
+    loop.run_until(duration)
+    return [(r.request.id, r.completion, r.instance_id, r.batch_size,
+             r.redispatched) for r in responses]
+
+
+def _timeline_kwargs():
+    backend = TabulatedBackend(PROFILE)
+    return backend
+
+
+def test_sync_policy_matches_legacy_dispatcher_on_trace():
+    """Identical response timelines on one seeded bursty trace."""
+    arrivals = PoissonWorkload(rate_rps=120.0).arrivals(6.0, seed=3)
+    legacy = _run_dispatcher(
+        lambda loop, rs: LegacyDispatcher(
+            loop, TWO_GROUP_CONFIG, _workers(TWO_GROUP_CONFIG,
+                                             TabulatedBackend(PROFILE)),
+            rs.append, DispatcherConfig(batch_timeout=0.05)),
+        arrivals, fail_at=1.0)
+    routed = _run_dispatcher(
+        lambda loop, rs: Dispatcher(
+            loop, TWO_GROUP_CONFIG, _workers(TWO_GROUP_CONFIG,
+                                             TabulatedBackend(PROFILE)),
+            rs.append, DispatcherConfig(batch_timeout=0.05),
+            policy=make_policy("sync")),
+        arrivals, fail_at=1.0)
+    assert routed == legacy
+
+
+def test_sync_policy_matches_legacy_dispatcher_property():
+    """Property form: equivalence across seeds, rates and failure times."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           rate=st.floats(min_value=20.0, max_value=300.0),
+           fail_at=st.one_of(st.none(), st.floats(0.2, 4.0)))
+    def check(seed, rate, fail_at):
+        arrivals = PoissonWorkload(rate_rps=rate).arrivals(5.0, seed=seed)
+        legacy = _run_dispatcher(
+            lambda loop, rs: LegacyDispatcher(
+                loop, TWO_GROUP_CONFIG,
+                _workers(TWO_GROUP_CONFIG, TabulatedBackend(PROFILE)),
+                rs.append, DispatcherConfig(batch_timeout=0.05)),
+            arrivals, fail_at)
+        routed = _run_dispatcher(
+            lambda loop, rs: Dispatcher(
+                loop, TWO_GROUP_CONFIG,
+                _workers(TWO_GROUP_CONFIG, TabulatedBackend(PROFILE)),
+                rs.append, DispatcherConfig(batch_timeout=0.05),
+                policy=make_policy("sync")),
+            arrivals, fail_at)
+        assert routed == legacy
+
+    check()
+
+
+# --------------------------------------------------------------------- #
+# full-controller golden pin: captured from the pre-refactor code at
+# commit 29c2308 with one intentional controller fix applied (duplicate
+# heartbeat respawns no longer reset busy_until mid-batch); the
+# refactored BatchSyncPolicy stack reproduces it bit-for-bit
+# --------------------------------------------------------------------- #
+GOLDEN_SHA256 = ("161103eee6360be7571dc51ec34f33e0"
+                 "9ab35d69edb443e3d1d26c7dd2cdee51")
+
+
+def _golden_run(dispatch_policy):
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile),
+                           initial_batch=8,
+                           config=ControllerConfig(
+                               dispatch_policy=dispatch_policy))
+    cfg8 = opt.solve(16, 8)
+    wl = MMPPWorkload(rates=(0.5 * 8 / cfg8.latency, 2.5 * 8 / cfg8.latency),
+                      mean_dwell=(5.0, 2.5))
+    arrivals = wl.arrivals(30.0, seed=7)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.at(9.0, lambda: server.inject_failure(0))
+    loop.run_until(90.0)
+    return server, arrivals
+
+
+def test_sync_full_server_matches_pre_refactor_golden():
+    server, arrivals = _golden_run("sync")
+    timeline = [(r.request.id, round(r.completion, 9))
+                for r in server.responses]
+    digest = hashlib.sha256(json.dumps(timeline).encode()).hexdigest()
+    assert len(timeline) == len(arrivals) == 4789
+    assert digest == GOLDEN_SHA256
+
+
+def test_continuous_full_server_serves_everything_once():
+    server, arrivals = _golden_run("continuous")
+    ids = [r.request.id for r in server.responses]
+    assert len(ids) == len(arrivals)
+    assert len(set(ids)) == len(ids)
+    assert all(r.latency >= 0 for r in server.responses)
+
+
+# --------------------------------------------------------------------- #
+# continuous engine behaviour
+# --------------------------------------------------------------------- #
+def test_continuous_feeds_idle_instance_without_barrier():
+    """Asymmetric config ⟨1,8,8⟩+⟨1,4,8⟩ under streaming near-capacity
+    load: the t=4 instance is the straggler of every aggregate batch.
+    Batch-sync barriers the fast t=8 instance on it; continuous re-feeds
+    the fast instance the moment it goes idle, so it serves more of the
+    work and tail latency collapses."""
+    config = PackratConfig(
+        groups=(InstanceGroup(1, 8, 8), InstanceGroup(1, 4, 8)),
+        latency=PROFILE[(4, 8)])
+    assert PROFILE[(4, 8)] > PROFILE[(8, 8)]   # t=4 really is slower
+    rate = 0.95 * (8 / PROFILE[(8, 8)] + 8 / PROFILE[(4, 8)])
+    arrivals = [(i + 1) / rate for i in range(int(rate * 6))]
+    stats = {}
+    for name in ("sync", "continuous"):
+        loop = EventLoop()
+        responses = []
+        disp = Dispatcher(loop, config, _workers(config,
+                                                 TabulatedBackend(PROFILE)),
+                          responses.append,
+                          DispatcherConfig(batch_timeout=0.05),
+                          policy=make_policy(name))
+        for i, t in enumerate(arrivals):
+            loop.at(t, (lambda i=i, t=t: disp.on_request(Request(i, t))))
+        loop.run_until(60.0)
+        assert len(responses) == len(arrivals)
+        lats = sorted(r.latency for r in responses)
+        served = collections.Counter(r.instance_id for r in responses)
+        stats[name] = (sum(lats) / len(lats), served)
+    mean_sync, served_sync = stats["sync"]
+    mean_cont, served_cont = stats["continuous"]
+    assert mean_cont < mean_sync
+    # barrier-free dispatch shifts work toward the faster instance;
+    # the barrier forces an even split
+    assert served_cont[0] > served_sync[0]
+
+
+def test_continuous_reconfig_drains_per_instance_queues():
+    """A reconfiguration mid-backlog must not lose requests parked in
+    the outgoing instance set's queues."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8, cfg64 = opt.solve(16, 8), opt.solve(16, 64)
+    from repro.serving import step_rate
+    rate = step_rate(8 / cfg8.latency, 0.9 * 64 / cfg64.latency, 8.0)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile),
+                           initial_batch=8,
+                           config=ControllerConfig(
+                               dispatch_policy="continuous"))
+    from repro.serving import ArrivalProcess
+    arrivals = ArrivalProcess.uniform(rate, 30.0)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.run_until(120.0)
+    during = [(t, b) for t, b, c in server.reconfig_log if 0 < t <= 30.0]
+    assert during, "no reconfiguration under the load step"
+    ids = [r.request.id for r in server.responses]
+    assert len(ids) == len(arrivals) and len(set(ids)) == len(ids)
+
+
+def test_continuous_records_idle_gaps_and_utilization():
+    server, _ = _golden_run("continuous")
+    stats = [w for w in server.workers_ever if w.stats.batches]
+    assert stats
+    assert any(w.idle_gap_buckets for w in stats)
+    # bucket counts cover every recorded gap exactly once
+    assert all(sum(w.idle_gap_buckets.values()) <= w.stats.batches
+               for w in stats)
+    assert all(0.0 <= w.utilization(server.loop.now) <= 1.0 + 1e-9
+               for w in stats)
+    # swapped-out instance sets are stamped so utilization is measured
+    # over their active lifetime, not the whole run
+    live_ids = {id(w) for w in server.dispatcher.instances}
+    released = [w for w in server.workers_ever if id(w) not in live_ids]
+    assert released and all(w.released_at is not None for w in released)
+
+
+# --------------------------------------------------------------------- #
+# estimator signal sources
+# --------------------------------------------------------------------- #
+def test_arrival_rate_signal_tracks_constant_rate():
+    from repro.core import ArrivalRateSignal
+    sig = ArrivalRateSignal(alpha=0.5)
+    for k in range(100):
+        sig.observe(0.01 * k)          # 100 req/s
+    assert sig.rate() == pytest.approx(100.0, rel=1e-6)
+
+
+def test_arrival_rate_signal_decays_in_silence():
+    from repro.core import ArrivalRateSignal
+    sig = ArrivalRateSignal()
+    for k in range(50):
+        sig.observe(0.01 * k)
+    burst = sig.rate(now=0.5)
+    assert sig.rate(now=10.0) < burst / 10.0   # silence decays the rate
+    assert ArrivalRateSignal().rate() == 0.0   # no arrivals yet
+
+
+def test_continuous_signal_scales_estimator_up_under_backlog():
+    """The continuous policy's estimator signal must still trigger
+    scale-up when a burst builds outstanding work (the dispatch-instant
+    highwater it replaces would undersample)."""
+    server, _ = _golden_run("continuous")
+    ups = [b for t, b, c in server.reconfig_log if 0 < t and b > 8]
+    assert ups, "continuous signal never scaled the batch size up"
+
+
+# --------------------------------------------------------------------- #
+# satellite fixes
+# --------------------------------------------------------------------- #
+def test_done_requests_retired_after_watchdog_deadline():
+    """The completed-id set must not grow without bound (leak fix)."""
+    config = PackratConfig(groups=(InstanceGroup(2, 8, 8),),
+                           latency=PROFILE[(8, 8)])
+    loop = EventLoop()
+    responses = []
+    disp = Dispatcher(loop, config,
+                      _workers(config, TabulatedBackend(PROFILE)),
+                      responses.append, DispatcherConfig(batch_timeout=0.05))
+    for i in range(200):
+        loop.at(0.002 * i, lambda i=i: disp.on_request(Request(i, 0.002 * i)))
+    loop.run_until(120.0)
+    assert len(responses) == 200
+    assert not disp._done_requests       # everything retired post-deadline
+    assert not disp._retire_at
+
+
+def test_retirement_never_causes_duplicates_under_failures():
+    config = PackratConfig(groups=(InstanceGroup(2, 8, 8),),
+                           latency=PROFILE[(8, 8)])
+    loop = EventLoop()
+    responses = []
+    disp = Dispatcher(loop, config,
+                      _workers(config, TabulatedBackend(PROFILE)),
+                      responses.append, DispatcherConfig(batch_timeout=0.05))
+    for i in range(64):
+        loop.at(0.001 * i, lambda i=i: disp.on_request(Request(i, 0.001 * i)))
+    loop.at(0.01, lambda: disp.instances[0].fail())
+    loop.at(0.40, lambda: disp.instances[0].respawn(0.40))
+    loop.run_until(120.0)
+    ids = [r.request.id for r in responses]
+    assert len(set(ids)) == len(ids), "duplicate completions"
+    assert len(ids) == 64
+
+
+def test_partition_leftover_uses_best_fit_group():
+    """Oversized leftovers slice with the group whose b fits the
+    remainder, not blindly group 0's b."""
+    config = PackratConfig(
+        groups=(InstanceGroup(1, 2, 2), InstanceGroup(1, 8, 8)),
+        latency=PROFILE[(8, 8)])
+    loop = EventLoop()
+    responses = []
+    disp = Dispatcher(loop, config,
+                      _workers(config, TabulatedBackend(PROFILE)),
+                      responses.append, DispatcherConfig(batch_timeout=0.05))
+    items = [Request(i, 0.0) for i in range(14)]   # capacity 10 → 4 left over
+    disp.policy._partition_and_submit(items)
+    loop.run_until(30.0)
+    sizes = collections.Counter(r.batch_size for r in responses)
+    # 2 + 8 regular slices, one best-fit leftover slice of 4 (b=8 group),
+    # not two group-0 slices of 2
+    assert sizes == {2: 2, 8: 8, 4: 4}
+
+
+def test_reconfigure_overlap_under_continuous_backlog():
+    """The drained set is released on the APC's own STABLE transition:
+    with a time-varying drain estimate (continuous policy, deep
+    per-instance queues) a deferred reconfigure must still find
+    allocatable units instead of crashing on a third epoch."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8 = opt.solve(16, 8)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile),
+                           initial_batch=8,
+                           config=ControllerConfig(
+                               dispatch_policy="continuous"))
+    rate = 2.0 * 8 / cfg8.latency          # sustained backlog
+    arrivals = [(i + 1) / rate for i in range(int(rate * 20))]
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.at(3.0, lambda: server.reconfigure(64))
+    loop.at(3.2, lambda: server.reconfigure(8))    # overlaps the swap
+    loop.run_until(120.0)
+    ids = [r.request.id for r in server.responses]
+    assert len(ids) == len(arrivals) and len(set(ids)) == len(ids)
+    assert server.allocator.oversubscribed_units == 0
+
+
+def test_reconfigure_overlap_is_deferred_not_stranded():
+    """A reconfigure during an in-flight active-passive swap is deferred
+    to the next stable tick instead of raising/stranding units."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile), initial_batch=8)
+    loop.run_until(0.05)
+    server.reconfigure(64)
+    assert server.apc.phase.value != "stable"
+    server.reconfigure(16)          # overlapping: must defer, not raise
+    assert server._deferred_batch == 16
+    loop.run_until(30.0)
+    assert server.apc.phase.value == "stable"
+    assert server.allocator.oversubscribed_units == 0   # nothing stranded
+    assert server._deferred_batch is None

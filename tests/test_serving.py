@@ -7,9 +7,10 @@ import pytest
 from repro.core import PackratOptimizer
 from repro.core.knapsack import InstanceGroup, PackratConfig
 from repro.core.paper_profiles import INCEPTION_V3, RESNET50
-from repro.serving import (AllocationError, ArrivalProcess, ControllerConfig,
-                           EventLoop, PackratServer, Request,
-                           ResourceAllocator, TabulatedBackend, step_rate)
+from repro.serving import (AllocationError, ArrivalProcess, ContinuousPolicy,
+                           ControllerConfig, EventLoop, PackratServer,
+                           Request, ResourceAllocator, TabulatedBackend,
+                           step_rate)
 from repro.serving.dispatcher import Dispatcher, DispatcherConfig
 from repro.serving.instance import WorkerInstance
 
@@ -123,6 +124,52 @@ def test_straggler_redispatch_on_failure():
     assert len(responses) == 16           # nothing lost
     assert disp.redispatches >= 1
     assert any(r.redispatched for r in responses)
+
+
+def test_continuous_straggler_redispatch_on_failure():
+    """Straggler re-dispatch works on per-instance queues too: a failed
+    worker's in-flight sub-batch is re-issued by the watchdog."""
+    profile = RESNET50.profile(16, 64)
+    loop = EventLoop()
+    responses = []
+    config = PackratConfig(groups=(InstanceGroup(2, 8, 8),),
+                           latency=profile[(8, 8)])
+    workers = [WorkerInstance(j, g.t, g.b, TabulatedBackend(profile))
+               for j, g in enumerate(
+                   g for g in config.groups for _ in range(g.i))]
+    disp = Dispatcher(loop, config, workers, responses.append,
+                      DispatcherConfig(batch_timeout=0.05),
+                      policy=ContinuousPolicy())
+    for i in range(16):
+        loop.at(0.0, lambda i=i: disp.on_request(Request(i, 0.0)))
+    loop.at(0.001, lambda: disp.instances[0].fail())
+    loop.run_until(30.0)
+    ids = [r.request.id for r in responses]
+    assert len(ids) == 16 and len(set(ids)) == 16      # nothing lost
+    assert disp.redispatches >= 1
+    assert any(r.redispatched for r in responses)
+
+
+def test_continuous_worker_failure_respawn():
+    """Heartbeat respawn under the continuous policy: queued work moves
+    off the failed instance and every request completes exactly once."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    cfg8 = opt.solve(16, 8)
+    loop = EventLoop()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile),
+                           initial_batch=8,
+                           config=ControllerConfig(
+                               dispatch_policy="continuous"))
+    arrivals = ArrivalProcess.uniform(lambda t: 0.8 * 8 / cfg8.latency, 15.0)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.at(5.0, lambda: server.inject_failure(0))
+    loop.run_until(45.0)
+    ids = [r.request.id for r in server.responses]
+    assert len(ids) == len(arrivals) and len(set(ids)) == len(ids)
+    assert all(not w.failed for w in server.dispatcher.instances)  # respawned
 
 
 # --------------------------------------------------------------------- #
