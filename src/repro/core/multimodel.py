@@ -63,6 +63,13 @@ class ModelWorkload:
     name: str
     profile: Profile
     batch: int
+    # Optional throughput floor (req/s).  The live planner passes the
+    # per-model arrival-rate estimate λ̂_m: a share that meets the
+    # latency bound λ but cannot *sustain* the model's traffic
+    # (batch/latency < λ̂_m) is not a feasible share at all.  Since
+    # batch/latency ≥ min_rate ⇔ latency ≤ batch/min_rate, the floor is
+    # just a second latency bound and the λ-binary-search is unchanged.
+    min_rate: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,19 +82,39 @@ class ModelPlacement:
 class MultiModelAllocator:
     """Minimize the worst per-model batch latency across shared units."""
 
-    def __init__(self, workloads: Sequence[ModelWorkload]) -> None:
+    def __init__(self, workloads: Sequence[ModelWorkload], *,
+                 optimizers: Optional[Mapping[str, PackratOptimizer]] = None
+                 ) -> None:
+        """``optimizers`` optionally supplies pre-built per-model solvers
+        (must use the ≤-units relaxation) so a caller re-planning every
+        few seconds — the live multi-model controller — keeps the DP's
+        memoised ⟨T,B⟩ caches across plans instead of rebuilding them."""
         if not workloads:
             raise ValueError("no workloads")
         self.workloads = list(workloads)
-        # ≤-units relaxation makes latency monotone nonincreasing in T_m
-        self._opts = {w.name: PackratOptimizer(w.profile,
-                                               allow_unused_threads=True)
-                      for w in workloads}
+        if optimizers is not None:
+            missing = {w.name for w in workloads} - set(optimizers)
+            if missing:
+                raise ValueError(f"optimizers missing models: {sorted(missing)}")
+            self._opts = {w.name: optimizers[w.name] for w in workloads}
+        else:
+            # ≤-units relaxation makes latency monotone nonincreasing in T_m
+            self._opts = {w.name: PackratOptimizer(w.profile,
+                                                   allow_unused_threads=True)
+                          for w in workloads}
 
     def _min_units_for(self, w: ModelWorkload, lam: float, total: int
                        ) -> Optional[int]:
-        """Smallest T_m with optimal latency ≤ λ (binary search)."""
+        """Smallest T_m with optimal latency ≤ λ (binary search).
+
+        A ``min_rate`` throughput floor tightens the bound to
+        ``min(λ, batch/min_rate)`` — both constraints are monotone in
+        T_m under the ≤-units relaxation, so one search serves both.
+        """
         opt = self._opts[w.name]
+        bound = lam
+        if w.min_rate > 0.0:
+            bound = min(bound, w.batch / w.min_rate)
 
         def latency(units: int) -> float:
             try:
@@ -95,20 +122,29 @@ class MultiModelAllocator:
             except ValueError:
                 return math.inf
 
-        if latency(total) > lam:
+        if latency(total) > bound:
             return None
         lo, hi = 1, total
         while lo < hi:
             mid = (lo + hi) // 2
-            if latency(mid) <= lam:
+            if latency(mid) <= bound:
                 hi = mid
             else:
                 lo = mid + 1
         return lo
 
-    def allocate(self, total_units: int, *, iters: int = 20
+    def allocate(self, total_units: int, *, iters: int = 20,
+                 prior: Optional[Mapping[str, int]] = None
                  ) -> List[ModelPlacement]:
-        """Binary-search the makespan λ; assign leftover units greedily."""
+        """Binary-search the makespan λ; assign leftover units greedily.
+
+        ``prior`` (the live planner passes the current share map) makes
+        the leftover assignment *stability-aware*: units beyond every
+        model's λ-minimum first restore models toward their prior share
+        — so a tenant idling through a quiet spell keeps its headroom
+        instead of being stripped for a marginal latency gain elsewhere
+        — and only the remainder is distributed greedily.
+        """
         candidates = sorted({
             self._opts[w.name].solve(t, w.batch).latency
             for w in self.workloads
@@ -133,6 +169,15 @@ class MultiModelAllocator:
             share = max(1, total_units // len(self.workloads))
             best = {w.name: share for w in self.workloads}
         leftover = total_units - sum(best.values())
+        if prior:
+            for w in self.workloads:
+                if leftover <= 0:
+                    break
+                want = prior.get(w.name, 0) - best[w.name]
+                if want > 0:
+                    extra = min(want, leftover)
+                    best[w.name] += extra
+                    leftover -= extra
         placements = []
         for w in self.workloads:
             units = best[w.name]

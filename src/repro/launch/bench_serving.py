@@ -19,6 +19,27 @@ each under two dispatch policies (``serving/policy.py``):
 * ``continuous`` — per-instance queues, no instance-set barrier (report
   keys ``static+continuous``/``packrat+continuous``).
 
+With ``--models a,b[,c…]`` the benchmark switches to the **multi-model
+resource plane** (``serving/tenancy.py``): mixed-traffic scenarios
+(``mixed-steady``, ``mixed-diurnal``, ``mixed-burst``) offer each model
+tenant its own seeded trace, and the same policy axis becomes
+
+* ``static``  — even unit split, each tenant one fat instance at a
+  fixed batch, never re-planned;
+* ``packrat`` — the live planner: per-model demand estimates →
+  ``MultiModelAllocator`` re-splits units → each tenant's knapsack
+  re-solves inside its lease;
+
+with per-model p50/p95/p99 + goodput alongside the aggregate report.
+
+``--interference`` applies the paper's CPU interference model
+(§5.2.2 — licence downclock + loaded memory latency) to every simulated
+instance, reproducing the Fig. 9 expected-vs-observed gap; the report's
+``expected_latency_ms`` (the optimizer's isolated-profile makespan) can
+then be compared against observed percentiles.  ``--slo-ms`` pins an
+absolute SLO deadline and additionally reports the largest SLO-feasible
+batch per model (``solve_with_slo``).
+
 Everything is seeded and runs on the deterministic event loop, so two
 invocations with the same flags produce byte-identical JSON reports.
 
@@ -29,6 +50,8 @@ Usage:
         --model gpt2 --out report.json
     PYTHONPATH=src python -m repro.launch.bench_serving \
         --scenario bursty --dispatch continuous      # one dispatch mode only
+    PYTHONPATH=src python -m repro.launch.bench_serving \
+        --models resnet50,bert --scenario mixed-diurnal --duration 60
     PYTHONPATH=src python -m repro.launch.bench_serving --list
     PYTHONPATH=src python -m repro.launch.bench_serving \
         --trace my_trace.json --duration 120        # replay a recorded trace
@@ -38,15 +61,22 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 from typing import Dict, List, Optional, Tuple
 
+from ..core.interference import CPUInterferenceModel
 from ..core.knapsack import PackratOptimizer
+from ..core.multimodel import solve_with_slo
 from ..core.paper_profiles import PAPER_MODELS, ProfileModel
 from ..serving import (ControllerConfig, EventLoop, MetricsCollector,
-                       PackratServer, Request, TabulatedBackend,
-                       instance_report)
-from ..serving.scenarios import (Scenario, ScenarioContext, get_scenario,
+                       MultiModelServer, PackratServer, Request,
+                       TabulatedBackend, TenantSpec, instance_report)
+from ..serving.tenancy import even_shares
+from ..serving.scenarios import (MultiModelScenario,
+                                 MultiModelScenarioContext, Scenario,
+                                 ScenarioContext, get_mm_scenario,
+                                 get_scenario, list_mm_scenarios,
                                  list_scenarios)
 from ..serving.workloads import TraceWorkload
 
@@ -65,6 +95,15 @@ DRAIN_FACTOR = 1.0
 DRAIN_MIN_S = 30.0
 
 
+def _make_backend(profile, *, interference: bool, units: int
+                  ) -> TabulatedBackend:
+    """The simulated latency backend; ``--interference`` applies the
+    paper's §5.2.2 model so observed latencies exceed the optimizer's
+    isolated-profile expectation (Fig. 9)."""
+    model = CPUInterferenceModel() if interference else None
+    return TabulatedBackend(profile, interference=model, total_units=units)
+
+
 def _static_optimizer(model: ProfileModel, units: int, max_batch: int
                       ) -> PackratOptimizer:
     """An optimizer that can only produce the fat ⟨1,T,b⟩ configuration."""
@@ -77,7 +116,8 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
                units: int, duration: float, initial_batch: int,
                max_batch: int, slo_deadline: float,
                reconfigure_timeout: float,
-               dispatch: str = "sync") -> Dict[str, object]:
+               dispatch: str = "sync",
+               interference: bool = False) -> Dict[str, object]:
     """One (policy, dispatch) combination over one fixed trace → metrics."""
     if policy == "static":
         opt = _static_optimizer(model, units, max_batch)
@@ -97,8 +137,9 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
 
     loop = EventLoop()
     server = PackratServer(loop, total_units=units, optimizer=opt,
-                           backend=TabulatedBackend(model.profile(
-                               units, max_batch)),
+                           backend=_make_backend(
+                               model.profile(units, max_batch),
+                               interference=interference, units=units),
                            initial_batch=initial_batch, config=ccfg)
     metrics = MetricsCollector(slo_deadline=slo_deadline)
     drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
@@ -111,8 +152,12 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
 
     rep = metrics.report(duration=duration)
     rep["dispatch"] = dispatch
+    rep["interference"] = interference
     rep["reconfigurations"] = len(server.reconfig_log) - 1
     rep["final_config"] = str(server.reconfig_log[-1][2])
+    # the optimizer's isolated-profile makespan of the final config: the
+    # Fig. 9 "expected" line; observed percentiles include interference
+    rep["expected_latency_ms"] = server.reconfig_log[-1][2].latency * 1e3
     rep["reconfig_log"] = [
         {"t": t, "batch": b, "config": str(cfg)}
         for t, b, cfg in server.reconfig_log
@@ -126,8 +171,9 @@ def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
                  max_batch: int, slo_factor: float,
                  reconfigure_timeout: float,
                  policies: tuple = POLICIES,
-                 dispatches: Tuple[str, ...] = ("sync",)
-                 ) -> Dict[str, object]:
+                 dispatches: Tuple[str, ...] = ("sync",),
+                 interference: bool = False,
+                 slo_ms: Optional[float] = None) -> Dict[str, object]:
     """Every policy × dispatch combo on one (seeded, shared) trace."""
     opt = PackratOptimizer(model.profile(units, max_batch))
     # T instances at the largest profiled per-instance batch is the
@@ -137,9 +183,11 @@ def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
                           seed=seed, max_total_batch=units * max_batch)
     workload = sc.build(ctx)
     arrivals = workload.arrivals(duration, seed=seed)
-    # SLO: a multiple of the *optimal* latency at the initial batch —
-    # model-relative, so the deadline is equally tight for every model
-    slo = slo_factor * opt.solve(units, initial_batch).latency
+    # SLO: --slo-ms absolute, else a multiple of the *optimal* latency at
+    # the initial batch — model-relative, so the deadline is equally
+    # tight for every model
+    slo = (slo_ms * 1e-3 if slo_ms is not None
+           else slo_factor * opt.solve(units, initial_batch).latency)
     out: Dict[str, object] = {
         "scenario": sc.name,
         "description": sc.description,
@@ -149,13 +197,185 @@ def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
         "slo_deadline_ms": slo * 1e3,
         "policies": [policy_key(p, d) for p in policies for d in dispatches],
     }
+    if slo_ms is not None:
+        out["slo_feasible"] = {model.name: _slo_feasible(opt, units, slo)}
     for policy in policies:
         for dispatch in dispatches:
             out[policy_key(policy, dispatch)] = run_policy(
                 policy, arrivals, model=model, units=units,
                 duration=duration, initial_batch=initial_batch,
                 max_batch=max_batch, slo_deadline=slo,
-                reconfigure_timeout=reconfigure_timeout, dispatch=dispatch)
+                reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
+                interference=interference)
+    return out
+
+
+def _slo_feasible(opt: PackratOptimizer, units: int, slo_s: float
+                  ) -> Optional[Dict[str, object]]:
+    """Largest SLO-feasible batch summary (``solve_with_slo``), or None."""
+    got = solve_with_slo(opt, units, slo_s)
+    if got is None:
+        return None
+    batch, cfg = got
+    return {"batch": batch, "config": str(cfg),
+            "latency_ms": cfg.latency * 1e3,
+            "throughput_rps": cfg.throughput}
+
+
+# --------------------------------------------------------------------- #
+# multi-model (mixed-traffic) path
+# --------------------------------------------------------------------- #
+def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
+                          models: Dict[str, ProfileModel], units: int,
+                          duration: float, initial_batch: int,
+                          max_batch: int, slo_by_model: Dict[str, float],
+                          reconfigure_timeout: float, dispatch: str = "sync",
+                          interference: bool = False) -> Dict[str, object]:
+    """One (policy, dispatch) combination over fixed per-model traces."""
+    tenant_ids = list(models)
+    shares = even_shares(units, tenant_ids)
+    ccfg = ControllerConfig()
+    ccfg.dispatch_policy = dispatch
+    ccfg.estimator.max_batch = max_batch
+    specs: List[TenantSpec] = []
+    for tid in tenant_ids:
+        profile = models[tid].profile(units, max_batch)
+        backend = _make_backend(profile, interference=interference,
+                                units=units)
+        if policy == "static":
+            # one fat instance at the tenant's even-split share
+            fat = {(t, b): lat for (t, b), lat in profile.items()
+                   if t == shares[tid]}
+            opt = PackratOptimizer(fat)
+            batch = min(initial_batch, max_batch)
+        elif policy == "packrat":
+            opt = PackratOptimizer(profile, allow_unused_threads=True)
+            batch = initial_batch
+        else:
+            raise ValueError(f"unknown policy {policy!r}")
+        specs.append(TenantSpec(tid, profile, backend,
+                                initial_batch=batch, optimizer=opt))
+
+    loop = EventLoop()
+    server = MultiModelServer(loop, total_units=units, tenants=specs,
+                              config=ccfg, adaptive=(policy == "packrat"),
+                              plan_interval=reconfigure_timeout)
+    metrics = MetricsCollector(slo_by_model=slo_by_model)
+    drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
+    metrics.attach(server, sample_interval=min(0.25, duration / 100.0),
+                   until=duration + drain)
+    # merge the per-model traces into one deterministic arrival timeline
+    merged = sorted((t, k, tid)
+                    for k, tid in enumerate(tenant_ids)
+                    for t in traces[tid])
+    for i, (t, _, tid) in enumerate(merged):
+        req = Request(i, t, model_id=tid)
+        metrics.on_request(req)
+        loop.at(t, (lambda req=req: server.submit(req)))
+    loop.run_until(duration + drain)
+
+    rep = metrics.report(duration=duration)
+    rep["dispatch"] = dispatch
+    rep["interference"] = interference
+    rep["shares"] = server.shares()
+    rep["plans"] = len(server.plan_log) - 1
+    rep["plan_log"] = [
+        {"t": t, "shares": s, "batches": b} for t, s, b in server.plan_log]
+    worst = metrics.worst_model_p95()
+    rep["worst_model_p95_ms"] = None if math.isnan(worst) else worst * 1e3
+    rep["tenants"] = {
+        tid: {
+            "units": server.shares()[tid],
+            "reconfigurations": len(server.tenants[tid].reconfig_log) - 1,
+            "final_config": str(server.tenants[tid].reconfig_log[-1][2]),
+            "expected_latency_ms":
+                server.tenants[tid].reconfig_log[-1][2].latency * 1e3,
+            "reconfig_log": [
+                {"t": t, "batch": b, "config": str(cfg)}
+                for t, b, cfg in server.tenants[tid].reconfig_log],
+        }
+        for tid in tenant_ids
+    }
+    rep["instances"] = instance_report(server.workers_ever, loop.now)
+    return rep
+
+
+def run_mm_scenario(sc: MultiModelScenario, *,
+                    models: Dict[str, ProfileModel], units: int,
+                    duration: float, seed: int, initial_batch: int,
+                    max_batch: int, slo_factor: float,
+                    reconfigure_timeout: float,
+                    policies: tuple = POLICIES,
+                    dispatches: Tuple[str, ...] = ("sync",),
+                    interference: bool = False,
+                    slo_ms: Optional[float] = None) -> Dict[str, object]:
+    """Every policy × dispatch combo on identical per-model traces."""
+    tenant_ids = list(models)
+    shares = even_shares(units, tenant_ids)
+    contexts: Dict[str, ScenarioContext] = {}
+    for k, tid in enumerate(tenant_ids):
+        share = shares[tid]
+        opt = PackratOptimizer(models[tid].profile(share, max_batch))
+        contexts[tid] = ScenarioContext(
+            threads=share, optimizer=opt, duration=duration, seed=seed + k,
+            max_total_batch=share * max_batch)
+    mctx = MultiModelScenarioContext(models=tuple(tenant_ids),
+                                     contexts=contexts, duration=duration,
+                                     seed=seed)
+    workloads = sc.build(mctx)
+    # distinct per-tenant seed streams; identical across policies
+    traces = {tid: workloads[tid].arrivals(duration, seed=seed + 101 * k)
+              for k, tid in enumerate(tenant_ids)}
+    slo_by_model: Dict[str, float] = {}
+    for tid in tenant_ids:
+        if slo_ms is not None:
+            slo_by_model[tid] = slo_ms * 1e-3
+        else:
+            b0 = max(1, min(initial_batch, shares[tid] * max_batch))
+            slo_by_model[tid] = slo_factor * contexts[tid].optimizer.solve(
+                shares[tid], b0).latency
+    out: Dict[str, object] = {
+        "scenario": sc.name,
+        "description": sc.description,
+        "models": tenant_ids,
+        "even_shares": shares,
+        "offered": sum(len(v) for v in traces.values()),
+        "offered_by_model": {tid: len(traces[tid]) for tid in tenant_ids},
+        "slo_deadline_ms": {tid: slo_by_model[tid] * 1e3
+                            for tid in tenant_ids},
+        "policies": [policy_key(p, d) for p in policies for d in dispatches],
+    }
+    if slo_ms is not None:
+        out["slo_feasible"] = {
+            tid: _slo_feasible(contexts[tid].optimizer, shares[tid],
+                               slo_ms * 1e-3)
+            for tid in tenant_ids}
+    for policy in policies:
+        for dispatch in dispatches:
+            out[policy_key(policy, dispatch)] = run_multimodel_policy(
+                policy, traces, models=models, units=units,
+                duration=duration, initial_batch=initial_batch,
+                max_batch=max_batch, slo_by_model=slo_by_model,
+                reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
+                interference=interference)
+    return out
+
+
+def _parse_models(spec: str) -> Dict[str, ProfileModel]:
+    """``--models a,b[,a]`` → {tenant_id: ProfileModel}; duplicate model
+    names become distinct tenants (``name#2`` …)."""
+    names = [s.strip() for s in spec.split(",") if s.strip()]
+    if len(names) < 2:
+        raise ValueError("--models needs at least two comma-separated models")
+    out: Dict[str, ProfileModel] = {}
+    seen: Dict[str, int] = {}
+    for name in names:
+        if name not in PAPER_MODELS:
+            raise ValueError(f"unknown model {name!r}; "
+                             f"choose from {sorted(PAPER_MODELS)}")
+        seen[name] = seen.get(name, 0) + 1
+        tid = name if seen[name] == 1 else f"{name}#{seen[name]}"
+        out[tid] = PAPER_MODELS[name]
     return out
 
 
@@ -170,6 +390,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "registered scenario")
     ap.add_argument("--model", default="inception_v3",
                     choices=sorted(PAPER_MODELS))
+    ap.add_argument("--models", default=None,
+                    help="comma-separated model list — switches to the "
+                         "multi-model resource plane (mixed-* scenarios)")
     ap.add_argument("--units", type=int, default=16,
                     help="total threads/chips T")
     ap.add_argument("--duration", type=float, default=60.0,
@@ -180,8 +403,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--slo-factor", type=float, default=4.0,
                     help="SLO deadline as a multiple of the optimal "
                          "latency at --initial-batch")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="absolute SLO deadline (ms); overrides "
+                         "--slo-factor and reports the largest "
+                         "SLO-feasible batch per model")
+    ap.add_argument("--interference", action="store_true",
+                    help="apply the paper's §5.2.2 CPU interference model "
+                         "(downclock + loaded DRAM) to simulated instances")
     ap.add_argument("--reconfigure-timeout", type=float, default=5.0,
-                    help="estimator check period for the packrat policy")
+                    help="estimator check period for the packrat policy "
+                         "(and the multi-model plan interval)")
     ap.add_argument("--dispatch", default="both",
                     choices=("sync", "continuous", "both"),
                     help="dispatch policy axis: paper-faithful batch-sync, "
@@ -195,12 +426,80 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.list:
         for sc in list_scenarios():
             print(f"{sc.name:16s} {sc.description}")
+        for sc in list_mm_scenarios():
+            print(f"{sc.name:16s} [multi-model] {sc.description}")
         return 0
 
     if args.duration <= 0:
         ap.error("--duration must be > 0")
     if args.units < 1 or args.initial_batch < 1 or args.max_batch < 1:
         ap.error("--units, --initial-batch and --max-batch must be >= 1")
+    if args.slo_ms is not None and args.slo_ms <= 0:
+        ap.error("--slo-ms must be > 0")
+
+    dispatches = (DISPATCHES if args.dispatch == "both"
+                  else (args.dispatch,))
+    keys = [policy_key(p, d) for p in POLICIES for d in dispatches]
+
+    if args.models:
+        if args.trace:
+            ap.error("--trace is single-model; drop --models")
+        try:
+            models = _parse_models(args.models)
+        except ValueError as e:
+            ap.error(str(e))
+        if args.units < len(models):
+            ap.error(f"--units {args.units} cannot host "
+                     f"{len(models)} tenants")
+        if args.scenario == "all":
+            mm_scenarios = list_mm_scenarios()
+        else:
+            try:
+                mm_scenarios = [get_mm_scenario(args.scenario)]
+            except KeyError as e:
+                ap.error(e.args[0])
+        report: Dict[str, object] = {
+            "models": list(models),
+            "units": args.units,
+            "duration_s": args.duration,
+            "seed": args.seed,
+            "initial_batch": args.initial_batch,
+            "max_batch": args.max_batch,
+            "slo_factor": args.slo_factor,
+            "slo_ms": args.slo_ms,
+            "interference": args.interference,
+            "dispatches": list(dispatches),
+            "policies": keys,
+            "scenarios": {},
+        }
+        for sc in mm_scenarios:
+            result = run_mm_scenario(
+                sc, models=models, units=args.units,
+                duration=args.duration, seed=args.seed,
+                initial_batch=args.initial_batch, max_batch=args.max_batch,
+                slo_factor=args.slo_factor,
+                reconfigure_timeout=args.reconfigure_timeout,
+                dispatches=dispatches, interference=args.interference,
+                slo_ms=args.slo_ms)
+            report["scenarios"][sc.name] = result
+            parts = []
+            for key in keys:
+                rep = result[key]
+                worst = rep["worst_model_p95_ms"]
+                parts.append(
+                    f"{key}: worst-p95="
+                    f"{'n/a' if worst is None else f'{worst:.0f}ms'} "
+                    f"goodput={rep['goodput_rps']:.1f}/s")
+            print(f"[bench] {sc.name:16s} offered={result['offered']:6d}  "
+                  + "  ".join(parts), file=sys.stderr)
+        text = json.dumps(report, indent=2, sort_keys=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+            print(f"[bench] report written to {args.out}", file=sys.stderr)
+        else:
+            print(text)
+        return 0
 
     model = PAPER_MODELS[args.model]
     if args.trace:
@@ -219,10 +518,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         except KeyError as e:
             ap.error(e.args[0])
 
-    dispatches = (DISPATCHES if args.dispatch == "both"
-                  else (args.dispatch,))
-    keys = [policy_key(p, d) for p in POLICIES for d in dispatches]
-    report: Dict[str, object] = {
+    report = {
         "model": args.model,
         "units": args.units,
         "duration_s": args.duration,
@@ -230,6 +526,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         "initial_batch": args.initial_batch,
         "max_batch": args.max_batch,
         "slo_factor": args.slo_factor,
+        "slo_ms": args.slo_ms,
+        "interference": args.interference,
         "dispatches": list(dispatches),
         "policies": keys,
         "scenarios": {},
@@ -240,7 +538,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             seed=args.seed, initial_batch=args.initial_batch,
             max_batch=args.max_batch, slo_factor=args.slo_factor,
             reconfigure_timeout=args.reconfigure_timeout,
-            dispatches=dispatches)
+            dispatches=dispatches, interference=args.interference,
+            slo_ms=args.slo_ms)
         report["scenarios"][sc.name] = result
 
         def fmt(ms):

@@ -1,8 +1,10 @@
 """Packrat serving runtime: dispatcher, workers, controller, simulator,
-workload scenario engine, and SLO metrics."""
+workload scenario engine, SLO metrics, and the multi-model resource
+plane (unit pool → tenant leases → per-model controllers)."""
 
-from .allocator import AllocationError, Placement, ResourceAllocator
-from .controller import ControllerConfig, PackratServer
+from .allocator import (AllocationError, Placement, ResourceAllocator,
+                        ResourcePool, UnitLease)
+from .controller import ControllerConfig, ModelTenant, PackratServer
 from .dispatcher import Dispatcher, DispatcherConfig
 from .instance import (CallableBackend, JaxBackend, LatencyBackend,
                        TabulatedBackend, WorkerInstance)
@@ -10,23 +12,30 @@ from .metrics import (LatencyBucket, MetricsCollector, instance_report,
                       log2_ms_histogram, nearest_rank)
 from .policy import (BatchSyncPolicy, ContinuousPolicy, DispatchPolicy,
                      make_policy)
-from .scenarios import (Scenario, ScenarioContext, get_scenario,
-                        list_scenarios, register_scenario, scenario)
-from .simulator import (ArrivalProcess, EventLoop, Request, Response,
-                        step_rate)
+from .scenarios import (MultiModelScenario, MultiModelScenarioContext,
+                        Scenario, ScenarioContext, get_mm_scenario,
+                        get_scenario, list_mm_scenarios, list_scenarios,
+                        mm_scenario, register_mm_scenario,
+                        register_scenario, scenario)
+from .simulator import (DEFAULT_MODEL, ArrivalProcess, EventLoop, Request,
+                        Response, step_rate)
+from .tenancy import MultiModelServer, TenantSpec
 from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
                         RampWorkload, StepWorkload, TraceWorkload, Workload)
 
 __all__ = [
     "AllocationError", "ArrivalProcess", "BatchSyncPolicy",
     "CallableBackend", "ContinuousPolicy", "ControllerConfig",
-    "DispatchPolicy", "Dispatcher", "DispatcherConfig", "DiurnalWorkload",
-    "EventLoop", "JaxBackend", "LatencyBackend", "LatencyBucket",
-    "MMPPWorkload", "MetricsCollector", "PackratServer", "Placement",
-    "PoissonWorkload", "RampWorkload", "Request", "ResourceAllocator",
-    "Response", "Scenario", "ScenarioContext", "StepWorkload",
-    "TabulatedBackend", "TraceWorkload", "WorkerInstance", "Workload",
-    "get_scenario", "instance_report", "list_scenarios",
-    "log2_ms_histogram", "make_policy", "nearest_rank",
+    "DEFAULT_MODEL", "DispatchPolicy", "Dispatcher", "DispatcherConfig",
+    "DiurnalWorkload", "EventLoop", "JaxBackend", "LatencyBackend",
+    "LatencyBucket", "MMPPWorkload", "MetricsCollector", "ModelTenant",
+    "MultiModelScenario", "MultiModelScenarioContext", "MultiModelServer",
+    "PackratServer", "Placement", "PoissonWorkload", "RampWorkload",
+    "Request", "ResourceAllocator", "ResourcePool", "Response", "Scenario",
+    "ScenarioContext", "StepWorkload", "TabulatedBackend", "TenantSpec",
+    "TraceWorkload", "UnitLease", "WorkerInstance", "Workload",
+    "get_mm_scenario", "get_scenario", "instance_report",
+    "list_mm_scenarios", "list_scenarios", "log2_ms_histogram",
+    "make_policy", "mm_scenario", "nearest_rank", "register_mm_scenario",
     "register_scenario", "scenario", "step_rate",
 ]

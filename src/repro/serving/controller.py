@@ -9,6 +9,16 @@ Ties every component together on the event loop:
               → ResourceAllocator (§3.4)
               → ActivePassiveController (zero-downtime swap, §3.7)
 
+The per-model machinery lives in :class:`ModelTenant`: one model's
+estimator, optimizer, dispatcher, worker sets and active-passive state,
+operating inside whatever unit allocator it is handed.  A
+:class:`PackratServer` is the single-model special case — one tenant
+owning the whole pool, driven by the server's periodic tick — and its
+behaviour is bit-identical to the pre-tenant controller (pinned by the
+golden-timeline hash in tests/test_policy.py).  The multi-model plane
+(``serving/tenancy.py``) instead runs several tenants against leases
+granted by a shared :class:`~repro.serving.allocator.ResourcePool`.
+
 Fault tolerance: worker failures are detected by heartbeat ticks and the
 worker is respawned (TorchServe behaviour, §4); elastic scaling re-runs
 the optimizer with the surviving unit count T′ — on TPU this is exactly
@@ -24,11 +34,11 @@ from ..core.estimator import BatchSizeEstimator, EstimatorConfig
 from ..core.knapsack import PackratConfig, PackratOptimizer
 from ..core.reconfig import (ActivePassiveController, Phase,
                              needs_active_passive)
-from .allocator import ResourceAllocator
+from .allocator import ResourceAllocator, UnitLease
 from .dispatcher import Dispatcher, DispatcherConfig
 from .instance import LatencyBackend, WorkerInstance
 from .policy import make_policy
-from .simulator import EventLoop, Request, Response
+from .simulator import DEFAULT_MODEL, EventLoop, Request, Response
 
 
 @dataclasses.dataclass
@@ -42,25 +52,38 @@ class ControllerConfig:
     dispatch_policy: str = "sync"         # "sync" (paper) or "continuous"
 
 
-class PackratServer:
-    """A single-model Packrat serving endpoint on one server/pod."""
+class ModelTenant:
+    """One model's serving plane inside a unit allocation.
+
+    Owns the §3.1 loop for a single model: estimator → knapsack →
+    active-passive swaps → dispatcher → workers.  The allocator it
+    places instances on is injected — the whole pool for a
+    :class:`PackratServer`, a :class:`~repro.serving.allocator.UnitLease`
+    allocator under the multi-model resource plane — and can be swapped
+    at a stable point via :meth:`relocate`.
+    """
 
     def __init__(self, loop: EventLoop, *, total_units: int,
                  optimizer: PackratOptimizer, backend: LatencyBackend,
-                 initial_batch: int, config: Optional[ControllerConfig] = None,
-                 domain_size: Optional[int] = None) -> None:
+                 initial_batch: int, allocator: ResourceAllocator,
+                 config: Optional[ControllerConfig] = None,
+                 model_id: str = DEFAULT_MODEL,
+                 on_response: Optional[Callable[[Response], None]] = None,
+                 peer_live: Optional[Callable[[], int]] = None) -> None:
         self.loop = loop
+        self.model_id = model_id
         self.total_units = total_units
         self.optimizer = optimizer
         self.backend = backend
         self.ccfg = config or ControllerConfig()
-        self.allocator = ResourceAllocator(total_units, domain_size)
+        self.allocator = allocator
+        self._next_worker_id = 0   # tenant-owned: survives lease changes
         self.estimator = BatchSizeEstimator(self.ccfg.estimator,
                                             initial_batch=initial_batch)
         self.responses: List[Response] = []
+        self._extra_on_response = on_response
         self.reconfig_log: List[Tuple[float, int, PackratConfig]] = []
-        self._next_worker_id = 0
-        self._placements: Dict[int, list] = {}
+        self._placements: Dict[int, Tuple[ResourceAllocator, list]] = {}
         self._workers_by_cfg: Dict[int, List[WorkerInstance]] = {}
         self._pending_workers: Optional[List[WorkerInstance]] = None
         self._deferred_batch: Optional[int] = None
@@ -75,9 +98,9 @@ class PackratServer:
         workers = self._spawn_workers(first)
         self.dispatcher = Dispatcher(loop, first, workers,
                                      self._on_response, self.ccfg.dispatcher,
-                                     policy=make_policy(self.ccfg.dispatch_policy))
+                                     policy=make_policy(self.ccfg.dispatch_policy),
+                                     model_id=model_id, peer_live=peer_live)
         self.reconfig_log.append((loop.now, initial_batch, first))
-        self._schedule_tick()
 
     # ------------------------------------------------------------------ #
     # workers
@@ -99,22 +122,32 @@ class PackratServer:
         return self.ccfg.drain_time + extra
 
     def _spawn_workers(self, config: PackratConfig) -> List[WorkerInstance]:
-        placements = self.allocator.allocate(config)
+        allocator = self.allocator
+        placements = allocator.allocate(config)
         workers = []
         for p in placements:
-            w = WorkerInstance(p.instance_id, p.threads, p.batch,
+            # ids come from the tenant, not the placing allocator: a
+            # relocation hands the tenant a fresh lease allocator whose
+            # counter restarts, and (model_id, id) must stay unique
+            # across the tenant's whole worker history
+            w = WorkerInstance(self._next_worker_id, p.threads, p.batch,
                                self.backend, units=p.units,
-                               spawned_at=self.loop.now)
+                               spawned_at=self.loop.now,
+                               model_id=self.model_id)
+            self._next_worker_id += 1
             workers.append(w)
-        self._placements[id(config)] = placements
+        # releases must target the allocator that placed the workers —
+        # the tenant may have adopted a new lease by drain time
+        self._placements[id(config)] = (allocator, placements)
         self._workers_by_cfg[id(config)] = workers
         self.workers_ever.extend(workers)
         return workers
 
     def _release_workers(self, config: PackratConfig) -> None:
-        placements = self._placements.pop(id(config), None)
-        if placements:
-            self.allocator.release(placements)
+        entry = self._placements.pop(id(config), None)
+        if entry:
+            allocator, placements = entry
+            allocator.release(placements)
         for w in self._workers_by_cfg.pop(id(config), ()):
             w.released_at = self.loop.now   # bounds utilization accounting
 
@@ -126,14 +159,17 @@ class PackratServer:
 
     def _on_response(self, resp: Response) -> None:
         self.responses.append(resp)
+        if self._extra_on_response is not None:
+            self._extra_on_response(resp)
 
     # ------------------------------------------------------------------ #
-    # control loop
+    # control loop (driven by the owning server's periodic tick)
     # ------------------------------------------------------------------ #
-    def _schedule_tick(self) -> None:
-        self.loop.schedule(self.ccfg.tick_interval, self._tick)
-
-    def _tick(self) -> None:
+    def tick(self, *, adapt_batch: bool = True) -> None:
+        """One control-loop step: estimator sample, APC progress, drained
+        set release, deferred reconfigure, and (``adapt_batch``) the
+        estimator-triggered reconfiguration check.  The multi-model
+        planner disables ``adapt_batch`` and drives batch changes itself."""
         self.estimator.observe(self.dispatcher.take_signal())
         self.apc.tick(self.loop.now)
         if self.apc.phase is Phase.STABLE:
@@ -147,14 +183,18 @@ class PackratServer:
             if self._deferred_batch is not None:
                 deferred, self._deferred_batch = self._deferred_batch, None
                 self.reconfigure(deferred)
-        if self.apc.phase is Phase.STABLE:
+        if adapt_batch and self.apc.phase is Phase.STABLE:
             new_b = self.estimator.should_reconfigure(self.loop.now)
             if new_b is not None:
                 self.reconfigure(new_b)
         self._check_workers()
-        self._schedule_tick()
 
-    def reconfigure(self, new_batch: int) -> None:
+    @property
+    def stable(self) -> bool:
+        return self.apc.phase is Phase.STABLE
+
+    def reconfigure(self, new_batch: int, *,
+                    force_respawn: bool = False) -> None:
         """Run the optimizer for B̃ and transition via active-passive.
 
         An over-estimated B̃ (queue backlog during overload can exceed
@@ -167,6 +207,11 @@ class PackratServer:
         stable tick) — spawning a second passive set mid-swap would
         clobber ``_pending_workers`` and strand the first passive set's
         allocator units.
+
+        ``force_respawn`` disables the identical-configuration shortcut:
+        a lease relocation must move workers onto the new units even
+        when the ⟨i,t,b⟩ shape is unchanged, else they keep running on
+        units that now belong to another tenant.
         """
         if self.apc.phase is not Phase.STABLE:
             self._deferred_batch = new_batch
@@ -182,7 +227,8 @@ class PackratServer:
             return
         self.estimator.commit(new_batch)
         old_cfg = self.apc.active
-        if old_cfg is not None and new_cfg.groups == old_cfg.groups:
+        if (old_cfg is not None and new_cfg.groups == old_cfg.groups
+                and not force_respawn):
             return
         if old_cfg is not None and not needs_active_passive(old_cfg, new_cfg):
             # paper case 1: same per-worker thread counts — plain worker
@@ -195,7 +241,7 @@ class PackratServer:
             return
         # paper case 2: thread counts change — spawn the passive set now
         # (resources oversubscribe transiently), swap when ready; the old
-        # set is released when the APC finishes draining (see _tick).
+        # set is released when the APC finishes draining (see tick).
         new_workers = self._spawn_workers(new_cfg)
         self.apc.request_reconfig(new_cfg, self.loop.now)
         self.reconfig_log.append((self.loop.now, new_batch, new_cfg))
@@ -204,6 +250,26 @@ class PackratServer:
 
     def _on_swap(self, new_cfg: PackratConfig) -> None:
         self.dispatcher.set_config(new_cfg, self._pending_workers)
+
+    # ------------------------------------------------------------------ #
+    # lease relocation (multi-model resource plane)
+    # ------------------------------------------------------------------ #
+    def relocate(self, lease: UnitLease, batch: int) -> bool:
+        """Re-solve the knapsack inside a new lease and move onto it.
+
+        Worker respawn is forced even when the resulting ⟨i,t,b⟩ shape
+        is unchanged (a same-size span move): the tenant's workers must
+        vacate units that may now belong to another tenant's lease.
+        Draining sets keep releasing against the allocator that placed
+        them.  Returns False (and changes nothing) while a transition
+        is in flight — the planner retries on its next stable tick.
+        """
+        if self.apc.phase is not Phase.STABLE:
+            return False
+        self.allocator = lease.allocator
+        self.total_units = lease.n_units
+        self.reconfigure(batch, force_respawn=True)
+        return True
 
     # ------------------------------------------------------------------ #
     # fault tolerance
@@ -228,16 +294,46 @@ class PackratServer:
                 self.loop.schedule(self.ccfg.worker_respawn_time,
                                    lambda w=w: respawn(w))
 
+class PackratServer(ModelTenant):
+    """A single-model Packrat serving endpoint on one server/pod.
+
+    The one-tenant special case of the resource plane: the tenant owns
+    an allocator over the whole pool and the server's periodic tick
+    drives its control loop directly.
+    """
+
+    def __init__(self, loop: EventLoop, *, total_units: int,
+                 optimizer: PackratOptimizer, backend: LatencyBackend,
+                 initial_batch: int, config: Optional[ControllerConfig] = None,
+                 domain_size: Optional[int] = None) -> None:
+        super().__init__(loop, total_units=total_units, optimizer=optimizer,
+                         backend=backend, initial_batch=initial_batch,
+                         allocator=ResourceAllocator(total_units, domain_size),
+                         config=config)
+        self._schedule_tick()
+
+    def _schedule_tick(self) -> None:
+        self.loop.schedule(self.ccfg.tick_interval, self._tick)
+
+    def _tick(self) -> None:
+        self.tick()
+        self._schedule_tick()
+
     # ------------------------------------------------------------------ #
     # elastic scaling (beyond paper; DESIGN.md §2)
     # ------------------------------------------------------------------ #
     def scale_units(self, new_total_units: int) -> None:
-        """Re-run Packrat for a changed unit count (nodes joined/left)."""
+        """Re-run Packrat for a changed unit count (nodes joined/left).
+
+        Lives on the single-model server, not on :class:`ModelTenant`:
+        it rebuilds an allocator over global units ``0..T'-1``, which is
+        only valid when this tenant owns the whole pool — under the
+        multi-model plane the pool is resized by re-granting leases.
+        """
         self.total_units = new_total_units
         self.allocator = ResourceAllocator(new_total_units,
                                            min(self.allocator.domain_size,
                                                new_total_units))
-        self._placements.clear()
         if self.apc.phase is Phase.STABLE:
             cfg = self.optimizer.solve(new_total_units,
                                        self.estimator.current_batch)

@@ -48,9 +48,16 @@ class Dispatcher:
                  instances: Sequence[WorkerInstance],
                  on_response: Callable[[Response], None],
                  dcfg: Optional[DispatcherConfig] = None,
-                 policy: Optional[DispatchPolicy] = None) -> None:
+                 policy: Optional[DispatchPolicy] = None,
+                 model_id: str = "default",
+                 peer_live: Optional[Callable[[], int]] = None) -> None:
+        """``peer_live`` reports live workers *outside* this dispatcher
+        (other tenants sharing the pod) so interference backends see the
+        pod-wide instance count, not just this model's."""
         self.loop = loop
         self.dcfg = dcfg or DispatcherConfig()
+        self.model_id = model_id
+        self.peer_live = peer_live
         self.on_response = on_response
         self.queue: Deque[Request] = collections.deque()
         self.batch_size = 0
@@ -136,6 +143,8 @@ class Dispatcher:
         callback plus a watchdog that re-dispatches stragglers and
         retires completed ids once no copy can still deliver them."""
         n_live = len(self._live())
+        if self.peer_live is not None:
+            n_live += self.peer_live()
         done_t = worker.process(len(sub), self.loop.now,
                                 n_live_instances=n_live)
         expected = done_t - self.loop.now
@@ -156,7 +165,8 @@ class Dispatcher:
                 self.on_response(Response(
                     request=r, completion=self.loop.now,
                     batch_size=len(sub), instance_id=worker.id,
-                    redispatched=redispatch > 0))
+                    redispatched=redispatch > 0,
+                    model_id=worker.model_id))
             self.policy.on_batch_done(worker, delivered)
 
         self.loop.at(done_t, complete)

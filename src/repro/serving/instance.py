@@ -138,12 +138,13 @@ class WorkerInstance:
 
     def __init__(self, instance_id: int, threads: int, batch: int,
                  backend: LatencyBackend, *, units: Tuple[int, ...] = (),
-                 spawned_at: float = 0.0):
+                 spawned_at: float = 0.0, model_id: str = "default"):
         self.id = instance_id
         self.threads = threads
         self.batch = batch
         self.backend = backend
         self.units = units
+        self.model_id = model_id
         self.spawned_at = spawned_at
         self.released_at: Optional[float] = None  # set when swapped out
         self.busy_until = spawned_at

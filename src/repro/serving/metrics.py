@@ -66,7 +66,8 @@ def log2_ms_histogram(values_s: Sequence[float]) -> List[LatencyBucket]:
     return buckets_to_histogram(buckets)
 
 
-def instance_report(workers, now: float) -> List[Dict[str, object]]:
+def instance_report(workers, now: float, *,
+                    model_id: Optional[str] = None) -> List[Dict[str, object]]:
     """Per-instance utilization + idle-gap summary (JSON-serializable).
 
     ``workers`` is any iterable of :class:`WorkerInstance` — e.g. a
@@ -75,11 +76,17 @@ def instance_report(workers, now: float) -> List[Dict[str, object]]:
     comparison measurable: batch-synchronous dispatch barriers the whole
     set on the slowest sub-batch, which shows up as wide idle gaps on
     thin instances; continuous dispatch collapses them.
+
+    Rows carry the worker's ``model_id`` (instance ids are only unique
+    *within* a tenant); ``model_id=`` filters to one tenant's workers.
     """
     out = []
-    for w in sorted(workers, key=lambda w: w.id):
+    if model_id is not None:
+        workers = [w for w in workers if w.model_id == model_id]
+    for w in sorted(workers, key=lambda w: (w.model_id, w.id)):
         out.append({
             "id": w.id,
+            "model_id": w.model_id,
             "threads": w.threads,
             "batch": w.batch,
             "batches": w.stats.batches,
@@ -97,25 +104,43 @@ def instance_report(workers, now: float) -> List[Dict[str, object]]:
 
 
 class MetricsCollector:
-    """Per-request latency + SLO accounting for one serving run."""
+    """Per-request latency + SLO accounting for one serving run.
 
-    def __init__(self, *, slo_deadline: Optional[float] = None) -> None:
+    Every sample is additionally keyed by ``model_id`` so multi-model
+    runs get a per-tenant breakdown (``models_report`` / the ``models``
+    key of :meth:`report`); a single-model run degenerates to one
+    ``"default"`` entry that matches the aggregate numbers exactly.
+    ``slo_by_model`` overrides the global SLO deadline per tenant.
+    """
+
+    def __init__(self, *, slo_deadline: Optional[float] = None,
+                 slo_by_model: Optional[Dict[str, float]] = None) -> None:
         self.slo_deadline = slo_deadline     # seconds, None = no SLO
+        self.slo_by_model = dict(slo_by_model or {})
         self.offered = 0
         self.latencies: List[float] = []     # seconds, completion order
         self.redispatched = 0
         self.queue_timeline: List[Tuple[float, int]] = []
         self._batch_sizes: List[int] = []
+        self.offered_by_model: Dict[str, int] = {}
+        self.latencies_by_model: Dict[str, List[float]] = {}
+
+    def slo_for(self, model_id: str) -> Optional[float]:
+        return self.slo_by_model.get(model_id, self.slo_deadline)
 
     # ------------------------------------------------------------------ #
     # feeding
     # ------------------------------------------------------------------ #
     def on_request(self, req: Request) -> None:
         self.offered += 1
+        model = getattr(req, "model_id", "default")
+        self.offered_by_model[model] = self.offered_by_model.get(model, 0) + 1
 
     def on_response(self, resp: Response) -> None:
         self.latencies.append(resp.latency)
         self._batch_sizes.append(resp.batch_size)
+        model = getattr(resp.request, "model_id", "default")
+        self.latencies_by_model.setdefault(model, []).append(resp.latency)
         if resp.redispatched:
             self.redispatched += 1
 
@@ -129,22 +154,32 @@ class MetricsCollector:
 
     def attach(self, server, *, sample_interval: float = 0.1,
                until: Optional[float] = None) -> None:
-        """Hook a live ``PackratServer`` without modifying its hot path.
+        """Hook a live server without modifying its hot path.
 
-        Chains the dispatcher's ``on_response`` (the dispatcher already
+        Chains each dispatcher's ``on_response`` (the dispatcher already
         calls through an attribute, so swapping the attribute is safe
         mid-run) and schedules a queue-depth sampler on the server's
         event loop.  ``until`` bounds the sampler so ``loop.run()``
-        still terminates.
+        still terminates.  Works on a single-model ``PackratServer``
+        (one dispatcher) and a ``MultiModelServer`` (one dispatcher per
+        tenant; the sampler reads the aggregate ``queue_depth``).
         """
-        prev = server.dispatcher.on_response
+        tenants = getattr(server, "tenants", None)
+        if tenants is not None:
+            dispatchers = [t.dispatcher for t in tenants.values()]
+            sampled = server            # aggregate queue_depth property
+        else:
+            dispatchers = [server.dispatcher]
+            sampled = server.dispatcher
+        for disp in dispatchers:
+            prev = disp.on_response
 
-        def chained(resp: Response) -> None:
-            prev(resp)
-            self.on_response(resp)
+            def chained(resp: Response, prev=prev) -> None:
+                prev(resp)
+                self.on_response(resp)
 
-        server.dispatcher.on_response = chained
-        self.attach_queue_sampler(server.loop, server.dispatcher,
+            disp.on_response = chained
+        self.attach_queue_sampler(server.loop, sampled,
                                   interval=sample_interval, until=until)
 
     def attach_queue_sampler(self, loop: EventLoop, dispatcher, *,
@@ -168,9 +203,19 @@ class MetricsCollector:
         return nearest_rank(sorted(self.latencies), q)
 
     def within_slo(self) -> int:
-        if self.slo_deadline is None:
-            return self.completed
-        return sum(1 for lat in self.latencies if lat <= self.slo_deadline)
+        if not self.slo_by_model:
+            if self.slo_deadline is None:
+                return self.completed
+            return sum(1 for lat in self.latencies
+                       if lat <= self.slo_deadline)
+        return sum(self.within_slo_model(m) for m in self.latencies_by_model)
+
+    def within_slo_model(self, model_id: str) -> int:
+        lats = self.latencies_by_model.get(model_id, [])
+        slo = self.slo_for(model_id)
+        if slo is None:
+            return len(lats)
+        return sum(1 for lat in lats if lat <= slo)
 
     def goodput(self, duration: float) -> float:
         """Requests completed within the SLO per second of offered load."""
@@ -200,6 +245,44 @@ class MetricsCollector:
         return log2_ms_histogram(self.latencies)
 
     # ------------------------------------------------------------------ #
+    def models_report(self, *, duration: float) -> Dict[str, Dict[str, object]]:
+        """Per-model breakdown: the same headline quantities as the
+        aggregate report, keyed by ``model_id``.  Models that were
+        offered traffic but never completed a request still appear."""
+        models = sorted(set(self.offered_by_model)
+                        | set(self.latencies_by_model))
+        out: Dict[str, Dict[str, object]] = {}
+        for m in models:
+            lats = sorted(self.latencies_by_model.get(m, []))
+            n = len(lats)
+            offered = max(self.offered_by_model.get(m, 0), n)
+            within = self.within_slo_model(m)
+            slo = self.slo_for(m)
+            out[m] = {
+                "offered": offered,
+                "completed": n,
+                "incomplete": max(offered - n, 0),
+                "latency_ms": {
+                    "mean": (sum(lats) / n * 1e3) if n else None,
+                    "p50": nearest_rank(lats, 50) * 1e3 if n else None,
+                    "p95": nearest_rank(lats, 95) * 1e3 if n else None,
+                    "p99": nearest_rank(lats, 99) * 1e3 if n else None,
+                    "max": lats[-1] * 1e3 if n else None,
+                },
+                "slo_deadline_ms": slo * 1e3 if slo is not None else None,
+                "within_slo": within,
+                "goodput_rps": within / duration,
+                "slo_attainment": within / offered if offered else 1.0,
+            }
+        return out
+
+    def worst_model_p95(self) -> float:
+        """max over models of p95 latency — the multi-model makespan
+        analogue the planner minimizes (NaN with no completions)."""
+        p95s = [nearest_rank(sorted(lats), 95)
+                for lats in self.latencies_by_model.values() if lats]
+        return max(p95s) if p95s else float("nan")
+
     def report(self, *, duration: float) -> Dict[str, object]:
         """The JSON-serializable summary the benchmark CLI emits."""
         lats = sorted(self.latencies)
@@ -230,6 +313,7 @@ class MetricsCollector:
                 {"lo_ms": b.lo_ms, "hi_ms": b.hi_ms, "count": b.count}
                 for b in self.histogram()
             ],
+            "models": self.models_report(duration=duration),
         }
         return rep
 

@@ -47,9 +47,15 @@ class DispatchPolicy:
     """
 
     name = "abstract"
+    # the owning tenant's model id, mirrored from the dispatcher at bind
+    # time — not consulted by the built-in policies (each dispatcher is
+    # single-tenant, so routing needs no filter) but part of the policy
+    # contract so subclasses can tag diagnostics or specialise per model
+    model_id = "default"
 
     def bind(self, dispatcher) -> None:
         self.d = dispatcher
+        self.model_id = getattr(dispatcher, "model_id", "default")
 
     # ------------------------------------------------------------------ #
     # hooks

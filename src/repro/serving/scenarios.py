@@ -17,7 +17,8 @@ Packrat policy.  Adding a scenario is one decorated function — see
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import math
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from ..core.knapsack import PackratOptimizer
 from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
@@ -174,7 +175,123 @@ def _flash_crowd(ctx: ScenarioContext) -> Workload:
     return TraceWorkload(times=tuple(sorted(times)), name="flash-crowd")
 
 
+# --------------------------------------------------------------------- #
+# multi-model (mixed-traffic) scenarios
+#
+# A mixed scenario maps each model tenant to its own workload shape.
+# Rates are expressed relative to the tenant's *even-split share* of the
+# pod (T/n units): the static even-split baseline is then exactly at its
+# provisioned capacity, and any win the adaptive resource plane reports
+# comes from re-splitting units across tenants, not from slack in the
+# scenario definition.
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MultiModelScenarioContext:
+    """Per-tenant capacity contexts for a mixed-traffic scenario builder.
+
+    ``contexts[model_id]`` is a :class:`ScenarioContext` whose
+    ``threads`` is the tenant's even-split share, so
+    ``capacity_rps(b)`` means "what this tenant could sustain if the
+    pod were split evenly and never re-planned".
+    """
+
+    models: Tuple[str, ...]                   # tenant ids, fixed order
+    contexts: Mapping[str, ScenarioContext]
+    duration: float
+    seed: int = 0
+
+    def ctx(self, model_id: str) -> ScenarioContext:
+        return self.contexts[model_id]
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiModelScenario:
+    name: str
+    description: str
+    build: Callable[[MultiModelScenarioContext], Dict[str, Workload]]
+
+
+_MM_REGISTRY: Dict[str, MultiModelScenario] = {}
+
+
+def register_mm_scenario(name: str, description: str,
+                         build: Callable[[MultiModelScenarioContext],
+                                         Dict[str, Workload]]
+                         ) -> MultiModelScenario:
+    if name in _MM_REGISTRY:
+        raise ValueError(f"multi-model scenario {name!r} already registered")
+    sc = MultiModelScenario(name=name, description=description, build=build)
+    _MM_REGISTRY[name] = sc
+    return sc
+
+
+def mm_scenario(name: str, description: str):
+    """Decorator form of :func:`register_mm_scenario`."""
+
+    def deco(fn: Callable[[MultiModelScenarioContext], Dict[str, Workload]]):
+        register_mm_scenario(name, description, fn)
+        return fn
+
+    return deco
+
+
+def get_mm_scenario(name: str) -> MultiModelScenario:
+    try:
+        return _MM_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown multi-model scenario {name!r}; "
+            f"registered: {sorted(_MM_REGISTRY)}") from None
+
+
+def list_mm_scenarios() -> List[MultiModelScenario]:
+    return [_MM_REGISTRY[k] for k in sorted(_MM_REGISTRY)]
+
+
+@mm_scenario("mixed-steady",
+             "every tenant at steady Poisson load, 65% of its even-split "
+             "B=32 capacity (the friendly multi-tenant baseline)")
+def _mixed_steady(mctx: MultiModelScenarioContext) -> Dict[str, Workload]:
+    return {m: PoissonWorkload(rate_rps=0.65 * mctx.ctx(m).capacity_rps(32))
+            for m in mctx.models}
+
+
+@mm_scenario("mixed-diurnal",
+             "anti-correlated diurnal pair: tenants peak half a period "
+             "apart, each peaking ~5% above its even-split B=32 capacity "
+             "— only re-splitting units serves both peaks")
+def _mixed_diurnal(mctx: MultiModelScenarioContext) -> Dict[str, Workload]:
+    out: Dict[str, Workload] = {}
+    for k, m in enumerate(mctx.models):
+        base = 0.55 * mctx.ctx(m).capacity_rps(32)
+        out[m] = DiurnalWorkload(base_rps=base, amplitude=0.9,
+                                 period=mctx.duration,
+                                 phase=math.pi * k)
+    return out
+
+
+@mm_scenario("mixed-burst",
+             "burst on one tenant: all tenants idle at 30% of even-split "
+             "B=8 capacity, but the last tenant bursts to ~90% of its "
+             "even-split B=64 capacity (MMPP on/off)")
+def _mixed_burst(mctx: MultiModelScenarioContext) -> Dict[str, Workload]:
+    out: Dict[str, Workload] = {}
+    for k, m in enumerate(mctx.models):
+        ctx = mctx.ctx(m)
+        quiet = 0.3 * ctx.capacity_rps(8)
+        if k == len(mctx.models) - 1:
+            burst = 0.9 * ctx.capacity_rps(64)
+            out[m] = MMPPWorkload(rates=(quiet, burst),
+                                  mean_dwell=(mctx.duration / 6.0,
+                                              mctx.duration / 12.0))
+        else:
+            out[m] = PoissonWorkload(rate_rps=quiet)
+    return out
+
+
 __all__ = [
-    "Scenario", "ScenarioContext", "get_scenario", "list_scenarios",
-    "register_scenario", "scenario",
+    "MultiModelScenario", "MultiModelScenarioContext", "Scenario",
+    "ScenarioContext", "get_mm_scenario", "get_scenario",
+    "list_mm_scenarios", "list_scenarios", "mm_scenario",
+    "register_mm_scenario", "register_scenario", "scenario",
 ]

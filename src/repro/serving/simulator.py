@@ -46,10 +46,14 @@ class EventLoop:
             fn()
 
 
+DEFAULT_MODEL = "default"   # the single-model (one-tenant) model id
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     id: int
     arrival: float
+    model_id: str = DEFAULT_MODEL
 
 
 @dataclasses.dataclass
@@ -59,6 +63,7 @@ class Response:
     batch_size: int
     instance_id: int
     redispatched: bool = False
+    model_id: str = DEFAULT_MODEL
 
     @property
     def latency(self) -> float:

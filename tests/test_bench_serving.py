@@ -149,5 +149,179 @@ def test_cli_trace_replay(tmp_path):
 def test_cli_list(capsys):
     assert bench_serving.main(["--list"]) == 0
     listed = capsys.readouterr().out
-    for name in EXPECTED_SCENARIOS:
+    for name in EXPECTED_SCENARIOS | EXPECTED_MM_SCENARIOS:
         assert name in listed
+
+
+# --------------------------------------------------------------------- #
+# multi-model resource plane (ISSUE 3)
+# --------------------------------------------------------------------- #
+from repro.core.paper_profiles import BERT, PAPER_MODELS  # noqa: E402
+from repro.serving.scenarios import (get_mm_scenario,     # noqa: E402
+                                     list_mm_scenarios)
+
+EXPECTED_MM_SCENARIOS = {"mixed-steady", "mixed-diurnal", "mixed-burst"}
+
+MM_KW = dict(models={"resnet50": RESNET50, "bert": BERT}, units=8,
+             duration=10.0, seed=0, initial_batch=4, max_batch=64,
+             slo_factor=4.0, reconfigure_timeout=2.0)
+
+
+def test_builtin_mm_scenarios_registered():
+    assert EXPECTED_MM_SCENARIOS <= {sc.name for sc in list_mm_scenarios()}
+
+
+def test_mm_scenarios_build_per_model_workloads():
+    from repro.serving.scenarios import (MultiModelScenarioContext,
+                                         ScenarioContext)
+    from repro.core import PackratOptimizer
+    contexts = {
+        name: ScenarioContext(
+            threads=4, optimizer=PackratOptimizer(pm.profile(4, 64)),
+            duration=12.0, seed=0)
+        for name, pm in (("resnet50", RESNET50), ("bert", BERT))}
+    mctx = MultiModelScenarioContext(models=("resnet50", "bert"),
+                                     contexts=contexts, duration=12.0)
+    for sc in list_mm_scenarios():
+        workloads = sc.build(mctx)
+        assert set(workloads) == {"resnet50", "bert"}
+        for name, wl in workloads.items():
+            times = wl.arrivals(12.0, seed=3)
+            assert times and times == sorted(times)
+
+
+def test_run_mm_scenario_reports_per_model_and_aggregate():
+    result = bench_serving.run_mm_scenario(
+        get_mm_scenario("mixed-steady"), **MM_KW)
+    assert result["models"] == ["resnet50", "bert"]
+    assert result["even_shares"] == {"resnet50": 4, "bert": 4}
+    for policy in ("static", "packrat"):
+        rep = result[policy]
+        assert set(rep["models"]) == {"resnet50", "bert"}
+        for name, sub in rep["models"].items():
+            for q in ("p50", "p95", "p99"):
+                assert sub["latency_ms"][q] is not None, (policy, name, q)
+            assert sub["goodput_rps"] >= 0
+        assert rep["worst_model_p95_ms"] == pytest.approx(
+            max(sub["latency_ms"]["p95"] for sub in rep["models"].values()))
+        assert set(rep["tenants"]) == {"resnet50", "bert"}
+        assert set(rep["shares"]) == {"resnet50", "bert"}
+        # leases stay within the pool
+        assert sum(rep["shares"].values()) <= 8
+    assert result["static"]["plans"] == 0
+    # every worker row is tagged with its tenant
+    tags = {row["model_id"] for row in result["packrat"]["instances"]}
+    assert tags == {"resnet50", "bert"}
+
+
+def test_run_mm_scenario_is_deterministic():
+    a = bench_serving.run_mm_scenario(get_mm_scenario("mixed-burst"),
+                                      **MM_KW)
+    b = bench_serving.run_mm_scenario(get_mm_scenario("mixed-burst"),
+                                      **MM_KW)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_mm_dispatch_axis_keys():
+    kw = dict(MM_KW, dispatches=("sync", "continuous"), duration=8.0)
+    a = bench_serving.run_mm_scenario(get_mm_scenario("mixed-steady"), **kw)
+    assert a["policies"] == ["static", "static+continuous",
+                             "packrat", "packrat+continuous"]
+    for key in a["policies"]:
+        assert a[key]["dispatch"] == ("continuous" if "+" in key else "sync")
+        assert a[key]["worst_model_p95_ms"] is not None
+
+
+def test_packrat_multimodel_beats_static_even_split_worst_p95():
+    """ISSUE 3 acceptance: on the anti-correlated two-model mix with
+    identical seeded traces, the live resource plane's worst-tenant p95
+    beats the static even split's, and per-model p50/p95/p99 + goodput
+    are all reported."""
+    result = bench_serving.run_mm_scenario(
+        get_mm_scenario("mixed-diurnal"), **dict(MM_KW, duration=15.0))
+    static = result["static"]
+    packrat = result["packrat"]
+    assert packrat["worst_model_p95_ms"] < static["worst_model_p95_ms"]
+    assert packrat["plans"] >= 1                # the planner actually ran
+    for rep in (static, packrat):
+        for sub in rep["models"].values():
+            assert sub["latency_ms"]["p50"] is not None
+            assert sub["latency_ms"]["p95"] is not None
+            assert sub["latency_ms"]["p99"] is not None
+            assert "goodput_rps" in sub
+
+
+def test_cli_multimodel_writes_report(tmp_path):
+    out = tmp_path / "mm.json"
+    rc = bench_serving.main([
+        "--models", "resnet50,bert", "--scenario", "mixed-steady",
+        "--units", "8", "--duration", "8", "--initial-batch", "4",
+        "--max-batch", "64", "--dispatch", "sync", "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["models"] == ["resnet50", "bert"]
+    sc = report["scenarios"]["mixed-steady"]
+    for policy in ("static", "packrat"):
+        assert set(sc[policy]["models"]) == {"resnet50", "bert"}
+
+
+def test_parse_models_duplicates_become_tenants():
+    models = bench_serving._parse_models("bert,bert")
+    assert list(models) == ["bert", "bert#2"]
+    with pytest.raises(ValueError):
+        bench_serving._parse_models("bert")
+    with pytest.raises(ValueError):
+        bench_serving._parse_models("bert,doesnotexist")
+
+
+# --------------------------------------------------------------------- #
+# --interference and --slo-ms satellites
+# --------------------------------------------------------------------- #
+def test_interference_flag_slows_observed_latency():
+    """Fig. 9 expected-vs-observed gap: with the CPU interference model
+    the same trace reports higher p50 than the isolated profile run,
+    while the optimizer's expected latency is unchanged."""
+    clean = bench_serving.run_scenario(get_scenario("steady-poisson"),
+                                       **RUN_KW)
+    noisy = bench_serving.run_scenario(get_scenario("steady-poisson"),
+                                       **RUN_KW, interference=True)
+    for policy in ("static", "packrat"):
+        assert noisy[policy]["interference"] is True
+        assert clean[policy]["interference"] is False
+        assert (noisy[policy]["latency_ms"]["p50"]
+                > clean[policy]["latency_ms"]["p50"])
+    # deterministic under the flag too
+    again = bench_serving.run_scenario(get_scenario("steady-poisson"),
+                                       **RUN_KW, interference=True)
+    assert (json.dumps(noisy, sort_keys=True)
+            == json.dumps(again, sort_keys=True))
+
+
+def test_slo_ms_reports_largest_feasible_batch():
+    from repro.core import PackratOptimizer
+    result = bench_serving.run_scenario(get_scenario("steady-poisson"),
+                                        **RUN_KW, slo_ms=400.0)
+    assert result["slo_deadline_ms"] == pytest.approx(400.0)
+    feas = result["slo_feasible"]["resnet50"]
+    assert feas is not None
+    assert feas["latency_ms"] <= 400.0
+    # the next power-of-two batch must violate the SLO
+    opt = PackratOptimizer(RESNET50.profile(8, 64))
+    nxt = opt.solve(8, feas["batch"] * 2)
+    assert nxt.latency * 1e3 > 400.0
+
+
+def test_slo_ms_infeasible_reports_none():
+    result = bench_serving.run_scenario(get_scenario("steady-poisson"),
+                                        **RUN_KW, slo_ms=0.001)
+    assert result["slo_feasible"]["resnet50"] is None
+
+
+def test_mm_slo_ms_per_model_feasible_batch():
+    result = bench_serving.run_mm_scenario(
+        get_mm_scenario("mixed-steady"), **dict(MM_KW, duration=8.0),
+        slo_ms=500.0)
+    feas = result["slo_feasible"]
+    assert set(feas) == {"resnet50", "bert"}
+    for name, sub in feas.items():
+        assert sub is not None and sub["latency_ms"] <= 500.0

@@ -135,6 +135,111 @@ def test_queue_sampler_timeline():
     assert m.queue_mean() == pytest.approx(4.0)
 
 
+# --------------------------------------------------------------------- #
+# per-model breakdown (ISSUE 3 satellite)
+# --------------------------------------------------------------------- #
+def mk_model_response(i, latency, model_id):
+    req = Request(i, 0.0, model_id=model_id)
+    return Response(request=req, completion=latency, batch_size=4,
+                    instance_id=0, model_id=model_id)
+
+
+def test_one_tenant_breakdown_matches_aggregate_exactly():
+    """Degenerate single-model case: the 'default' per-model entry must
+    reproduce today's aggregate numbers bit-for-bit."""
+    m = hand_built_collector(slo=0.050)
+    rep = m.report(duration=10.0)
+    assert list(rep["models"]) == ["default"]
+    sub = rep["models"]["default"]
+    for key in ("offered", "completed", "incomplete", "within_slo",
+                "goodput_rps", "slo_attainment", "slo_deadline_ms"):
+        assert sub[key] == rep[key], key
+    assert sub["latency_ms"] == rep["latency_ms"]
+
+
+def test_per_model_percentiles_and_goodput():
+    m = MetricsCollector(slo_deadline=0.050)
+    for i in range(100):                        # model a: 1..100 ms
+        m.on_request(Request(i, 0.0, model_id="a"))
+        m.on_response(mk_model_response(i, (i + 1) * 1e-3, "a"))
+    for i in range(100, 150):                   # model b: 2,4,..,100 ms
+        m.on_request(Request(i, 0.0, model_id="b"))
+        m.on_response(mk_model_response(i, (i - 99) * 2e-3, "b"))
+    rep = m.models_report(duration=10.0)
+    assert set(rep) == {"a", "b"}
+    assert rep["a"]["latency_ms"]["p50"] == pytest.approx(50.0)
+    assert rep["b"]["latency_ms"]["p50"] == pytest.approx(50.0)
+    assert rep["a"]["latency_ms"]["p95"] == pytest.approx(95.0)
+    assert rep["b"]["latency_ms"]["p95"] == pytest.approx(96.0)
+    assert rep["a"]["goodput_rps"] == pytest.approx(5.0)   # 50 of 100
+    assert rep["b"]["goodput_rps"] == pytest.approx(2.5)   # 25 of 50
+    assert m.worst_model_p95() == pytest.approx(0.096)
+    # aggregate still covers everything
+    assert m.completed == 150 and m.offered == 150
+
+
+def test_slo_by_model_overrides_global_deadline():
+    m = MetricsCollector(slo_deadline=0.050,
+                         slo_by_model={"b": 0.010})
+    for i in range(10):
+        m.on_request(Request(i, 0.0, model_id="a"))
+        m.on_response(mk_model_response(i, 0.020, "a"))     # meets 50ms
+        m.on_request(Request(100 + i, 0.0, model_id="b"))
+        m.on_response(mk_model_response(100 + i, 0.020, "b"))  # misses 10ms
+    assert m.within_slo_model("a") == 10
+    assert m.within_slo_model("b") == 0
+    assert m.within_slo() == 10                 # aggregate honours overrides
+    rep = m.models_report(duration=1.0)
+    assert rep["a"]["slo_deadline_ms"] == pytest.approx(50.0)
+    assert rep["b"]["slo_deadline_ms"] == pytest.approx(10.0)
+
+
+def test_offered_but_never_completed_model_appears():
+    m = MetricsCollector(slo_deadline=1.0)
+    for i in range(5):
+        m.on_request(Request(i, 0.0, model_id="ghost"))
+    rep = m.models_report(duration=1.0)
+    assert rep["ghost"]["offered"] == 5
+    assert rep["ghost"]["completed"] == 0
+    assert rep["ghost"]["slo_attainment"] == 0.0
+    assert rep["ghost"]["latency_ms"]["p95"] is None
+
+
+def test_instance_report_keyed_by_model():
+    from repro.serving import TabulatedBackend, WorkerInstance
+    from repro.serving.metrics import instance_report
+    backend = TabulatedBackend(RESNET50.profile(8, 64))
+    workers = [WorkerInstance(0, 4, 8, backend, model_id="b"),
+               WorkerInstance(0, 4, 8, backend, model_id="a"),
+               WorkerInstance(1, 2, 4, backend, model_id="a")]
+    for w in workers:
+        w.process(4, 0.0)
+    rows = instance_report(workers, now=10.0)
+    # sorted by (model_id, id); ids are only unique within a tenant
+    assert [(r["model_id"], r["id"]) for r in rows] == [
+        ("a", 0), ("a", 1), ("b", 0)]
+    only_a = instance_report(workers, now=10.0, model_id="a")
+    assert [(r["model_id"], r["id"]) for r in only_a] == [("a", 0), ("a", 1)]
+
+
+def test_instance_report_default_model_matches_legacy_shape():
+    """One-tenant degenerate case: same ordering and fields as before,
+    plus the model_id column pinned to 'default'."""
+    from repro.serving import TabulatedBackend, WorkerInstance
+    from repro.serving.metrics import instance_report
+    backend = TabulatedBackend(RESNET50.profile(8, 64))
+    workers = [WorkerInstance(j, 4, 8, backend) for j in range(3)]
+    for w in workers:
+        w.process(8, 0.0)
+    rows = instance_report(workers, now=5.0)
+    assert [r["id"] for r in rows] == [0, 1, 2]
+    assert all(r["model_id"] == "default" for r in rows)
+    for row in rows:
+        assert {"id", "threads", "batch", "batches", "items", "busy_time_s",
+                "idle_time_s", "utilization", "failures",
+                "idle_gap_hist"} <= set(row)
+
+
 def test_attach_to_live_server():
     profile = RESNET50.profile(8, 64)
     opt = PackratOptimizer(profile)

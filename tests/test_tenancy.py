@@ -1,0 +1,332 @@
+"""Multi-model resource plane tests (ISSUE 3 tentpole).
+
+* ``ResourcePool`` / ``UnitLease``: disjoint contiguous spans, identity
+  preservation across splits, lease-scoped allocators that respect
+  global domain boundaries.
+* ``MultiModelServer``: every request served exactly once per tenant,
+  responses tagged with the right ``model_id``, the planner re-splits
+  units when load shifts between tenants, the static plane never plans,
+  and the one-tenant degenerate case stays clean.
+"""
+
+import collections
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.knapsack import InstanceGroup, PackratConfig
+from repro.core.multimodel import ModelWorkload, MultiModelAllocator
+from repro.core.paper_profiles import BERT, RESNET50
+from repro.serving import (AllocationError, ControllerConfig, EventLoop,
+                           MultiModelServer, PoissonWorkload, Request,
+                           ResourceAllocator, ResourcePool, StepWorkload,
+                           TabulatedBackend, TenantSpec)
+
+
+def cfg_of(*groups):
+    return PackratConfig(groups=tuple(InstanceGroup(*g) for g in groups),
+                         latency=1.0)
+
+
+# --------------------------------------------------------------------- #
+# lease-scoped allocators
+# --------------------------------------------------------------------- #
+def test_allocator_scoped_to_lease_units():
+    alloc = ResourceAllocator(4, 8, units=(4, 5, 6, 7))
+    ps = alloc.allocate(cfg_of((2, 2, 4)))
+    assert [p.units for p in ps] == [(4, 5), (6, 7)]
+    assert alloc.busy_units == 4
+    with pytest.raises(AllocationError):
+        alloc.allocate(cfg_of((1, 4, 8), (1, 4, 8), (1, 4, 8)))
+    alloc.release(ps)
+    assert alloc.busy_units == 0
+
+
+def test_lease_allocator_respects_global_domains():
+    # lease (2..5) straddles the global domain boundary at 4: a 3-unit
+    # instance cannot sit domain-local, so it must span (allowed once)
+    alloc = ResourceAllocator(4, domain_size=4, units=(2, 3, 4, 5))
+    ps = alloc.allocate(cfg_of((1, 3, 4)))
+    assert alloc.spans_domains(ps[0])
+    # a 2-unit instance fits domain-locally in the remainder? units left
+    # are one per domain -> not contiguous within a domain, and the one
+    # spanning instance is used up
+    with pytest.raises(AllocationError):
+        ResourceAllocator(4, domain_size=4, units=(2, 3, 4, 5),
+                          oversubscribe_factor=1).allocate(
+            cfg_of((2, 3, 4)))
+
+
+def test_pool_grants_disjoint_contiguous_spans():
+    pool = ResourcePool(16, domain_size=8)
+    a = pool.grant("a", 6)
+    b = pool.grant("b", 10)
+    assert a.units == tuple(range(6))
+    assert b.units == tuple(range(6, 16))
+    assert pool.leased_units == 16
+    with pytest.raises(ValueError):
+        pool.grant("a", 1)          # duplicate tenant
+    with pytest.raises(AllocationError):
+        pool.grant("c", 1)          # pool exhausted
+
+
+def test_pool_split_preserves_unchanged_lease_identity():
+    pool = ResourcePool(16)
+    a = pool.grant("a", 8)
+    b = pool.grant("b", 8)
+    a.allocator.allocate(cfg_of((1, 8, 8)))     # live occupancy
+    new = pool.split({"a": 8, "b": 8})
+    assert new["a"] is a and new["b"] is b      # nothing moved
+    assert new["a"].allocator.busy_units == 8   # occupancy survived
+    new2 = pool.split({"a": 4, "b": 12})
+    assert new2["a"] is not a and new2["b"] is not b
+    assert new2["a"].units == tuple(range(4))
+    assert new2["b"].units == tuple(range(4, 16))
+    assert new2["b"].allocator.busy_units == 0  # fresh allocator
+
+
+def test_pool_split_validation():
+    pool = ResourcePool(8)
+    pool.grant("a", 4)
+    pool.grant("b", 4)
+    with pytest.raises(ValueError):
+        pool.split({"a": 8})                    # misses b
+    with pytest.raises(ValueError):
+        pool.split({"a": 4, "b": 4, "c": 1})    # unknown tenant
+    with pytest.raises(AllocationError):
+        pool.split({"a": 8, "b": 9})            # exceeds pool
+    with pytest.raises(ValueError):
+        pool.split({"a": 0, "b": 8})            # every tenant >= 1
+
+
+# --------------------------------------------------------------------- #
+# rate-floor planning (core extension the live planner depends on)
+# --------------------------------------------------------------------- #
+def test_multimodel_min_rate_floor_grows_share():
+    base = [ModelWorkload("r", RESNET50.profile(16, 256), batch=8),
+            ModelWorkload("b", BERT.profile(16, 256), batch=8)]
+    free = {p.name: p.units
+            for p in MultiModelAllocator(base).allocate(16)}
+    rated = [base[0],
+             ModelWorkload("b", BERT.profile(16, 256), batch=8,
+                           min_rate=420.0)]
+    with_floor = {p.name: p.units
+                  for p in MultiModelAllocator(rated).allocate(16)}
+    opt = PackratOptimizer(BERT.profile(16, 256),
+                           allow_unused_threads=True)
+    cfg = opt.solve(with_floor["b"], 8)
+    assert cfg.throughput >= 420.0
+    assert with_floor["b"] >= free["b"]
+
+
+def test_multimodel_prior_restores_idle_tenant_share():
+    wl = [ModelWorkload("r", RESNET50.profile(16, 256), batch=2),
+          ModelWorkload("b", BERT.profile(16, 256), batch=2)]
+    mma = MultiModelAllocator(wl)
+    with_prior = {p.name: p.units
+                  for p in mma.allocate(16, prior={"r": 8, "b": 8})}
+    assert with_prior["r"] >= 8 or with_prior["b"] >= 8
+    assert sum(with_prior.values()) <= 16
+
+
+# --------------------------------------------------------------------- #
+# MultiModelServer end-to-end
+# --------------------------------------------------------------------- #
+PROFILE_R = RESNET50.profile(8, 64)
+PROFILE_B = BERT.profile(8, 64)
+
+
+def _specs(fat_share=None):
+    """Two tenants; ``fat_share`` switches to static fat-only optimizers."""
+    out = []
+    for name, profile in (("resnet50", PROFILE_R), ("bert", PROFILE_B)):
+        if fat_share is not None:
+            opt = PackratOptimizer({(t, b): lat
+                                    for (t, b), lat in profile.items()
+                                    if t == fat_share})
+        else:
+            opt = None
+        out.append(TenantSpec(name, profile, TabulatedBackend(profile),
+                              initial_batch=4, optimizer=opt))
+    return out
+
+
+def _mixed_arrivals(duration, seed=0, rate_r=10.0, rate_b=40.0):
+    r = PoissonWorkload(rate_rps=rate_r).arrivals(duration, seed=seed)
+    b = PoissonWorkload(rate_rps=rate_b).arrivals(duration, seed=seed + 1)
+    merged = sorted([(t, "resnet50") for t in r] + [(t, "bert") for t in b])
+    return [Request(i, t, model_id=m) for i, (t, m) in enumerate(merged)]
+
+
+def test_multimodel_serves_everything_once_with_model_tags():
+    loop = EventLoop()
+    server = MultiModelServer(loop, total_units=8, tenants=_specs(),
+                              plan_interval=2.0)
+    reqs = _mixed_arrivals(10.0)
+    for req in reqs:
+        loop.at(req.arrival, (lambda req=req: server.submit(req)))
+    loop.run_until(60.0)
+    assert len(server.responses) == len(reqs)
+    ids = [r.request.id for r in server.responses]
+    assert len(set(ids)) == len(ids)
+    by_model = collections.Counter(r.model_id for r in server.responses)
+    want = collections.Counter(r.model_id for r in reqs)
+    assert by_model == want
+    # responses came from workers of the matching tenant
+    assert all(r.request.model_id == r.model_id for r in server.responses)
+
+
+def test_multimodel_rejects_unknown_model():
+    loop = EventLoop()
+    server = MultiModelServer(loop, total_units=8, tenants=_specs())
+    with pytest.raises(KeyError, match="no tenant"):
+        server.submit(Request(0, 0.0, model_id="nope"))
+
+
+def test_planner_resplits_units_when_load_shifts():
+    """bert's arrival rate steps up mid-run: the planner must grow its
+    lease beyond the even split (and keep every lease pair disjoint)."""
+    loop = EventLoop()
+    ccfg = ControllerConfig()
+    ccfg.estimator.max_batch = 64
+    server = MultiModelServer(loop, total_units=8, tenants=_specs(),
+                              config=ccfg, plan_interval=2.0)
+    cap_b = 8 / PackratOptimizer(PROFILE_B).solve(4, 8).latency
+    wl_b = StepWorkload(low=0.2 * cap_b, high=2.5 * cap_b, t_step=6.0)
+    b_times = wl_b.arrivals(20.0, seed=2)
+    r_times = PoissonWorkload(rate_rps=5.0).arrivals(20.0, seed=3)
+    merged = sorted([(t, "bert") for t in b_times]
+                    + [(t, "resnet50") for t in r_times])
+    for i, (t, m) in enumerate(merged):
+        loop.at(t, (lambda i=i, t=t, m=m:
+                    server.submit(Request(i, t, model_id=m))))
+    loop.run_until(90.0)
+    assert len(server.responses) == len(merged)
+    assert len(server.plan_log) > 1, "planner never re-planned"
+    peak_b = max(shares["bert"] for _, shares, _ in server.plan_log)
+    assert peak_b > 4, "bert never got more than its even split"
+    # every plan's shares stay within the pool and cover both tenants
+    for _, shares, _ in server.plan_log:
+        assert sum(shares.values()) <= 8
+        assert set(shares) == {"resnet50", "bert"}
+
+
+def test_static_plane_never_replans():
+    loop = EventLoop()
+    server = MultiModelServer(loop, total_units=8, tenants=_specs(4),
+                              adaptive=False)
+    reqs = _mixed_arrivals(8.0)
+    for req in reqs:
+        loop.at(req.arrival, (lambda req=req: server.submit(req)))
+    loop.run_until(45.0)
+    assert len(server.responses) == len(reqs)
+    assert len(server.plan_log) == 1            # the initial split only
+    assert server.shares() == {"resnet50": 4, "bert": 4}
+    for tenant in server.tenants.values():
+        assert len(tenant.reconfig_log) == 1    # never reconfigured
+
+
+def test_relocate_moves_workers_even_when_shape_unchanged():
+    """A same-size span move must respawn the tenant's workers inside
+    the new lease — identical ⟨i,t,b⟩ shape is no excuse to keep running
+    on units that now belong to another tenant."""
+    pool = ResourcePool(8)
+    lease_a = pool.grant("solo", 4)
+    pool.grant("other", 4)
+    loop = EventLoop()
+    from repro.serving import ModelTenant
+    opt = PackratOptimizer(PROFILE_R, allow_unused_threads=True)
+    tenant = ModelTenant(loop, total_units=4, optimizer=opt,
+                         backend=TabulatedBackend(PROFILE_R),
+                         initial_batch=4, allocator=lease_a.allocator,
+                         model_id="solo")
+    old_workers = list(tenant.dispatcher.instances)
+    assert all(set(w.units) <= set(lease_a.units) for w in old_workers)
+    old_cfg = tenant.apc.active
+    # swap the two spans; sizes unchanged, so the knapsack shape is too
+    leases = pool.split({"solo": 4, "other": 4})
+    moved = pool.split({"other": 4, "solo": 4})  # no-op: same spans
+    assert moved["solo"] is leases["solo"]
+    # force a genuine span move by resizing through an intermediate step
+    pool.split({"solo": 2, "other": 6})
+    new = pool.split({"solo": 4, "other": 4})
+    # "solo" is laid out first, so its span is back to units 0..3 — but
+    # via a fresh lease object/allocator
+    assert new["solo"].allocator is not lease_a.allocator
+    assert tenant.relocate(new["solo"], 4)
+    assert tenant.apc.active.groups == old_cfg.groups  # same shape...
+    live = tenant.dispatcher.instances
+    assert all(set(w.units) <= set(new["solo"].units) for w in live)
+    assert all(w not in old_workers for w in live)     # ...new workers
+    assert all(w.released_at is not None for w in old_workers)
+    assert new["solo"].allocator.busy_units == 4       # occupancy moved too
+
+
+def test_worker_ids_unique_per_tenant_across_relocations():
+    """Relocations hand the tenant a fresh lease allocator; worker ids
+    must keep counting (instance_report keys rows by (model_id, id))."""
+    pool = ResourcePool(8)
+    lease = pool.grant("solo", 4)
+    pool.grant("other", 4)
+    loop = EventLoop()
+    from repro.serving import ModelTenant
+    opt = PackratOptimizer(PROFILE_R, allow_unused_threads=True)
+    tenant = ModelTenant(loop, total_units=4, optimizer=opt,
+                         backend=TabulatedBackend(PROFILE_R),
+                         initial_batch=4, allocator=lease.allocator,
+                         model_id="solo")
+    pool.split({"solo": 2, "other": 6})
+    tenant.relocate(pool.lease_of("solo"), 4)
+    pool.split({"solo": 4, "other": 4})
+    tenant.relocate(pool.lease_of("solo"), 4)
+    ids = [w.id for w in tenant.workers_ever]
+    assert len(set(ids)) == len(ids), f"duplicate worker ids: {ids}"
+
+
+def test_cross_tenant_interference_counts_peer_instances():
+    """With an interference backend, a tenant's batch latency must see
+    the pod-wide live instance count, not just its own workers."""
+    from repro.core.interference import CPUInterferenceModel
+
+    seen = []
+
+    class Probe(TabulatedBackend):
+        def batch_latency(self, t, b, *, n_live_instances=1, total_units=0):
+            seen.append(n_live_instances)
+            return super().batch_latency(
+                t, b, n_live_instances=n_live_instances,
+                total_units=total_units)
+
+    loop = EventLoop()
+    specs = [TenantSpec(name, prof,
+                        Probe(prof, interference=CPUInterferenceModel(),
+                              total_units=8),
+                        initial_batch=4)
+             for name, prof in (("resnet50", PROFILE_R), ("bert", PROFILE_B))]
+    server = MultiModelServer(loop, total_units=8, tenants=specs,
+                              adaptive=False)
+    for req in _mixed_arrivals(4.0, rate_r=20.0, rate_b=20.0):
+        loop.at(req.arrival, (lambda req=req: server.submit(req)))
+    loop.run_until(30.0)
+    # each tenant runs one fat instance; with a live peer the count
+    # reaching the backend must exceed the tenant-local 1
+    assert max(seen) >= 2
+
+
+def test_one_tenant_plane_degenerates_cleanly():
+    """A single tenant owns the whole pool and the planner has nothing
+    to re-split: every request serves once, shares stay fixed."""
+    loop = EventLoop()
+    spec = TenantSpec("solo", PROFILE_R, TabulatedBackend(PROFILE_R),
+                      initial_batch=4)
+    server = MultiModelServer(loop, total_units=8, tenants=[spec],
+                              plan_interval=2.0)
+    times = PoissonWorkload(rate_rps=15.0).arrivals(8.0, seed=5)
+    for i, t in enumerate(times):
+        loop.at(t, (lambda i=i, t=t:
+                    server.submit(Request(i, t, model_id="solo"))))
+    loop.run_until(45.0)
+    assert len(server.responses) == len(times)
+    assert server.shares() == {"solo": 8}
+    assert all(s == {"solo": 8} for _, s, _ in server.plan_log)
+    assert all(w.model_id == "solo" for w in server.workers_ever)
