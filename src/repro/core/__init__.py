@@ -9,17 +9,19 @@
 """
 
 from .estimator import (ArrivalRateSignal, BatchSizeEstimator,
-                        EstimatorConfig, floor_power_of_two)
+                        EstimatorConfig, LatencyCorrectionSignal,
+                        floor_power_of_two)
 from .interference import (CPUInterferenceModel, TPUInterferenceModel,
                            apply_constant_penalty)
 from .knapsack import (InstanceGroup, PackratConfig, PackratOptimizer,
-                       brute_force_solve, fat_config,
+                       brute_force_solve, fat_config, next_power_of_two,
                        one_thread_per_core_config, powers_of_two,
                        profile_grid)
 from .multimodel import (ModelPlacement, ModelWorkload, MultiModelAllocator,
                          solve_with_slo)
-from .profiler import (AnalyticProfiler, MeasuredProfiler, ProfileSpec,
-                       TabulatedProfiler, profiling_cost_summary)
+from .profiler import (AnalyticProfiler, MeasuredProfiler,
+                       ProfileCalibrator, ProfileSpec, TabulatedProfiler,
+                       measure_latency, profiling_cost_summary)
 from .reconfig import (ActivePassiveController, Phase, needs_active_passive)
 from .roofline import (TPU_V5E, HardwareSpec, RooflineTerms, model_flops_ratio)
 
@@ -32,6 +34,7 @@ __all__ = [
     "EstimatorConfig",
     "HardwareSpec",
     "InstanceGroup",
+    "LatencyCorrectionSignal",
     "MeasuredProfiler",
     "ModelPlacement",
     "ModelWorkload",
@@ -39,6 +42,7 @@ __all__ = [
     "PackratConfig",
     "PackratOptimizer",
     "Phase",
+    "ProfileCalibrator",
     "ProfileSpec",
     "RooflineTerms",
     "TPUInterferenceModel",
@@ -48,8 +52,10 @@ __all__ = [
     "brute_force_solve",
     "fat_config",
     "floor_power_of_two",
+    "measure_latency",
     "model_flops_ratio",
     "needs_active_passive",
+    "next_power_of_two",
     "one_thread_per_core_config",
     "powers_of_two",
     "profile_grid",

@@ -86,6 +86,42 @@ class ArrivalRateSignal:
         return 1.0 / gap
 
 
+class LatencyCorrectionSignal:
+    """EWMA of observed/expected latency ratios — one cell of the online
+    profile-refinement loop (paper Fig. 9's expected-vs-observed gap,
+    tracked instead of merely reported).
+
+    Ratios are clamped to ``[1/clamp, clamp]`` before smoothing so a
+    single pathological measurement (a paused worker thread, a clock
+    hiccup) cannot poison the correction factor.
+    """
+
+    def __init__(self, alpha: float = 0.25, clamp: float = 16.0) -> None:
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if clamp < 1.0:
+            raise ValueError(f"clamp must be >= 1, got {clamp}")
+        self.alpha = alpha
+        self.clamp = clamp
+        self.samples = 0
+        self._ratio: Optional[float] = None
+
+    def observe(self, ratio: float) -> None:
+        """Fold one observed/expected ratio into the EWMA."""
+        if not (ratio > 0.0):        # rejects NaN and non-positive ratios
+            return
+        ratio = min(max(ratio, 1.0 / self.clamp), self.clamp)
+        self._ratio = (ratio if self._ratio is None
+                       else self.alpha * ratio
+                       + (1.0 - self.alpha) * self._ratio)
+        self.samples += 1
+
+    @property
+    def ratio(self) -> float:
+        """Smoothed observed/expected ratio (1.0 until any sample)."""
+        return 1.0 if self._ratio is None else self._ratio
+
+
 class BatchSizeEstimator:
     """Online batch-size estimation from queue-depth observations."""
 

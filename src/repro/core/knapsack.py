@@ -290,6 +290,13 @@ def powers_of_two(limit: int) -> List[int]:
     return [1 << k for k in range(limit.bit_length()) if (1 << k) <= limit]
 
 
+def next_power_of_two(b: int) -> int:
+    """Smallest power of two >= b (>= 1): the compiled-bucket rounding
+    shared by every real-execution path (servers pad partial batches to
+    compiled bucket sizes rather than recompiling per size)."""
+    return 1 << max(0, (b - 1)).bit_length()
+
+
 def profile_grid(threads: int, max_batch: int, *, thread_values: Optional[Sequence[int]] = None
                  ) -> List[Tuple[int, int]]:
     """The ⟨t,b⟩ grid Packrat profiles: t ∈ {1..T} × b ∈ powers of two (§3.2).

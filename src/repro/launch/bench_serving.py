@@ -40,12 +40,33 @@ then be compared against observed percentiles.  ``--slo-ms`` pins an
 absolute SLO deadline and additionally reports the largest SLO-feasible
 batch per model (``solve_with_slo``).
 
-Everything is seeded and runs on the deterministic event loop, so two
-invocations with the same flags produce byte-identical JSON reports.
+``--execution real`` switches the serving engine from the simulated
+plane onto the **real execution plane** (``serving/plane.py``): the
+same controller/dispatcher stack drives a micro JAX model
+(``repro.models.micro``, selected with ``--real-model``) on wall-clock
+time — the ⟨t,b⟩ profile is *measured* through the plane's own jitted
+runners, arrivals fire as wall-clock timers, worker batches execute on
+per-instance threads under a T-unit concurrency budget, and the
+report's latencies are wall-clock measurements.  A
+:class:`~repro.core.profiler.ProfileCalibrator` closes the loop: each
+batch's observed latency refines the expected-vs-observed correction,
+the report gains a ``calibration`` section, and the packrat policy
+re-solves its knapsack against the calibrated costs.  Offered rates
+are derived from the measured capacity and then capped
+(``--real-rate-cap``) so the Python-level event machinery is not the
+bottleneck being measured.
+
+Everything *simulated* is seeded and runs on the deterministic event
+loop, so two invocations with the same flags produce byte-identical
+JSON reports; real-execution reports are wall-clock measurements and
+deterministic only in structure.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.bench_serving \
         --scenario diurnal --duration 60
+    PYTHONPATH=src python -m repro.launch.bench_serving \
+        --scenario steady-poisson --duration 2 --units 4 \
+        --execution real --real-model mlp-tiny
     PYTHONPATH=src python -m repro.launch.bench_serving --scenario all \
         --model gpt2 --out report.json
     PYTHONPATH=src python -m repro.launch.bench_serving \
@@ -93,6 +114,9 @@ def policy_key(policy: str, dispatch: str) -> str:
 # queued work before declaring the remainder incomplete
 DRAIN_FACTOR = 1.0
 DRAIN_MIN_S = 30.0
+# real execution drains wall-clock seconds, so the floor is kept small
+REAL_DRAIN_MIN_S = 2.0
+REAL_DRAIN_FACTOR = 0.5
 
 
 def _make_backend(profile, *, interference: bool, units: int
@@ -102,6 +126,22 @@ def _make_backend(profile, *, interference: bool, units: int
     isolated-profile expectation (Fig. 9)."""
     model = CPUInterferenceModel() if interference else None
     return TabulatedBackend(profile, interference=model, total_units=units)
+
+
+def _controller_report_fields(rep: Dict[str, object], server,
+                              now: float) -> None:
+    """The per-run controller fields every single-model policy report
+    carries (sim and real must stay one schema): reconfiguration
+    count/log, the final config and its optimizer-expected makespan —
+    the Fig. 9 "expected" line — and the per-instance breakdown."""
+    rep["reconfigurations"] = len(server.reconfig_log) - 1
+    rep["final_config"] = str(server.reconfig_log[-1][2])
+    rep["expected_latency_ms"] = server.reconfig_log[-1][2].latency * 1e3
+    rep["reconfig_log"] = [
+        {"t": t, "batch": b, "config": str(cfg)}
+        for t, b, cfg in server.reconfig_log
+    ]
+    rep["instances"] = instance_report(server.workers_ever, now)
 
 
 def _static_optimizer(model: ProfileModel, units: int, max_batch: int
@@ -153,17 +193,154 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
     rep = metrics.report(duration=duration)
     rep["dispatch"] = dispatch
     rep["interference"] = interference
-    rep["reconfigurations"] = len(server.reconfig_log) - 1
-    rep["final_config"] = str(server.reconfig_log[-1][2])
-    # the optimizer's isolated-profile makespan of the final config: the
-    # Fig. 9 "expected" line; observed percentiles include interference
-    rep["expected_latency_ms"] = server.reconfig_log[-1][2].latency * 1e3
-    rep["reconfig_log"] = [
-        {"t": t, "batch": b, "config": str(cfg)}
-        for t, b, cfg in server.reconfig_log
-    ]
-    rep["instances"] = instance_report(server.workers_ever, loop.now)
+    _controller_report_fields(rep, server, loop.now)
+    fallbacks = server.backend.fallback_report()
+    if fallbacks["count"]:
+        # off-grid thread-count lookups were interpolated/clamped — the
+        # backend consulted a sparse profile outside its grid; surface
+        # the substitution instead of letting it pass silently
+        rep["profile_fallbacks"] = fallbacks
     return rep
+
+
+# --------------------------------------------------------------------- #
+# real-execution path (wall clock, micro JAX models)
+# --------------------------------------------------------------------- #
+def _cap_rate(arrivals: List[float], duration: float,
+              cap: Optional[float]) -> Tuple[List[float], bool]:
+    """Thin a trace to at most ``cap`` req/s (evenly, deterministically).
+
+    Micro-model capacities are tens of thousands of req/s; offering that
+    to the wall-clock reactor would benchmark Python's event machinery,
+    not the serving engine.  Thinning selects evenly spaced indices for
+    exactly the target count — an integer stride would halve a trace
+    that barely exceeds the cap."""
+    if cap is None or cap <= 0:
+        return arrivals, False
+    target = int(cap * duration)
+    if len(arrivals) <= target:
+        return arrivals, False
+    return [arrivals[i * len(arrivals) // target]
+            for i in range(target)], True
+
+
+def run_real_policy(policy: str, arrivals: List[float], *, factory,
+                    profile: Dict[Tuple[int, int], float], units: int,
+                    duration: float, initial_batch: int, max_batch: int,
+                    slo_deadline: float, reconfigure_timeout: float,
+                    dispatch: str = "sync",
+                    real_model: str = "") -> Dict[str, object]:
+    """One (policy, dispatch) combination on the real execution plane.
+
+    The ⟨t,b⟩ planning table is the profile *measured through the same
+    plane runners* the server then executes; a ProfileCalibrator folds
+    every observed batch latency back into the expectations (watchdog
+    budgets via CalibratedBackend, knapsack costs via the tenant's
+    optimizer refresh) — the closed Fig. 9 loop.
+    """
+    from ..core.profiler import ProfileCalibrator
+    from ..serving import CalibratedBackend, RealPlane
+    if policy == "static":
+        fat = {(t, b): lat for (t, b), lat in profile.items() if t == units}
+        opt = PackratOptimizer(fat)
+        initial_batch = min(initial_batch, max_batch)
+        ccfg = ControllerConfig()
+        ccfg.estimator.reconfigure_timeout = 10.0 * duration + 1e6
+        # observes + reports the expected-vs-observed gap, never refreshes
+        cal = ProfileCalibrator(fat, refresh_interval=math.inf)
+    elif policy == "packrat":
+        opt = PackratOptimizer(profile)
+        ccfg = ControllerConfig()
+        ccfg.estimator.reconfigure_timeout = reconfigure_timeout
+        ccfg.estimator.max_batch = max_batch
+        cal = ProfileCalibrator(profile, refresh_interval=reconfigure_timeout)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    ccfg.dispatch_policy = dispatch
+
+    plane = RealPlane(factory, units)
+    server = PackratServer(
+        plane, total_units=units, optimizer=opt,
+        backend=CalibratedBackend(TabulatedBackend(profile), cal),
+        initial_batch=initial_batch, config=ccfg, calibrator=cal)
+    metrics = MetricsCollector(slo_deadline=slo_deadline)
+    drain = max(REAL_DRAIN_MIN_S, REAL_DRAIN_FACTOR * duration)
+    metrics.attach(server, sample_interval=min(0.25, duration / 100.0),
+                   until=duration + drain)
+    for i, t in enumerate(arrivals):
+        metrics.on_request(Request(i, t))
+        plane.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    plane.run_until(duration + drain)
+    plane.close()
+
+    rep = metrics.report(duration=duration)
+    rep["execution"] = "real"
+    rep["real_model"] = real_model
+    rep["dispatch"] = dispatch
+    _controller_report_fields(rep, server, plane.now)
+    calibration = cal.report()
+    calibration["optimizer_refreshes"] = server.calibration_refreshes
+    rep["calibration"] = calibration
+    return rep
+
+
+def run_real_scenario(sc: Scenario, *, real_model: str, units: int,
+                      duration: float, seed: int, initial_batch: int,
+                      max_batch: int, slo_factor: float,
+                      reconfigure_timeout: float,
+                      policies: tuple = POLICIES,
+                      dispatches: Tuple[str, ...] = ("sync",),
+                      rate_cap: Optional[float] = 300.0,
+                      slo_ms: Optional[float] = None) -> Dict[str, object]:
+    """Every policy × dispatch combo on the real plane, sharing one
+    measured profile and one (capped) arrival trace."""
+    from ..core.knapsack import powers_of_two
+    from ..core.profiler import ProfileSpec
+    from ..models.micro import make_micro_runner
+    from ..serving import RealPlane
+    factory = make_micro_runner(real_model)
+    # profile through the plane: the same jitted runners, the same
+    # measurement helper the serving path uses (§3.2 grid, but a sparse
+    # powers-of-two thread axis — the budget dimension on one device —
+    # always including T itself so the static fat row exists)
+    thread_values = tuple(sorted(set(powers_of_two(units)) | {units}))
+    prof_plane = RealPlane(factory, units)
+    profile = prof_plane.profile(
+        ProfileSpec(units, max_batch, thread_values=thread_values),
+        warmup=1, iters=3)
+    prof_plane.close()
+    opt = PackratOptimizer(profile)
+    initial_batch = max(1, min(initial_batch, units * max_batch))
+    ctx = ScenarioContext(threads=units, optimizer=opt, duration=duration,
+                          seed=seed, max_total_batch=units * max_batch)
+    workload = sc.build(ctx)
+    arrivals = workload.arrivals(duration, seed=seed)
+    arrivals, capped = _cap_rate(arrivals, duration, rate_cap)
+    slo = (slo_ms * 1e-3 if slo_ms is not None
+           else slo_factor * opt.solve(units, initial_batch).latency)
+    out: Dict[str, object] = {
+        "scenario": sc.name,
+        "description": sc.description,
+        "workload": workload.name,
+        "execution": "real",
+        "real_model": real_model,
+        "offered": len(arrivals),
+        "offered_rate_rps": len(arrivals) / duration,
+        "rate_capped": capped,
+        "measured_profile_ms": {f"{t},{b}": lat * 1e3
+                                for (t, b), lat in sorted(profile.items())},
+        "slo_deadline_ms": slo * 1e3,
+        "policies": [policy_key(p, d) for p in policies for d in dispatches],
+    }
+    for policy in policies:
+        for dispatch in dispatches:
+            out[policy_key(policy, dispatch)] = run_real_policy(
+                policy, arrivals, factory=factory, profile=profile,
+                units=units, duration=duration,
+                initial_batch=initial_batch, max_batch=max_batch,
+                slo_deadline=slo, reconfigure_timeout=reconfigure_timeout,
+                dispatch=dispatch, real_model=real_model)
+    return out
 
 
 def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
@@ -379,6 +556,38 @@ def _parse_models(spec: str) -> Dict[str, ProfileModel]:
     return out
 
 
+def _select_scenarios(args, ap) -> List[Scenario]:
+    """Single-model scenario selection shared by the simulated and real
+    execution paths: a ``--trace`` replay, ``all``, or one registered
+    scenario (argparse error on anything unloadable/unknown)."""
+    if args.trace:
+        try:
+            trace = TraceWorkload.from_file(args.trace)
+        except (OSError, ValueError, KeyError) as e:
+            ap.error(f"cannot load trace {args.trace!r}: {e}")
+        return [Scenario(name=f"trace:{args.trace}",
+                         description="user-supplied trace replay",
+                         build=lambda ctx: trace)]
+    if args.scenario == "all":
+        return list_scenarios()
+    try:
+        return [get_scenario(args.scenario)]
+    except KeyError as e:
+        ap.error(e.args[0])
+
+
+def _emit_report(report: Dict[str, object], out: Optional[str]) -> None:
+    """Write the JSON report to ``out`` or stdout (every path emits
+    identically: sorted keys, indent 2, trailing newline on file)."""
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+        print(f"[bench] report written to {out}", file=sys.stderr)
+    else:
+        print(text)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Scenario-driven serving benchmark "
@@ -388,8 +597,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--trace", default=None,
                     help="JSON/CSV arrival trace to replay instead of a "
                          "registered scenario")
-    ap.add_argument("--model", default="inception_v3",
-                    choices=sorted(PAPER_MODELS))
+    ap.add_argument("--model", default=None,
+                    choices=sorted(PAPER_MODELS),
+                    help="simulated-plane profile model "
+                         "(default: inception_v3)")
     ap.add_argument("--models", default=None,
                     help="comma-separated model list — switches to the "
                          "multi-model resource plane (mixed-* scenarios)")
@@ -417,6 +628,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                     choices=("sync", "continuous", "both"),
                     help="dispatch policy axis: paper-faithful batch-sync, "
                          "continuous per-instance, or both")
+    ap.add_argument("--execution", default="sim", choices=("sim", "real"),
+                    help="execution plane: deterministic virtual-clock "
+                         "simulation, or real wall-clock jitted JAX "
+                         "execution of a micro model")
+    ap.add_argument("--real-model", default="mlp-tiny",
+                    help="micro model for --execution real "
+                         "(repro.models.micro registry)")
+    ap.add_argument("--real-rate-cap", type=float, default=300.0,
+                    help="cap offered load (req/s) under --execution real "
+                         "so Python event overhead is not the bottleneck; "
+                         "<= 0 disables")
     ap.add_argument("--out", default=None, help="write JSON report here "
                                                 "(default: stdout)")
     ap.add_argument("--list", action="store_true",
@@ -440,6 +662,62 @@ def main(argv: Optional[List[str]] = None) -> int:
     dispatches = (DISPATCHES if args.dispatch == "both"
                   else (args.dispatch,))
     keys = [policy_key(p, d) for p in POLICIES for d in dispatches]
+
+    if args.execution == "real":
+        if args.models:
+            ap.error("--execution real is single-model for now; "
+                     "drop --models")
+        if args.model:
+            ap.error("--model selects a simulated-plane profile and has "
+                     "no effect under --execution real; use --real-model")
+        if args.interference:
+            ap.error("--interference is a simulated-plane model; real "
+                     "execution measures interference instead of "
+                     "modelling it")
+        from ..models.micro import MICRO_MODELS
+        if args.real_model not in MICRO_MODELS:
+            ap.error(f"unknown --real-model {args.real_model!r}; "
+                     f"choose from {sorted(MICRO_MODELS)}")
+        scenarios = _select_scenarios(args, ap)
+        report: Dict[str, object] = {
+            "execution": "real",
+            "real_model": args.real_model,
+            "real_rate_cap_rps": args.real_rate_cap,
+            "units": args.units,
+            "duration_s": args.duration,
+            "seed": args.seed,
+            "initial_batch": args.initial_batch,
+            "max_batch": args.max_batch,
+            "slo_factor": args.slo_factor,
+            "slo_ms": args.slo_ms,
+            "dispatches": list(dispatches),
+            "policies": keys,
+            "scenarios": {},
+        }
+        for sc in scenarios:
+            result = run_real_scenario(
+                sc, real_model=args.real_model, units=args.units,
+                duration=args.duration, seed=args.seed,
+                initial_batch=args.initial_batch, max_batch=args.max_batch,
+                slo_factor=args.slo_factor,
+                reconfigure_timeout=args.reconfigure_timeout,
+                dispatches=dispatches, rate_cap=args.real_rate_cap,
+                slo_ms=args.slo_ms)
+            report["scenarios"][sc.name] = result
+            parts = []
+            for key in keys:
+                rep = result[key]
+                p95 = rep["latency_ms"]["p95"]
+                ratio = rep["calibration"]["global_ratio"]
+                parts.append(
+                    f"{key}: p95="
+                    f"{'n/a' if p95 is None else f'{p95:.1f}ms'} "
+                    f"obs/exp={ratio:.1f}x")
+            print(f"[bench] {sc.name:16s} offered={result['offered']:6d} "
+                  f"[real:{args.real_model}]  " + "  ".join(parts),
+                  file=sys.stderr)
+        _emit_report(report, args.out)
+        return 0
 
     if args.models:
         if args.trace:
@@ -492,34 +770,15 @@ def main(argv: Optional[List[str]] = None) -> int:
                     f"goodput={rep['goodput_rps']:.1f}/s")
             print(f"[bench] {sc.name:16s} offered={result['offered']:6d}  "
                   + "  ".join(parts), file=sys.stderr)
-        text = json.dumps(report, indent=2, sort_keys=True)
-        if args.out:
-            with open(args.out, "w") as f:
-                f.write(text + "\n")
-            print(f"[bench] report written to {args.out}", file=sys.stderr)
-        else:
-            print(text)
+        _emit_report(report, args.out)
         return 0
 
-    model = PAPER_MODELS[args.model]
-    if args.trace:
-        try:
-            trace = TraceWorkload.from_file(args.trace)
-        except (OSError, ValueError, KeyError) as e:
-            ap.error(f"cannot load trace {args.trace!r}: {e}")
-        scenarios = [Scenario(name=f"trace:{args.trace}",
-                              description="user-supplied trace replay",
-                              build=lambda ctx: trace)]
-    elif args.scenario == "all":
-        scenarios = list_scenarios()
-    else:
-        try:
-            scenarios = [get_scenario(args.scenario)]
-        except KeyError as e:
-            ap.error(e.args[0])
+    model_name = args.model or "inception_v3"
+    model = PAPER_MODELS[model_name]
+    scenarios = _select_scenarios(args, ap)
 
     report = {
-        "model": args.model,
+        "model": model_name,
         "units": args.units,
         "duration_s": args.duration,
         "seed": args.seed,
@@ -554,13 +813,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"[bench] {sc.name:16s} offered={result['offered']:6d}  "
               + "  ".join(parts), file=sys.stderr)
 
-    text = json.dumps(report, indent=2, sort_keys=True)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
-        print(f"[bench] report written to {args.out}", file=sys.stderr)
-    else:
-        print(text)
+    _emit_report(report, args.out)
     return 0
 
 

@@ -3,9 +3,11 @@
 from .lm import (Model, active_param_count, build_model, cache_specs,
                  decode_step, forward, init_cache, init_params, input_specs,
                  param_count, prefill)
+from .micro import MICRO_MODELS, make_micro_runner
 
 __all__ = [
-    "Model", "active_param_count", "build_model", "cache_specs",
+    "MICRO_MODELS", "Model", "active_param_count", "build_model",
+    "cache_specs",
     "decode_step", "forward", "init_cache", "init_params", "input_specs",
-    "param_count", "prefill",
+    "make_micro_runner", "param_count", "prefill",
 ]

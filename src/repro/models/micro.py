@@ -1,0 +1,108 @@
+"""Micro JAX models for the real execution plane.
+
+The real serving path (``repro.serving.plane.RealPlane``) needs model
+steps that compile in milliseconds and run in tens of microseconds so a
+whole profile-grid + trace-serving run fits in a CI smoke budget, while
+still being genuine jitted JAX execution (dispatch, padding to compiled
+bucket sizes, ``block_until_ready`` — the overheads Packrat's ``c0``
+term models).  Three registered micro models:
+
+* ``mlp-tiny`` / ``mlp`` — small dense MLP stacks (pure matmul work,
+  the compute-bound regime);
+* ``attn-tiny`` — one flash-pattern attention step over a short
+  sequence (``repro.kernels.ref.flash_attention_ref``), the
+  memory-bound regime and the bridge to the Pallas kernel stack.
+
+Every factory returns a ``make_runner(t, b)`` callable: the plane's
+:class:`~repro.serving.plane.RunnerFactory` contract.  ``t`` is the
+instance's unit budget — on a single-device CPU container JAX's
+intra-op pool cannot be repartitioned per call, so ``t`` does not alter
+the step itself; the plane enforces it as a concurrency budget instead
+(see ``plane.py``).  Runners for the same ``b`` share compiled
+executables across ``t`` values.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+MICRO_MODELS = ("mlp-tiny", "mlp", "attn-tiny")
+
+
+def _mlp_factory(dim: int, depth: int, seed: int):
+    keys = jax.random.split(jax.random.PRNGKey(seed), depth)
+    params = [(jax.random.normal(k, (dim, dim), jnp.float32) / dim ** 0.5,
+               jnp.zeros((dim,), jnp.float32)) for k in keys]
+
+    @jax.jit
+    def step(x):
+        for w, c in params:
+            x = jnp.tanh(x @ w + c)
+        return x
+
+    @functools.lru_cache(maxsize=None)
+    def compiled(b: int) -> Callable[[], None]:
+        x = jnp.ones((b, dim), jnp.float32)
+        step(x).block_until_ready()          # compile outside the timed path
+
+        def run() -> None:
+            step(x).block_until_ready()
+
+        return run
+
+    def make_runner(t: int, b: int) -> Callable[[], None]:
+        return compiled(b)
+
+    return make_runner
+
+
+def _attn_factory(seq: int, heads: int, head_dim: int, seed: int):
+    from ..kernels.ref import flash_attention_ref
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+
+    @jax.jit
+    def step(q, k, v):
+        return flash_attention_ref(q, k, v, causal=True)
+
+    @functools.lru_cache(maxsize=None)
+    def compiled(b: int) -> Callable[[], None]:
+        shape = (b, seq, heads, head_dim)
+        q = jax.random.normal(k1, shape, jnp.float32)
+        k = jax.random.normal(k2, shape, jnp.float32)
+        v = jax.random.normal(k3, shape, jnp.float32)
+        step(q, k, v).block_until_ready()
+
+        def run() -> None:
+            step(q, k, v).block_until_ready()
+
+        return run
+
+    def make_runner(t: int, b: int) -> Callable[[], None]:
+        return compiled(b)
+
+    return make_runner
+
+
+_BUILDERS: Dict[str, Callable[[int], Callable]] = {
+    "mlp-tiny": lambda seed: _mlp_factory(dim=32, depth=2, seed=seed),
+    "mlp": lambda seed: _mlp_factory(dim=128, depth=4, seed=seed),
+    "attn-tiny": lambda seed: _attn_factory(seq=16, heads=2, head_dim=16,
+                                            seed=seed),
+}
+
+
+def make_micro_runner(name: str = "mlp-tiny", *, seed: int = 0):
+    """Runner factory for one registered micro model: the plane's
+    ``make_runner(t, b) -> Callable[[], None]`` contract."""
+    if name not in _BUILDERS:
+        raise ValueError(f"unknown micro model {name!r}; "
+                         f"choose from {sorted(_BUILDERS)}")
+    return _BUILDERS[name](seed)
+
+
+__all__ = ["MICRO_MODELS", "make_micro_runner"]

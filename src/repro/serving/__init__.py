@@ -6,10 +6,11 @@ from .allocator import (AllocationError, Placement, ResourceAllocator,
                         ResourcePool, UnitLease)
 from .controller import ControllerConfig, ModelTenant, PackratServer
 from .dispatcher import Dispatcher, DispatcherConfig
-from .instance import (CallableBackend, JaxBackend, LatencyBackend,
-                       TabulatedBackend, WorkerInstance)
+from .instance import (CalibratedBackend, CallableBackend, JaxBackend,
+                       LatencyBackend, TabulatedBackend, WorkerInstance)
 from .metrics import (LatencyBucket, MetricsCollector, instance_report,
                       log2_ms_histogram, nearest_rank)
+from .plane import (ExecutionPlane, RealPlane, SimulatedPlane, as_plane)
 from .policy import (BatchSyncPolicy, ContinuousPolicy, DispatchPolicy,
                      make_policy)
 from .scenarios import (MultiModelScenario, MultiModelScenarioContext,
@@ -25,15 +26,19 @@ from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
 
 __all__ = [
     "AllocationError", "ArrivalProcess", "BatchSyncPolicy",
+    "CalibratedBackend",
     "CallableBackend", "ContinuousPolicy", "ControllerConfig",
     "DEFAULT_MODEL", "DispatchPolicy", "Dispatcher", "DispatcherConfig",
-    "DiurnalWorkload", "EventLoop", "JaxBackend", "LatencyBackend",
+    "DiurnalWorkload", "EventLoop", "ExecutionPlane", "JaxBackend",
+    "LatencyBackend",
     "LatencyBucket", "MMPPWorkload", "MetricsCollector", "ModelTenant",
     "MultiModelScenario", "MultiModelScenarioContext", "MultiModelServer",
     "PackratServer", "Placement", "PoissonWorkload", "RampWorkload",
+    "RealPlane",
     "Request", "ResourceAllocator", "ResourcePool", "Response", "Scenario",
-    "ScenarioContext", "StepWorkload", "TabulatedBackend", "TenantSpec",
-    "TraceWorkload", "UnitLease", "WorkerInstance", "Workload",
+    "ScenarioContext", "SimulatedPlane", "StepWorkload", "TabulatedBackend",
+    "TenantSpec",
+    "TraceWorkload", "UnitLease", "WorkerInstance", "Workload", "as_plane",
     "get_mm_scenario", "get_scenario", "instance_report",
     "list_mm_scenarios", "list_scenarios", "log2_ms_histogram",
     "make_policy", "mm_scenario", "nearest_rank", "register_mm_scenario",

@@ -32,11 +32,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from ..core.estimator import BatchSizeEstimator, EstimatorConfig
 from ..core.knapsack import PackratConfig, PackratOptimizer
+from ..core.profiler import ProfileCalibrator
 from ..core.reconfig import (ActivePassiveController, Phase,
                              needs_active_passive)
 from .allocator import ResourceAllocator, UnitLease
 from .dispatcher import Dispatcher, DispatcherConfig
 from .instance import LatencyBackend, WorkerInstance
+from .plane import ExecutionPlane, as_plane
 from .policy import make_policy
 from .simulator import DEFAULT_MODEL, EventLoop, Request, Response
 
@@ -69,8 +71,17 @@ class ModelTenant:
                  config: Optional[ControllerConfig] = None,
                  model_id: str = DEFAULT_MODEL,
                  on_response: Optional[Callable[[Response], None]] = None,
-                 peer_live: Optional[Callable[[], int]] = None) -> None:
-        self.loop = loop
+                 peer_live: Optional[Callable[[], int]] = None,
+                 calibrator: Optional[ProfileCalibrator] = None) -> None:
+        """``loop`` may be a raw :class:`EventLoop` or any
+        :class:`~repro.serving.plane.ExecutionPlane` — the tenant is
+        plane-agnostic.  ``calibrator`` enables the closed profile-
+        refinement loop: every completed batch's observed latency feeds
+        it, and once the expected-vs-observed correction drifts past
+        its threshold the optimizer is rebuilt from the calibrated
+        ``L[t,b]`` table and the knapsack re-solves (Fig. 9, closed)."""
+        self.plane: ExecutionPlane = as_plane(loop)
+        self.loop = self.plane          # plane is EventLoop-compatible
         self.model_id = model_id
         self.total_units = total_units
         self.optimizer = optimizer
@@ -94,13 +105,17 @@ class ModelTenant:
         self.apc = ActivePassiveController(
             spawn_cost=self._spawn_cost, drain_cost=self._drain_cost,
             on_swap=self._on_swap)
-        self.apc.start(first, now=loop.now)
+        self.apc.start(first, now=self.plane.now)
         workers = self._spawn_workers(first)
-        self.dispatcher = Dispatcher(loop, first, workers,
+        self.dispatcher = Dispatcher(self.plane, first, workers,
                                      self._on_response, self.ccfg.dispatcher,
                                      policy=make_policy(self.ccfg.dispatch_policy),
                                      model_id=model_id, peer_live=peer_live)
-        self.reconfig_log.append((loop.now, initial_batch, first))
+        self.calibrator = calibrator
+        self.calibration_refreshes = 0
+        if calibrator is not None:
+            self.dispatcher.on_measure = calibrator.observe
+        self.reconfig_log.append((self.plane.now, initial_batch, first))
 
     # ------------------------------------------------------------------ #
     # workers
@@ -150,6 +165,7 @@ class ModelTenant:
             allocator.release(placements)
         for w in self._workers_by_cfg.pop(id(config), ()):
             w.released_at = self.loop.now   # bounds utilization accounting
+            self.plane.release_worker(w)    # frees per-worker resources
 
     # ------------------------------------------------------------------ #
     # request/response path
@@ -187,11 +203,30 @@ class ModelTenant:
             new_b = self.estimator.should_reconfigure(self.loop.now)
             if new_b is not None:
                 self.reconfigure(new_b)
+        if (adapt_batch and self.calibrator is not None
+                and self.apc.phase is Phase.STABLE
+                and self.calibrator.should_refresh(self.loop.now)):
+            self._refresh_optimizer()
         self._check_workers()
 
     @property
     def stable(self) -> bool:
         return self.apc.phase is Phase.STABLE
+
+    def _refresh_optimizer(self) -> None:
+        """Close the profile-refinement loop: rebuild the optimizer from
+        the calibrated ``L[t,b]`` table and re-solve at the current
+        batch.  If the calibrated costs pick the same ⟨i,t,b⟩ partition
+        the identical-configuration shortcut makes this free; when they
+        do not, the active-passive machinery swaps as usual."""
+        cal = self.calibrator
+        self.optimizer = PackratOptimizer(
+            cal.calibrated_profile(),
+            allow_unused_threads=self.optimizer.allow_unused_threads,
+            dispatch_overhead=self.optimizer.dispatch_overhead)
+        cal.mark_refreshed(self.loop.now)
+        self.calibration_refreshes += 1
+        self.reconfigure(self.estimator.current_batch)
 
     def reconfigure(self, new_batch: int, *,
                     force_respawn: bool = False) -> None:
@@ -305,11 +340,12 @@ class PackratServer(ModelTenant):
     def __init__(self, loop: EventLoop, *, total_units: int,
                  optimizer: PackratOptimizer, backend: LatencyBackend,
                  initial_batch: int, config: Optional[ControllerConfig] = None,
-                 domain_size: Optional[int] = None) -> None:
+                 domain_size: Optional[int] = None,
+                 calibrator: Optional[ProfileCalibrator] = None) -> None:
         super().__init__(loop, total_units=total_units, optimizer=optimizer,
                          backend=backend, initial_batch=initial_batch,
                          allocator=ResourceAllocator(total_units, domain_size),
-                         config=config)
+                         config=config, calibrator=calibrator)
         self._schedule_tick()
 
     def _schedule_tick(self) -> None:

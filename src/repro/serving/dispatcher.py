@@ -30,8 +30,12 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 from ..core.knapsack import PackratConfig
 from .instance import WorkerInstance
+from .plane import ExecutionPlane, as_plane
 from .policy import BatchSyncPolicy, DispatchPolicy
 from .simulator import EventLoop, Request, Response
+
+
+_INF = float("inf")
 
 
 @dataclasses.dataclass
@@ -51,19 +55,28 @@ class Dispatcher:
                  policy: Optional[DispatchPolicy] = None,
                  model_id: str = "default",
                  peer_live: Optional[Callable[[], int]] = None) -> None:
-        """``peer_live`` reports live workers *outside* this dispatcher
-        (other tenants sharing the pod) so interference backends see the
-        pod-wide instance count, not just this model's."""
-        self.loop = loop
+        """``loop`` may be a raw :class:`EventLoop` (adopted into a
+        :class:`~repro.serving.plane.SimulatedPlane`) or any
+        :class:`~repro.serving.plane.ExecutionPlane` — the dispatcher
+        is plane-agnostic.  ``peer_live`` reports live workers *outside*
+        this dispatcher (other tenants sharing the pod) so interference
+        backends see the pod-wide instance count, not just this
+        model's."""
+        self.plane: ExecutionPlane = as_plane(loop)
+        self.loop = self.plane          # plane is EventLoop-compatible
         self.dcfg = dcfg or DispatcherConfig()
         self.model_id = model_id
         self.peer_live = peer_live
         self.on_response = on_response
+        # observed per-batch latencies for the calibration loop:
+        # on_measure(threads, n_items, observed_latency_s)
+        self.on_measure: Optional[Callable[[int, int, float], None]] = None
         self.queue: Deque[Request] = collections.deque()
         self.batch_size = 0
         self.instances: List[WorkerInstance] = []
         self._done_requests: set = set()
         self._retire_at: Dict[int, float] = {}
+        self._inflight_ids: Dict[int, int] = {}   # submitted, not completed
         self._deferred_ids: set = set()   # awaiting a live worker
         self._queue_highwater = 0
         self.timeouts_fired = 0
@@ -139,23 +152,33 @@ class Dispatcher:
 
     def _execute(self, worker: WorkerInstance, sub: List[Request],
                  threads: int, redispatch: int) -> None:
-        """Run one sub-batch on ``worker``: schedules the completion
-        callback plus a watchdog that re-dispatches stragglers and
-        retires completed ids once no copy can still deliver them."""
+        """Run one sub-batch on ``worker`` via the execution plane: the
+        plane delivers the completion callback (virtual-time event or
+        wall-clock thread completion) and the dispatcher schedules a
+        watchdog that re-dispatches stragglers and retires completed ids
+        once no copy can still deliver them."""
         n_live = len(self._live())
         if self.peer_live is not None:
             n_live += self.peer_live()
-        done_t = worker.process(len(sub), self.loop.now,
-                                n_live_instances=n_live)
-        expected = done_t - self.loop.now
-        deadline = self.loop.now + expected * self.dcfg.straggler_factor
-        for r in sub:
-            self._retire_at[r.id] = max(self._retire_at.get(r.id, 0.0),
-                                        deadline)
 
-        def complete(worker=worker, sub=sub, redispatch=redispatch):
+        def complete(observed, worker=worker, sub=sub, redispatch=redispatch):
+            for r in sub:
+                n = self._inflight_ids.get(r.id, 0) - 1
+                if n > 0:
+                    self._inflight_ids[r.id] = n
+                else:
+                    self._inflight_ids.pop(r.id, None)
             if worker.failed:
-                return  # the watchdog below re-dispatches
+                # the watchdog re-dispatches; but a *late* completion on
+                # a failed worker (real plane) may be the last event for
+                # these ids — retire now or the _retire_at entries leak
+                # and abandoned requests go unreported
+                self._retire([r for r in sub
+                              if self._retire_at.get(r.id, _INF)
+                              < self.loop.now])
+                return
+            if self.on_measure is not None:
+                self.on_measure(worker.threads, len(sub), observed)
             delivered = 0
             for r in sub:
                 if r.id in self._done_requests:
@@ -167,14 +190,36 @@ class Dispatcher:
                     batch_size=len(sub), instance_id=worker.id,
                     redispatched=redispatch > 0,
                     model_id=worker.model_id))
+            # real-plane late completion: the watchdog deadline may have
+            # passed while the batch was still executing (its retire pass
+            # skipped the in-flight ids) — retire here, the last event
+            # that can touch these ids.  Unreachable on the virtual clock
+            # with straggler_factor >= 1, where completion never trails
+            # its own watchdog.
+            late = [r for r in sub
+                    if self._retire_at.get(r.id, _INF) < self.loop.now]
+            if late:
+                self._retire(late)
             self.policy.on_batch_done(worker, delivered)
 
-        self.loop.at(done_t, complete)
+        for r in sub:
+            self._inflight_ids[r.id] = self._inflight_ids.get(r.id, 0) + 1
+        expected = self.plane.execute_batch(
+            worker, len(sub), n_live_instances=n_live, on_complete=complete)
+        deadline = self.loop.now + expected * self.dcfg.straggler_factor
+        for r in sub:
+            self._retire_at[r.id] = max(self._retire_at.get(r.id, 0.0),
+                                        deadline)
 
         def watchdog(sub=sub, threads=threads, redispatch=redispatch):
             if redispatch < self.dcfg.max_redispatch:
+                # only ids still tracked are redispatchable: an id absent
+                # from _retire_at was delivered *and* retired — on the
+                # real plane a watchdog timer can fire after the late
+                # completion that retired it, and must not resurrect it
                 missing = [r for r in sub
-                           if r.id not in self._done_requests]
+                           if r.id not in self._done_requests
+                           and r.id in self._retire_at]
                 if missing:
                     self.redispatches += 1
                     self._submit(missing, threads, redispatch + 1)
@@ -185,16 +230,21 @@ class Dispatcher:
     def _retire(self, sub: List[Request]) -> None:
         """Prune completed ids whose last watchdog deadline has passed.
 
-        Every delivery attempt for a request fires no later than its
-        submission's watchdog deadline (completion is scheduled at
-        ``done_t`` < deadline, and a failed worker's completion never
-        delivers), so once the *latest* deadline across all copies is in
-        the past the id can no longer be double-delivered — dropping it
-        bounds ``_done_requests`` at millions of requests.
+        On the virtual clock every delivery attempt for a request fires
+        no later than its submission's watchdog deadline (completion is
+        scheduled at ``done_t`` < deadline, and a failed worker's
+        completion never delivers), so once the *latest* deadline across
+        all copies is in the past the id can no longer be
+        double-delivered — dropping it bounds ``_done_requests`` at
+        millions of requests.  On the real plane a batch can outlive its
+        watchdog, so ids with submissions still in flight are skipped
+        here and retired by the late completion itself.
         """
         now = self.loop.now + 1e-12
         abandoned = 0
         for r in sub:
+            if self._inflight_ids.get(r.id, 0) > 0:
+                continue       # a live copy can still deliver; retire later
             if self._retire_at.get(r.id, 0.0) <= now:
                 # undelivered ids (watchdog exhausted on dead workers) are
                 # dropped too — a later deferred re-submit re-registers them

@@ -24,7 +24,9 @@ import time
 from typing import Callable, Deque, Dict, Mapping, Optional, Tuple
 
 from ..core.interference import CPUInterferenceModel, TPUInterferenceModel
-from ..core.knapsack import PackratConfig
+from ..core.knapsack import PackratConfig, next_power_of_two
+from ..core.profiler import (measure_latency, profile_rows, row_latency,
+                             thread_latency)
 from .metrics import log2_ms_bucket
 
 
@@ -40,27 +42,32 @@ class TabulatedBackend(LatencyBackend):
         self.table = dict(table)
         self.interference = interference
         self.total_units = total_units
-        self._bs_by_t: Dict[int, list] = {}
-        for (t, b) in self.table:
-            self._bs_by_t.setdefault(t, []).append(b)
-        for bs in self._bs_by_t.values():
-            bs.sort()
+        # ⟨t,b⟩ lookups for a t outside the profiled grid (interpolated
+        # or clamped), counted so reports can expose the substitution
+        # instead of silently serving a different profile row
+        self.fallback_lookups: Dict[Tuple[int, int], int] = {}
+        self._rows = profile_rows(self.table)
 
     def _lookup(self, t: int, b: int) -> float:
-        """Exact hit, else round b up to the next profiled size (a partial
-        batch costs what its enclosing profiled batch costs), else scale
-        linearly above the largest profiled batch."""
-        if (t, b) in self.table:
-            return self.table[(t, b)]
-        bs = self._bs_by_t.get(t)
-        if not bs:
-            t = min(self._bs_by_t, key=lambda tt: abs(tt - t))
-            bs = self._bs_by_t[t]
-        for bb in bs:
-            if bb >= b:
-                return self.table[(t, bb)]
-        top = bs[-1]
-        return self.table[(t, top)] * (b / top)
+        """Shared-rule lookup (``core.profiler.row_latency``): exact hit,
+        round b up to the next profiled size, scale above the top; for an
+        unprofiled thread count, linearly interpolate between the
+        bracketing profiled rows (a sparse powers-of-two thread grid is
+        common on TPU sub-meshes) instead of silently snapping to the
+        nearest row, clamping outside the profiled range.  Every
+        off-grid lookup is counted in ``fallback_lookups``."""
+        if t in self._rows:
+            return row_latency(self.table, self._rows, t, b)
+        self.fallback_lookups[(t, b)] = self.fallback_lookups.get((t, b), 0) + 1
+        return thread_latency(self.table, self._rows, t, b)
+
+    def fallback_report(self) -> Dict[str, object]:
+        """Summary of off-grid thread-count lookups (for bench reports)."""
+        return {
+            "count": sum(self.fallback_lookups.values()),
+            "keys": [{"t": t, "b": b, "lookups": n}
+                     for (t, b), n in sorted(self.fallback_lookups.items())],
+        }
 
     def batch_latency(self, t, b, *, n_live_instances=1, total_units=0):
         base = self._lookup(t, b)
@@ -72,6 +79,29 @@ class TabulatedBackend(LatencyBackend):
                             latency=base)
         return self.interference.observed_latency(
             cfg, total_units or self.total_units)
+
+
+class CalibratedBackend(LatencyBackend):
+    """A latency backend corrected live by a
+    :class:`~repro.core.profiler.ProfileCalibrator`.
+
+    The real execution plane budgets watchdogs and provisional
+    ``busy_until`` estimates from the worker's backend; wrapping the
+    planning table with the calibrator's current correction keeps those
+    expectations tracking what the hardware actually delivers — without
+    it, a systematic expected-vs-observed gap turns the straggler
+    watchdog into a redispatch storm (every batch "misses" a deadline
+    computed from the uncalibrated profile).
+    """
+
+    def __init__(self, inner: LatencyBackend, calibrator) -> None:
+        self.inner = inner
+        self.calibrator = calibrator
+
+    def batch_latency(self, t, b, *, n_live_instances=1, total_units=0):
+        base = self.inner.batch_latency(
+            t, b, n_live_instances=n_live_instances, total_units=total_units)
+        return base * self.calibrator.correction_at(t, b)
 
 
 class CallableBackend(LatencyBackend):
@@ -89,30 +119,37 @@ class JaxBackend(LatencyBackend):
     size b to completion (``block_until_ready`` inside).  Thread count t
     is recorded but cannot vary on a single-device CPU container; the
     measured latency is per-instance ground truth for the e2e tests.
+
+    Measurement shares :func:`repro.core.profiler.measure_latency` with
+    :class:`~repro.core.profiler.MeasuredProfiler` — warmup iterations
+    discarded, then the *median* of ``iters`` timed runs, so a single
+    GC pause or page fault cannot become the probe's latency estimate
+    (the old single-sample timing regularly did exactly that).
     """
 
     def __init__(self, make_runner: Callable[[int], Callable[[], None]],
-                 warmup: int = 2) -> None:
+                 warmup: int = 2, iters: int = 5,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
         self._runners: Dict[int, Callable[[], None]] = {}
         self._make = make_runner
         self._warmup = warmup
+        self._iters = iters
+        self._clock = clock
         self._measured: Dict[int, float] = {}
 
     @staticmethod
     def _round_batch(b: int) -> int:
         """Round partial batches up to the next power of two: real servers
         pad to compiled bucket sizes rather than recompiling per size."""
-        return 1 << max(0, (b - 1)).bit_length()
+        return next_power_of_two(b)
 
     def batch_latency(self, t, b, *, n_live_instances=1, total_units=0):
         b = self._round_batch(b)
         if b not in self._measured:
             runner = self._runners.setdefault(b, self._make(b))
-            for _ in range(self._warmup):
-                runner()
-            t0 = time.perf_counter()
-            runner()
-            self._measured[b] = time.perf_counter() - t0
+            self._measured[b] = measure_latency(
+                runner, warmup=self._warmup, iters=self._iters,
+                clock=self._clock, median=True)
         return self._measured[b]
 
 
@@ -152,6 +189,7 @@ class WorkerInstance:
         self.stats = WorkerStats()
         self.queue: Deque = collections.deque()   # per-instance work queue
         self.coalesce_armed = False               # continuous-policy timer
+        self.inflight = 0       # real-plane batches submitted, not finished
         # idle gaps as log₂-ms bucket counts: O(1) memory at any run length
         self.idle_gap_buckets: Dict[int, int] = {}
 
@@ -190,6 +228,36 @@ class WorkerInstance:
         self.stats.items += n_items
         self.stats.busy_time += lat
         return self.busy_until
+
+    # ------------------------------------------------------------------ #
+    # real-execution bookkeeping (driven by RealPlane; the simulated
+    # path uses process() above, whose latency is the backend's word)
+    # ------------------------------------------------------------------ #
+    def begin_batch(self, n_items: int, now: float, expected: float) -> None:
+        """Record a real batch starting now: idle-gap accounting identical
+        to process(), but ``busy_until`` is only a *provisional* estimate
+        (the expected latency) — the wall clock has the last word."""
+        if self.failed:
+            raise RuntimeError(f"instance {self.id} is failed")
+        start = max(now, self.busy_until)
+        gap = start - self.busy_until
+        if gap > 0:
+            self.stats.idle_time += gap
+            k = log2_ms_bucket(gap)
+            self.idle_gap_buckets[k] = self.idle_gap_buckets.get(k, 0) + 1
+        self.busy_until = start + expected
+        self.inflight += 1
+        self.stats.batches += 1
+        self.stats.items += n_items
+
+    def finish_batch(self, now: float, observed: float) -> None:
+        """A real batch completed at wall time ``now`` after ``observed``
+        seconds of execution; with nothing else in flight the worker is
+        idle *now*, whatever the provisional estimate claimed."""
+        self.inflight = max(0, self.inflight - 1)
+        self.stats.busy_time += observed
+        if self.inflight == 0:
+            self.busy_until = now
 
     def fail(self) -> None:
         self.failed = True

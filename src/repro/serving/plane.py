@@ -1,0 +1,371 @@
+"""Execution planes: one serving engine over virtual time or real JAX.
+
+The plane owns the three things the rest of the serving stack must not
+care about — **time**, **worker execution**, and **completion
+delivery** — so :class:`~repro.serving.dispatcher.Dispatcher`,
+:class:`~repro.serving.controller.PackratServer` and
+:class:`~repro.serving.tenancy.MultiModelServer` are plane-agnostic:
+
+* :class:`SimulatedPlane` — the discrete-event path: virtual clock
+  (:class:`~repro.serving.simulator.EventLoop`), instance latencies from
+  a :class:`~repro.serving.instance.LatencyBackend`.  Bit-identical to
+  the pre-plane engine (pinned by the golden timeline hashes in
+  tests/test_policy.py and tests/test_plane.py).
+* :class:`RealPlane` — wall-clock execution: each batch runs a jitted
+  JAX step on the worker's own single-thread executor (TorchServe-style
+  worker serialization), per-instance intra-op thread *budgets* are
+  enforced by a counted unit gate (concurrently running instances never
+  claim more than T units — the machine constraint Packrat allocates
+  against; a single-process JAX CPU device cannot repartition its
+  intra-op pool per call, so the budget bounds co-running claims rather
+  than pinning threads), timers fire on the wall clock, and completions
+  are delivered back on the driving thread so controller state never
+  needs locks.
+
+Both planes expose the :class:`~repro.serving.simulator.EventLoop`
+scheduling interface (``now``/``at``/``schedule``/``run_until``), so
+every component that used to hold a loop now holds a plane without
+noticing.  Profiling goes through the *same* plane runners
+(:meth:`RealPlane.profiler` wraps the shared
+:class:`~repro.core.profiler.MeasuredProfiler` measurement helper), so
+profile-time and serve-time execution are one code path — the
+precondition for the closed expected-vs-observed calibration loop
+(:class:`~repro.core.profiler.ProfileCalibrator`).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.knapsack import next_power_of_two
+from ..core.profiler import MeasuredProfiler, Profile, ProfileSpec
+from .instance import WorkerInstance
+from .simulator import EventLoop
+
+# a zero-arg callable that executes one batch to completion (blocking)
+BatchRunner = Callable[[], None]
+# factory: (threads, batch) -> BatchRunner
+RunnerFactory = Callable[[int, int], BatchRunner]
+
+
+class ExecutionPlane:
+    """Owns time, worker execution, and completion delivery.
+
+    The scheduling half mirrors :class:`EventLoop` so planes are drop-in
+    loop replacements; the execution half is :meth:`execute_batch`,
+    which starts ``n_items`` on a worker, promises to call
+    ``on_complete(observed_latency_s)`` when the batch finishes, and
+    returns the *expected* latency the caller should budget watchdogs
+    against (in the simulated plane expectation and observation
+    coincide; in the real plane the wall clock decides).
+    """
+
+    name = "abstract"
+
+    # ------------------------------------------------------------------ #
+    # time (EventLoop-compatible)
+    # ------------------------------------------------------------------ #
+    @property
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        raise NotImplementedError
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + delay, fn)
+
+    def run_until(self, t_end: float) -> None:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def execute_batch(self, worker: WorkerInstance, n_items: int, *,
+                      n_live_instances: int = 1, total_units: int = 0,
+                      on_complete: Callable[[float], None]) -> float:
+        raise NotImplementedError
+
+    def release_worker(self, worker: WorkerInstance) -> None:
+        """The worker was swapped out and will receive no more batches;
+        planes holding per-worker resources free them here (in-flight
+        work still completes and delivers)."""
+
+    def close(self) -> None:
+        """Release plane resources (worker executors); idempotent."""
+
+    def __enter__(self) -> "ExecutionPlane":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class SimulatedPlane(ExecutionPlane):
+    """The existing EventLoop + LatencyBackend path behind the plane
+    interface — a pure delegation layer, so timelines are bit-identical
+    to the pre-plane engine."""
+
+    name = "sim"
+
+    def __init__(self, loop: Optional[EventLoop] = None) -> None:
+        self.loop = loop if loop is not None else EventLoop()
+
+    @property
+    def now(self) -> float:
+        return self.loop.now
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        self.loop.at(time, fn)
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        self.loop.schedule(delay, fn)
+
+    def run_until(self, t_end: float) -> None:
+        self.loop.run_until(t_end)
+
+    def run(self) -> None:
+        self.loop.run()
+
+    def execute_batch(self, worker: WorkerInstance, n_items: int, *,
+                      n_live_instances: int = 1, total_units: int = 0,
+                      on_complete: Callable[[float], None]) -> float:
+        now = self.loop.now
+        busy_before = worker.busy_until
+        done_t = worker.process(n_items, now,
+                                n_live_instances=n_live_instances,
+                                total_units=total_units)
+        # execution latency excludes any queueing behind an earlier batch
+        observed = done_t - max(now, busy_before)
+        self.loop.at(done_t, lambda: on_complete(observed))
+        return done_t - now
+
+
+class RealPlane(ExecutionPlane):
+    """Wall-clock plane: jitted model steps on worker thread executors.
+
+    ``make_runner(t, b)`` returns a zero-arg callable executing one
+    batch of ``b`` items to completion with a ``t``-unit budget (micro
+    models from ``repro.models.micro``, or any jitted step).  Runners
+    are cached per ⟨t, rounded-b⟩ — partial batches pad up to the next
+    power of two, like a real server's compiled bucket sizes.
+
+    Threading model: the *driving* thread (whoever calls
+    :meth:`run_until`) executes every timer and completion callback, so
+    dispatcher/controller state stays single-threaded; worker threads
+    only run the jitted step and post the measured latency back through
+    a queue.  Each :class:`WorkerInstance` gets its own single-thread
+    executor, serializing its batches the way a TorchServe worker
+    process would.
+    """
+
+    name = "real"
+
+    def __init__(self, make_runner: RunnerFactory, total_units: int, *,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        if total_units < 1:
+            raise ValueError(f"total_units must be >= 1, got {total_units}")
+        self._make = make_runner
+        self.total_units = total_units
+        self._clock = clock
+        self._epoch: Optional[float] = None
+        self._timers: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._completions: "queue.Queue[Callable[[], None]]" = queue.Queue()
+        self._runners: Dict[Tuple[int, int], BatchRunner] = {}
+        self._executors: Dict[int, ThreadPoolExecutor] = {}
+        self._units_cv = threading.Condition()
+        self._units_free = total_units
+        self.inflight = 0
+        self.batches_executed = 0
+        self._closed = False
+
+    # ------------------------------------------------------------------ #
+    # time
+    # ------------------------------------------------------------------ #
+    def _start(self) -> None:
+        if self._epoch is None:
+            self._epoch = self._clock()
+
+    @property
+    def now(self) -> float:
+        if self._epoch is None:
+            return 0.0
+        return self._clock() - self._epoch
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        # wall clocks drift past intended deadlines; clamp instead of
+        # raising (the EventLoop's in-the-past check guards virtual-time
+        # determinism, which has no analogue here)
+        heapq.heappush(self._timers, (max(time, self.now),
+                                      next(self._seq), fn))
+
+    def _drain_completions(self) -> None:
+        while True:
+            try:
+                fn = self._completions.get_nowait()
+            except queue.Empty:
+                return
+            fn()
+
+    def run_until(self, t_end: float) -> None:
+        """Drive the reactor until wall time ``t_end`` (seconds since
+        the plane first started running).  Timers due by ``t_end`` fire
+        even if the wall clock has already passed them; completions are
+        delivered as they arrive — and always *before* due timers, so a
+        straggler watchdog observing the same wall instant as a posted
+        completion cannot redispatch the already-finished batch."""
+        self._start()
+        while True:
+            self._drain_completions()
+            # fire every timer due by min(now, t_end)
+            while self._timers and self._timers[0][0] <= min(self.now, t_end):
+                _, _, fn = heapq.heappop(self._timers)
+                fn()
+                self._drain_completions()
+            now = self.now
+            if now >= t_end:
+                return
+            next_t = self._timers[0][0] if self._timers else t_end
+            timeout = max(0.0, min(next_t, t_end) - now)
+            try:
+                fn = self._completions.get(timeout=min(timeout, 0.050))
+            except queue.Empty:
+                continue
+            fn()
+            self._drain_completions()
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def runner(self, t: int, b: int) -> BatchRunner:
+        """The cached jitted runner for a ⟨t, b⟩ cell (b rounds up to
+        the next power of two — compiled bucket sizes)."""
+        key = (t, next_power_of_two(max(1, b)))
+        if key not in self._runners:
+            self._runners[key] = self._make(*key)
+        return self._runners[key]
+
+    def _acquire_units(self, n: int) -> None:
+        with self._units_cv:
+            while self._units_free < n:
+                self._units_cv.wait()
+            self._units_free -= n
+
+    def _release_units(self, n: int) -> None:
+        with self._units_cv:
+            self._units_free += n
+            self._units_cv.notify_all()
+
+    def _executor_for(self, worker: WorkerInstance) -> ThreadPoolExecutor:
+        ex = self._executors.get(id(worker))
+        if ex is None:
+            ex = ThreadPoolExecutor(
+                max_workers=1,
+                thread_name_prefix=f"worker-{worker.model_id}-{worker.id}")
+            self._executors[id(worker)] = ex
+        return ex
+
+    def execute_batch(self, worker: WorkerInstance, n_items: int, *,
+                      n_live_instances: int = 1, total_units: int = 0,
+                      on_complete: Callable[[float], None]) -> float:
+        if self._closed:
+            raise RuntimeError("plane is closed")
+        self._start()
+        n_items = max(1, n_items)
+        # the expectation comes from the worker's planning backend (the
+        # measured profile) — the watchdog budget and the provisional
+        # busy_until; the wall clock supplies the observation
+        now = self.now
+        expected = worker.backend.batch_latency(
+            worker.threads, n_items, n_live_instances=n_live_instances,
+            total_units=total_units or self.total_units)
+        # mirror SimulatedPlane's contract: the returned expectation
+        # includes the wait behind the worker's provisional backlog, so
+        # watchdog deadlines are not systematically early for batches
+        # queued behind this worker's executor
+        busy_before = worker.busy_until
+        worker.begin_batch(n_items, now, expected)
+        expected_done = max(now, busy_before) + expected - now
+        run = self.runner(worker.threads, n_items)
+        claim = min(worker.threads, self.total_units)
+        self.inflight += 1
+
+        def job() -> None:
+            self._acquire_units(claim)
+            try:
+                t0 = self._clock()
+                run()
+                observed = self._clock() - t0
+            finally:
+                self._release_units(claim)
+            self._completions.put(
+                lambda: self._complete(worker, observed, on_complete))
+
+        self._executor_for(worker).submit(job)
+        return expected_done
+
+    def _complete(self, worker: WorkerInstance, observed: float,
+                  on_complete: Callable[[float], None]) -> None:
+        self.inflight -= 1
+        self.batches_executed += 1
+        worker.finish_batch(self.now, observed)
+        on_complete(observed)
+
+    def release_worker(self, worker: WorkerInstance) -> None:
+        """Shut down the retired worker's executor (non-blocking; a
+        batch already submitted still runs to completion and posts its
+        result).  Without this, every active-passive swap would leak one
+        idle thread per retired instance — and ``id()`` reuse after
+        garbage collection could hand a new worker a dead worker's
+        executor."""
+        ex = self._executors.pop(id(worker), None)
+        if ex is not None:
+            ex.shutdown(wait=False)
+
+    # ------------------------------------------------------------------ #
+    # profiling through the plane (one code path with serving)
+    # ------------------------------------------------------------------ #
+    def profiler(self, *, warmup: int = 2, iters: int = 5
+                 ) -> MeasuredProfiler:
+        """A :class:`MeasuredProfiler` over this plane's own runner
+        cache: profile-time execution is the same jitted callable the
+        serving path fires, measured with the shared helper
+        (median-of-N — robust to scheduler noise)."""
+        return MeasuredProfiler(lambda t, b: self.runner(t, b)(),
+                                warmup=warmup, iters=iters,
+                                clock=self._clock, median=True)
+
+    def profile(self, spec: ProfileSpec, *, warmup: int = 2,
+                iters: int = 5) -> Profile:
+        return self.profiler(warmup=warmup, iters=iters).profile(spec)
+
+    # ------------------------------------------------------------------ #
+    def close(self, wait: bool = True) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for ex in self._executors.values():
+            ex.shutdown(wait=wait)
+        self._executors.clear()
+
+
+def as_plane(loop_or_plane) -> ExecutionPlane:
+    """Adopt a raw :class:`EventLoop` into a :class:`SimulatedPlane`;
+    pass planes through untouched (idempotent)."""
+    if isinstance(loop_or_plane, ExecutionPlane):
+        return loop_or_plane
+    if isinstance(loop_or_plane, EventLoop):
+        return SimulatedPlane(loop_or_plane)
+    raise TypeError(f"expected EventLoop or ExecutionPlane, "
+                    f"got {type(loop_or_plane).__name__}")
+
+
+__all__ = ["BatchRunner", "ExecutionPlane", "RealPlane", "RunnerFactory",
+           "SimulatedPlane", "as_plane"]

@@ -6,6 +6,13 @@ virtual clock, with instance latencies supplied by a pluggable backend
 (paper-calibrated tables, roofline-derived models, or real measured JAX
 execution).  This is how the Fig.-11 reconfiguration timeline and the
 fault-tolerance behaviours are reproduced deterministically on CPU.
+
+The :class:`EventLoop` here is the *time source* of the simulated
+execution plane (``repro.serving.plane.SimulatedPlane``); the serving
+engine itself only ever talks to an
+:class:`~repro.serving.plane.ExecutionPlane`, so the same dispatcher,
+controller and tenancy code also runs against real wall-clock JAX
+execution (``RealPlane``) without change.
 """
 
 from __future__ import annotations

@@ -36,6 +36,7 @@ from ..core.multimodel import ModelWorkload, MultiModelAllocator
 from .allocator import ResourcePool
 from .controller import ControllerConfig, ModelTenant
 from .instance import LatencyBackend, WorkerInstance
+from .plane import ExecutionPlane, as_plane
 from .simulator import EventLoop, Request, Response
 
 
@@ -92,7 +93,11 @@ class MultiModelServer:
         if total_units < len(tenants):
             raise ValueError(
                 f"{total_units} units cannot host {len(tenants)} tenants")
-        self.loop = loop
+        # one plane instance is shared by every tenant — a single time
+        # source and (for RealPlane) a single unit gate; tenants see it
+        # through the EventLoop-compatible interface
+        self.plane: ExecutionPlane = as_plane(loop)
+        self.loop = self.plane
         self.total_units = total_units
         self.ccfg = config or ControllerConfig()
         self.adaptive = adaptive
@@ -116,7 +121,7 @@ class MultiModelServer:
         # made, and is what the planner consumes.
         self._counts: Dict[str, int] = {m: 0 for m in self._order}
         self._win_counts: Dict[str, int] = dict(self._counts)
-        self._win_start: float = loop.now
+        self._win_start: float = self.plane.now
         # peak-hold over the last `peak_windows` plan windows: a bursty
         # tenant keeps the units its recent peak needed instead of being
         # shrunk the moment a quiet dwell starts (and re-grown a full
@@ -126,7 +131,7 @@ class MultiModelServer:
             m: [] for m in self._order}
         self.responses: List[Response] = []
         self.plan_log: List[Tuple[float, Dict[str, int], Dict[str, int]]] = []
-        self._last_plan = loop.now
+        self._last_plan = self.plane.now
 
         shares = self._initial_shares()
         self.tenants: Dict[str, ModelTenant] = {}
@@ -135,13 +140,13 @@ class MultiModelServer:
             batch = self._feasible_batch(self._opts[spec.model_id],
                                          lease.n_units, spec.initial_batch)
             self.tenants[spec.model_id] = ModelTenant(
-                loop, total_units=lease.n_units,
+                self.plane, total_units=lease.n_units,
                 optimizer=self._opts[spec.model_id], backend=spec.backend,
                 initial_batch=batch, allocator=lease.allocator,
                 config=self.ccfg, model_id=spec.model_id,
                 on_response=self.responses.append,
                 peer_live=self._peer_live_fn(spec.model_id))
-        self.plan_log.append((loop.now, dict(shares), {
+        self.plan_log.append((self.plane.now, dict(shares), {
             m: self.tenants[m].estimator.current_batch for m in self._order}))
         self._schedule_tick()
 

@@ -146,6 +146,48 @@ def test_cli_trace_replay(tmp_path):
     assert sc["offered"] == len(trace.times)
 
 
+def test_cli_real_execution_smoke(tmp_path):
+    """bench_serving --execution real: short wall-clock trace on a micro
+    model end-to-end — wall-clock-measured latencies and a populated
+    expected-vs-observed calibration section (acceptance criterion)."""
+    pytest.importorskip("jax")
+    out = tmp_path / "real.json"
+    rc = bench_serving.main([
+        "--scenario", "steady-poisson", "--units", "2", "--duration", "1",
+        "--initial-batch", "2", "--max-batch", "8", "--dispatch", "sync",
+        "--execution", "real", "--real-model", "mlp-tiny",
+        "--real-rate-cap", "150", "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["execution"] == "real"
+    sc = report["scenarios"]["steady-poisson"]
+    assert sc["execution"] == "real" and sc["real_model"] == "mlp-tiny"
+    assert sc["measured_profile_ms"]
+    assert all(v > 0 for v in sc["measured_profile_ms"].values())
+    for key in ("static", "packrat"):
+        rep = sc[key]
+        assert rep["completed"] > 0
+        assert rep["latency_ms"]["p95"] is not None
+        assert rep["latency_ms"]["p95"] > 0          # wall-clock measured
+        cal = rep["calibration"]
+        assert cal["observations"] > 0 and cal["entries"]
+        assert cal["global_ratio"] > 0
+
+
+def test_cli_real_execution_rejects_sim_only_flags():
+    pytest.importorskip("jax")       # the registry check imports micro models
+    with pytest.raises(SystemExit):
+        bench_serving.main(["--execution", "real", "--models",
+                            "resnet50,bert"])
+    with pytest.raises(SystemExit):
+        bench_serving.main(["--execution", "real", "--interference"])
+    with pytest.raises(SystemExit):
+        bench_serving.main(["--execution", "real", "--model", "resnet50"])
+    with pytest.raises(SystemExit):
+        bench_serving.main(["--execution", "real",
+                            "--real-model", "no-such-model"])
+
+
 def test_cli_list(capsys):
     assert bench_serving.main(["--list"]) == 0
     listed = capsys.readouterr().out
