@@ -56,10 +56,26 @@ are derived from the measured capacity and then capped
 (``--real-rate-cap``) so the Python-level event machinery is not the
 bottleneck being measured.
 
+``--nodes N`` (N > 1) switches to the **cluster fabric**
+(``serving/fabric.py``): N Packrat nodes of ``--units`` each behind a
+:class:`~repro.serving.fabric.ClusterRouter` — power-of-two-choices
+routing by least expected latency, per-node token-bucket admission,
+batch-floor degradation and queue-depth shedding — compared on one
+identical seeded trace against a single fat server holding the fleet's
+total units (``single_fat``: static one-instance baseline;
+``single_packrat``: the adaptive policy, still admission-free).  The
+report adds shed accounting (``shed``/``shed_rate``/``admitted``; the
+latency percentiles are admitted-only) and a per-node ``fleet``
+section.  Scenarios may carry *fabric events* (``node-failure`` kills
+node 1 mid-run) exercising failover with exactly-once delivery.
+``--nodes 1`` is the unchanged single-node path, byte-for-byte.
+
 Everything *simulated* is seeded and runs on the deterministic event
 loop, so two invocations with the same flags produce byte-identical
 JSON reports; real-execution reports are wall-clock measurements and
-deterministic only in structure.
+deterministic only in structure.  Every report carries a top-level
+``schema_version`` so downstream consumers can detect format changes
+(see docs/OPERATIONS.md for the full schema).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.bench_serving \
@@ -73,6 +89,8 @@ Usage:
         --scenario bursty --dispatch continuous      # one dispatch mode only
     PYTHONPATH=src python -m repro.launch.bench_serving \
         --models resnet50,bert --scenario mixed-diurnal --duration 60
+    PYTHONPATH=src python -m repro.launch.bench_serving \
+        --nodes 3 --units 8 --scenario flash-overload --duration 30
     PYTHONPATH=src python -m repro.launch.bench_serving --list
     PYTHONPATH=src python -m repro.launch.bench_serving \
         --trace my_trace.json --duration 120        # replay a recorded trace
@@ -90,19 +108,30 @@ from ..core.interference import CPUInterferenceModel
 from ..core.knapsack import PackratOptimizer
 from ..core.multimodel import solve_with_slo
 from ..core.paper_profiles import PAPER_MODELS, ProfileModel
-from ..serving import (ControllerConfig, EventLoop, MetricsCollector,
+from ..serving import (ClusterRouter, ControllerConfig, EventLoop,
+                       FabricConfig, FabricNodeSpec, MetricsCollector,
                        MultiModelServer, PackratServer, Request,
                        TabulatedBackend, TenantSpec, instance_report)
 from ..serving.tenancy import even_shares
 from ..serving.scenarios import (MultiModelScenario,
                                  MultiModelScenarioContext, Scenario,
-                                 ScenarioContext, get_mm_scenario,
+                                 ScenarioContext, fabric_events,
+                                 get_mm_scenario,
                                  get_scenario, list_mm_scenarios,
                                  list_scenarios)
 from ..serving.workloads import TraceWorkload
 
 POLICIES = ("static", "packrat")
 DISPATCHES = ("sync", "continuous")
+# --nodes > 1 comparison rows: the same total units as one fat server
+# (static and adaptive) vs the N-node fabric, on one identical trace
+FABRIC_POLICIES = ("single_fat", "single_packrat", "fabric")
+
+# bumped whenever a report key is added/renamed/removed, so downstream
+# consumers detect format changes instead of silently misparsing.
+# v1: implicit (PR 1-4 reports, no version key).
+# v2: schema_version + shed accounting keys + the --nodes fabric axis.
+SCHEMA_VERSION = 2
 
 
 def policy_key(policy: str, dispatch: str) -> str:
@@ -400,6 +429,133 @@ def _slo_feasible(opt: PackratOptimizer, units: int, slo_s: float
 
 
 # --------------------------------------------------------------------- #
+# multi-node fabric path (--nodes N)
+# --------------------------------------------------------------------- #
+def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
+                      nodes: int, units_per_node: int, duration: float,
+                      seed: int, initial_batch: int, max_batch: int,
+                      slo_deadline: float, reconfigure_timeout: float,
+                      dispatch: str = "sync", interference: bool = False,
+                      events=()) -> Dict[str, object]:
+    """One fabric run: N Packrat nodes behind a :class:`ClusterRouter`
+    on one shared simulated plane, with per-node admission control and
+    the scenario's fabric events (node failures/drains) applied."""
+    ccfg = ControllerConfig()
+    ccfg.estimator.reconfigure_timeout = reconfigure_timeout
+    ccfg.estimator.max_batch = max_batch
+    ccfg.dispatch_policy = dispatch
+    fcfg = FabricConfig(controller=ccfg, p2c_seed=seed)
+    profile = model.profile(units_per_node, max_batch)
+    specs = [FabricNodeSpec(
+        optimizer=PackratOptimizer(profile),
+        backend=_make_backend(profile, interference=interference,
+                              units=units_per_node))
+        for _ in range(nodes)]
+    loop = EventLoop()
+    router = ClusterRouter(
+        loop, units_per_node=units_per_node, specs=specs,
+        initial_batch=max(1, min(initial_batch,
+                                 units_per_node * max_batch)),
+        slo_deadline=slo_deadline, config=fcfg)
+    metrics = MetricsCollector(slo_deadline=slo_deadline)
+    drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
+    metrics.attach_fabric(router, sample_interval=min(0.25, duration / 100.0),
+                          until=duration + drain)
+    for i, t in enumerate(arrivals):
+        metrics.on_request(Request(i, t))
+        loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
+    for ev in events:
+        action = {"fail": router.fail_node, "drain": router.drain_node}[ev.action]
+        loop.at(ev.at_frac * duration,
+                (lambda action=action, ev=ev: action(ev.node)))
+    loop.run_until(duration + drain)
+
+    rep = metrics.report(duration=duration)
+    rep["dispatch"] = dispatch
+    rep["interference"] = interference
+    fleet = router.fleet_report(loop.now)
+    fleet["events"] = [{"t": ev.at_frac * duration, "action": ev.action,
+                        "node": ev.node} for ev in events]
+    for node in router.nodes:
+        fleet["per_node"][node.node_id]["instances"] = instance_report(
+            node.server.workers_ever, loop.now)
+    rep["fleet"] = fleet
+    fallback_count = sum(spec.backend.fallback_report()["count"]
+                         for spec in specs)
+    if fallback_count:
+        rep["profile_fallbacks"] = {"count": fallback_count}
+    return rep
+
+
+def run_fabric_scenario(sc: Scenario, *, model: ProfileModel, nodes: int,
+                        units_per_node: int, duration: float, seed: int,
+                        initial_batch: int, max_batch: int,
+                        slo_factor: float, reconfigure_timeout: float,
+                        dispatches: Tuple[str, ...] = ("sync",),
+                        interference: bool = False,
+                        slo_ms: Optional[float] = None) -> Dict[str, object]:
+    """The --nodes comparison on one identical seeded trace: a single
+    fat server with the fleet's total units (``single_fat`` — static
+    one-instance baseline; ``single_packrat`` — the adaptive policy,
+    still admission-free) vs the N-node ``fabric`` with admission
+    control and overload degradation.
+
+    The trace is generated against *fleet* capacity (N × units), so
+    capacity-relative scenarios stress every row identically; the SLO
+    is node-relative (``slo_factor ×`` the optimal makespan of one
+    node at the initial batch) — the deadline an operator provisions a
+    node size for.
+    """
+    total = nodes * units_per_node
+    fleet_opt = PackratOptimizer(model.profile(total, max_batch))
+    ctx = ScenarioContext(threads=total, optimizer=fleet_opt,
+                          duration=duration, seed=seed,
+                          max_total_batch=total * max_batch)
+    workload = sc.build(ctx)
+    arrivals = workload.arrivals(duration, seed=seed)
+    node_opt = PackratOptimizer(model.profile(units_per_node, max_batch))
+    b0 = max(1, min(initial_batch, units_per_node * max_batch))
+    slo = (slo_ms * 1e-3 if slo_ms is not None
+           else slo_factor * node_opt.solve(units_per_node, b0).latency)
+    events = fabric_events(sc.name)
+    out: Dict[str, object] = {
+        "scenario": sc.name,
+        "description": sc.description,
+        "workload": workload.name,
+        "nodes": nodes,
+        "units_per_node": units_per_node,
+        "total_units": total,
+        "offered": len(arrivals),
+        "offered_rate_rps": len(arrivals) / duration,
+        "slo_deadline_ms": slo * 1e3,
+        "fabric_events": [{"at_frac": ev.at_frac, "action": ev.action,
+                           "node": ev.node} for ev in events],
+        "policies": [policy_key(p, d)
+                     for p in FABRIC_POLICIES for d in dispatches],
+    }
+    for dispatch in dispatches:
+        out[policy_key("single_fat", dispatch)] = run_policy(
+            "static", arrivals, model=model, units=total,
+            duration=duration, initial_batch=initial_batch,
+            max_batch=max_batch, slo_deadline=slo,
+            reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
+            interference=interference)
+        out[policy_key("single_packrat", dispatch)] = run_policy(
+            "packrat", arrivals, model=model, units=total,
+            duration=duration, initial_batch=initial_batch,
+            max_batch=max_batch, slo_deadline=slo,
+            reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
+            interference=interference)
+        out[policy_key("fabric", dispatch)] = run_fabric_policy(
+            arrivals, model=model, nodes=nodes,
+            units_per_node=units_per_node, duration=duration, seed=seed,
+            initial_batch=initial_batch, max_batch=max_batch,
+            slo_deadline=slo, reconfigure_timeout=reconfigure_timeout,
+            dispatch=dispatch, interference=interference, events=events)
+    return out
+
+
+# --------------------------------------------------------------------- #
 # multi-model (mixed-traffic) path
 # --------------------------------------------------------------------- #
 def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
@@ -605,7 +761,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="comma-separated model list — switches to the "
                          "multi-model resource plane (mixed-* scenarios)")
     ap.add_argument("--units", type=int, default=16,
-                    help="total threads/chips T")
+                    help="total threads/chips T (per node under "
+                         "--nodes > 1)")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="number of Packrat nodes; > 1 switches to the "
+                         "cluster fabric (single-fat-node vs fabric on "
+                         "one identical trace), 1 is the unchanged "
+                         "single-node path")
     ap.add_argument("--duration", type=float, default=60.0,
                     help="seconds of offered load")
     ap.add_argument("--seed", type=int, default=0)
@@ -658,6 +820,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error("--units, --initial-batch and --max-batch must be >= 1")
     if args.slo_ms is not None and args.slo_ms <= 0:
         ap.error("--slo-ms must be > 0")
+    if args.nodes < 1:
+        ap.error("--nodes must be >= 1")
+    if args.nodes > 1 and args.models:
+        ap.error("--nodes > 1 is single-model per node for now; "
+                 "drop --models")
+    if args.nodes > 1 and args.execution == "real":
+        ap.error("--nodes > 1 runs on the simulated plane; "
+                 "drop --execution real")
 
     dispatches = (DISPATCHES if args.dispatch == "both"
                   else (args.dispatch,))
@@ -680,6 +850,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                      f"choose from {sorted(MICRO_MODELS)}")
         scenarios = _select_scenarios(args, ap)
         report: Dict[str, object] = {
+            "schema_version": SCHEMA_VERSION,
             "execution": "real",
             "real_model": args.real_model,
             "real_rate_cap_rps": args.real_rate_cap,
@@ -737,6 +908,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             except KeyError as e:
                 ap.error(e.args[0])
         report: Dict[str, object] = {
+            "schema_version": SCHEMA_VERSION,
             "models": list(models),
             "units": args.units,
             "duration_s": args.duration,
@@ -777,7 +949,52 @@ def main(argv: Optional[List[str]] = None) -> int:
     model = PAPER_MODELS[model_name]
     scenarios = _select_scenarios(args, ap)
 
+    if args.nodes > 1:
+        keys = [policy_key(p, d) for p in FABRIC_POLICIES
+                for d in dispatches]
+        report = {
+            "schema_version": SCHEMA_VERSION,
+            "model": model_name,
+            "nodes": args.nodes,
+            "units_per_node": args.units,
+            "total_units": args.nodes * args.units,
+            "duration_s": args.duration,
+            "seed": args.seed,
+            "initial_batch": args.initial_batch,
+            "max_batch": args.max_batch,
+            "slo_factor": args.slo_factor,
+            "slo_ms": args.slo_ms,
+            "interference": args.interference,
+            "dispatches": list(dispatches),
+            "policies": keys,
+            "scenarios": {},
+        }
+        for sc in scenarios:
+            result = run_fabric_scenario(
+                sc, model=model, nodes=args.nodes,
+                units_per_node=args.units, duration=args.duration,
+                seed=args.seed, initial_batch=args.initial_batch,
+                max_batch=args.max_batch, slo_factor=args.slo_factor,
+                reconfigure_timeout=args.reconfigure_timeout,
+                dispatches=dispatches, interference=args.interference,
+                slo_ms=args.slo_ms)
+            report["scenarios"][sc.name] = result
+            parts = []
+            for key in keys:
+                rep = result[key]
+                p95 = rep["latency_ms"]["p95"]
+                parts.append(
+                    f"{key}: p95="
+                    f"{'n/a' if p95 is None else f'{p95:.0f}ms'} "
+                    f"shed={rep['shed_rate']:.0%}")
+            print(f"[bench] {sc.name:16s} offered={result['offered']:6d} "
+                  f"[{args.nodes}x{args.units}u]  " + "  ".join(parts),
+                  file=sys.stderr)
+        _emit_report(report, args.out)
+        return 0
+
     report = {
+        "schema_version": SCHEMA_VERSION,
         "model": model_name,
         "units": args.units,
         "duration_s": args.duration,

@@ -1,11 +1,48 @@
-"""Packrat serving runtime: dispatcher, workers, controller, simulator,
-workload scenario engine, SLO metrics, and the multi-model resource
-plane (unit pool → tenant leases → per-model controllers)."""
+"""Packrat serving runtime: from one request to a serving fleet.
+
+The package is organised as four layers; ``pydoc`` each named class for
+the full contract:
+
+**Execution planes** (``plane``) — time, worker execution and
+completion delivery behind one interface (:class:`ExecutionPlane`):
+:class:`SimulatedPlane` runs on the deterministic virtual clock
+(:class:`EventLoop`) with latencies from a :class:`LatencyBackend`;
+:class:`RealPlane` runs jitted JAX batches on wall-clock threads.
+Everything above is plane-agnostic.
+
+**The single-node engine** — :class:`Dispatcher` owns the request
+mechanics (queueing, sub-batch execution, straggler watchdogs,
+exactly-once retirement) and delegates decisions to a
+:class:`DispatchPolicy` (:class:`BatchSyncPolicy` — paper-faithful,
+:class:`ContinuousPolicy` — per-instance queues); :class:`PackratServer`
+ties the paper's §3.1 control loop together: estimator → knapsack →
+allocator → active-passive reconfiguration → dispatcher → workers.
+
+**The multi-model resource plane** (``tenancy``) —
+:class:`MultiModelServer` hosts several :class:`ModelTenant` s on one
+unit pool (:class:`ResourcePool` / :class:`UnitLease`), re-splitting
+units live from per-model demand estimates.
+
+**The cluster fabric** (``fabric``) — :class:`ClusterRouter` fronts N
+Packrat nodes on one shared plane: power-of-two-choices routing by
+least expected latency, per-node token-bucket admission, batch-floor
+degradation, queue-depth shedding (:class:`Shed` terminal state) and
+drain/failover with fleet-wide exactly-once delivery.
+
+Workloads and measurement ride alongside: seeded arrival generators
+(``workloads``), the capacity-relative scenario registry
+(``scenarios``), and :class:`MetricsCollector` (percentiles, goodput,
+SLO attainment, shed accounting, per-model/per-node breakdowns).
+The benchmark CLI over all of it is ``repro.launch.bench_serving``;
+operator documentation lives in ``docs/OPERATIONS.md``.
+"""
 
 from .allocator import (AllocationError, Placement, ResourceAllocator,
                         ResourcePool, UnitLease)
 from .controller import ControllerConfig, ModelTenant, PackratServer
 from .dispatcher import Dispatcher, DispatcherConfig
+from .fabric import (ClusterRouter, FabricConfig, FabricNodeSpec,
+                     TokenBucket)
 from .instance import (CalibratedBackend, CallableBackend, JaxBackend,
                        LatencyBackend, TabulatedBackend, WorkerInstance)
 from .metrics import (LatencyBucket, MetricsCollector, instance_report,
@@ -13,13 +50,15 @@ from .metrics import (LatencyBucket, MetricsCollector, instance_report,
 from .plane import (ExecutionPlane, RealPlane, SimulatedPlane, as_plane)
 from .policy import (BatchSyncPolicy, ContinuousPolicy, DispatchPolicy,
                      make_policy)
-from .scenarios import (MultiModelScenario, MultiModelScenarioContext,
-                        Scenario, ScenarioContext, get_mm_scenario,
+from .scenarios import (FabricEvent, MultiModelScenario,
+                        MultiModelScenarioContext,
+                        Scenario, ScenarioContext, fabric_events,
+                        get_mm_scenario,
                         get_scenario, list_mm_scenarios, list_scenarios,
                         mm_scenario, register_mm_scenario,
                         register_scenario, scenario)
 from .simulator import (DEFAULT_MODEL, ArrivalProcess, EventLoop, Request,
-                        Response, step_rate)
+                        Response, Shed, step_rate)
 from .tenancy import MultiModelServer, TenantSpec
 from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
                         RampWorkload, StepWorkload, TraceWorkload, Workload)
@@ -27,19 +66,21 @@ from .workloads import (DiurnalWorkload, MMPPWorkload, PoissonWorkload,
 __all__ = [
     "AllocationError", "ArrivalProcess", "BatchSyncPolicy",
     "CalibratedBackend",
-    "CallableBackend", "ContinuousPolicy", "ControllerConfig",
+    "CallableBackend", "ClusterRouter", "ContinuousPolicy",
+    "ControllerConfig",
     "DEFAULT_MODEL", "DispatchPolicy", "Dispatcher", "DispatcherConfig",
-    "DiurnalWorkload", "EventLoop", "ExecutionPlane", "JaxBackend",
+    "DiurnalWorkload", "EventLoop", "ExecutionPlane", "FabricConfig",
+    "FabricEvent", "FabricNodeSpec", "JaxBackend",
     "LatencyBackend",
     "LatencyBucket", "MMPPWorkload", "MetricsCollector", "ModelTenant",
     "MultiModelScenario", "MultiModelScenarioContext", "MultiModelServer",
     "PackratServer", "Placement", "PoissonWorkload", "RampWorkload",
     "RealPlane",
     "Request", "ResourceAllocator", "ResourcePool", "Response", "Scenario",
-    "ScenarioContext", "SimulatedPlane", "StepWorkload", "TabulatedBackend",
-    "TenantSpec",
+    "ScenarioContext", "Shed", "SimulatedPlane", "StepWorkload",
+    "TabulatedBackend", "TenantSpec", "TokenBucket",
     "TraceWorkload", "UnitLease", "WorkerInstance", "Workload", "as_plane",
-    "get_mm_scenario", "get_scenario", "instance_report",
+    "fabric_events", "get_mm_scenario", "get_scenario", "instance_report",
     "list_mm_scenarios", "list_scenarios", "log2_ms_histogram",
     "make_policy", "mm_scenario", "nearest_rank", "register_mm_scenario",
     "register_scenario", "scenario", "step_rate",

@@ -334,18 +334,41 @@ class PackratServer(ModelTenant):
 
     The one-tenant special case of the resource plane: the tenant owns
     an allocator over the whole pool and the server's periodic tick
-    drives its control loop directly.
+    drives its control loop directly.  Everything the paper's §3.1
+    controller does happens behind :meth:`submit`:
+
+    >>> loop = EventLoop()
+    >>> server = PackratServer(loop, total_units=16, optimizer=opt,
+    ...                        backend=TabulatedBackend(profile),
+    ...                        initial_batch=8)
+    >>> server.submit(Request(0, 0.0))
+    >>> loop.run_until(30.0)
+    >>> server.responses[0].latency        # doctest: +SKIP
+
+    ``loop`` may be a raw :class:`~repro.serving.simulator.EventLoop`
+    (deterministic simulation) or any
+    :class:`~repro.serving.plane.ExecutionPlane` (e.g. a ``RealPlane``
+    for wall-clock JAX execution).  Delivered responses accumulate in
+    ``responses`` and fan out through ``on_response``; reconfiguration
+    history is in ``reconfig_log``; fleets of these servers are fronted
+    by :class:`~repro.serving.fabric.ClusterRouter`.
     """
 
     def __init__(self, loop: EventLoop, *, total_units: int,
                  optimizer: PackratOptimizer, backend: LatencyBackend,
                  initial_batch: int, config: Optional[ControllerConfig] = None,
                  domain_size: Optional[int] = None,
-                 calibrator: Optional[ProfileCalibrator] = None) -> None:
+                 calibrator: Optional[ProfileCalibrator] = None,
+                 on_response: Optional[Callable[[Response], None]] = None
+                 ) -> None:
+        """``on_response`` (optional) is invoked for every delivered
+        response in addition to the ``responses`` log — the cluster
+        fabric chains its exactly-once delivery handler here."""
         super().__init__(loop, total_units=total_units, optimizer=optimizer,
                          backend=backend, initial_batch=initial_batch,
                          allocator=ResourceAllocator(total_units, domain_size),
-                         config=config, calibrator=calibrator)
+                         config=config, calibrator=calibrator,
+                         on_response=on_response)
         self._schedule_tick()
 
     def _schedule_tick(self) -> None:

@@ -46,7 +46,34 @@ class DispatcherConfig:
 
 
 class Dispatcher:
-    """Routes requests onto the active instance set via a dispatch policy."""
+    """Routes requests onto the active instance set via a dispatch policy.
+
+    The dispatcher is the per-request engine of one serving endpoint.
+    It owns the *mechanics* every policy shares — the central arrival
+    queue, sub-batch execution through the execution plane, straggler
+    watchdogs, duplicate suppression and completed-id retirement — and
+    delegates the *decisions* (when a batch forms, which instance runs
+    it) to its :class:`~repro.serving.policy.DispatchPolicy`.
+
+    Public surface (everything else is engine internals):
+
+    * :meth:`on_request` — enqueue one request;
+    * :attr:`on_response` — delivery callback, safe to chain mid-run
+      (:meth:`MetricsCollector.attach <repro.serving.metrics
+      .MetricsCollector.attach>` does exactly that);
+    * :attr:`on_measure` — optional observed-latency hook feeding the
+      calibration loop;
+    * :meth:`set_config` — atomically swap the active ⟨i,t,b⟩
+      configuration and instance set (called by the controller);
+    * :attr:`queue_depth` / :meth:`take_signal` — the batch-size
+      estimator's inputs;
+    * :meth:`reclaim_undispatched` — pull back requests that have not
+      reached a worker (cluster-fabric drain/failover).
+
+    Delivery is exactly-once per request id: re-dispatched stragglers
+    race, the first completion wins, and ids are retired only once no
+    in-flight copy could still deliver them.
+    """
 
     def __init__(self, loop: EventLoop, config: PackratConfig,
                  instances: Sequence[WorkerInstance],
@@ -118,6 +145,24 @@ class Dispatcher:
 
     def notify_respawn(self, worker: WorkerInstance) -> None:
         self.policy.on_respawn(worker)
+
+    def reclaim_undispatched(self) -> List[Request]:
+        """Remove and return every request not yet submitted to a worker
+        (central queue + per-instance queues), in arrival order.
+
+        The cluster fabric uses this to drain or fail over a node:
+        undispatched requests can be re-routed with no duplicate-delivery
+        risk because no watchdog or completion path holds a copy — only
+        ``_execute`` registers those, and these never reached it.
+        """
+        out: List[Request] = list(self.queue)
+        self.queue.clear()
+        for w in self.instances:
+            if w.queue:
+                out.extend(w.queue)
+                w.queue.clear()
+        out.sort(key=lambda r: (r.arrival, r.id))
+        return out
 
     def estimated_extra_drain(self, now: float) -> float:
         """Extra drain time for queued per-instance work (0 for sync)."""

@@ -1,0 +1,523 @@
+"""Scale-out serving fabric: a cluster router over N Packrat nodes.
+
+Packrat picks the optimal ⟨i,t,b⟩ split *within* one server; this module
+adds the fleet layer above it — the missing piece between "one tuned
+node" and "heavy traffic from millions of users".  Following InferLine's
+slow-planner / fast-reactive split and Harpagon's observation that
+cross-replica dispatch is where serving cost and tail latency are won,
+the fabric separates three concerns:
+
+* **Routing** — :class:`ClusterRouter` fronts N nodes (each a full
+  :class:`~repro.serving.controller.PackratServer` with its own unit
+  pool and Packrat-planned configs, all driven by **one shared
+  execution plane** so simulated runs stay deterministic).  Each
+  request is routed by *least expected latency* — the node's calibrated
+  expected batch latency scaled by its queue backlog — sampled with
+  **power-of-two-choices**, so routing stays O(1) per request at any
+  fleet size while still tracking load.
+
+* **Admission** — a per-node :class:`TokenBucket` caps the admitted
+  rate at what the node can serve *within the SLO* (the largest
+  SLO-feasible batch's throughput, with headroom).  Requests beyond it
+  are **shed** immediately: a :class:`~repro.serving.simulator.Shed`
+  terminal state, reported separately so goodput and admitted-only
+  percentiles stay honest under overload.
+
+* **Overload degradation** — before dropping anything for queue depth,
+  the router *degrades batch-size floors*: an overloaded node's
+  estimator is pinned to the largest SLO-feasible batch (maximum
+  throughput that still honours the deadline), and only once the node
+  is degraded **and** its queue would blow the remaining SLO budget do
+  queue-depth sheds start.  Exit is hysteretic so bursts do not flap
+  the mode.
+
+Fault handling preserves exactly-once delivery: the router keeps a
+per-node map of undelivered routed requests and a fleet-wide delivered
+set.  Draining a node re-routes its *undispatched* requests and lets
+in-flight batches finish and deliver from the draining node; failing a
+node halts its control loop, fails its workers (in-flight completions
+on failed workers never deliver), and re-routes every undelivered
+request — a late duplicate from any path is suppressed by the delivered
+set (``duplicates_suppressed`` counts them, normally 0).
+
+Per-node arrival rates reuse :class:`~repro.core.estimator
+.ArrivalRateSignal` (λ̂ per node), which both feeds the overload
+detector and appears in the fleet report.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.estimator import ArrivalRateSignal
+from ..core.knapsack import PackratOptimizer
+from ..core.multimodel import solve_with_slo
+from ..core.profiler import ProfileCalibrator
+from .controller import ControllerConfig, PackratServer
+from .instance import LatencyBackend, WorkerInstance
+from .plane import ExecutionPlane, as_plane
+from .simulator import EventLoop, Request, Response, Shed
+
+
+class TokenBucket:
+    """Deterministic token bucket: ``rate_rps`` tokens/s, ``burst`` cap.
+
+    Refill is computed lazily from the clock handed to :meth:`take`, so
+    the bucket is exact on the virtual clock and needs no timers.  A
+    non-positive ``rate_rps`` disables admission control (every take
+    succeeds).
+    """
+
+    def __init__(self, rate_rps: float, burst: float) -> None:
+        self.rate = rate_rps
+        self.burst = max(1.0, burst)
+        self.tokens = self.burst
+        self._last = 0.0
+
+    def take(self, now: float) -> bool:
+        """Consume one token if available; refills for elapsed time first."""
+        if self.rate <= 0.0:
+            return True
+        elapsed = max(0.0, now - self._last)
+        self._last = now
+        self.tokens = min(self.burst, self.tokens + elapsed * self.rate)
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    """Fleet-level knobs; per-node controller config is deep-copied per
+    node so degrade-mode floor changes never leak across nodes."""
+
+    controller: ControllerConfig = dataclasses.field(
+        default_factory=ControllerConfig)
+    # token rate = factor × throughput of the node's degrade-batch config
+    admission_rate_factor: float = 1.1
+    admission_burst_batches: float = 2.0   # burst = factor × degrade batch
+    # queue depth (in degrade-batch multiples) that engages degrade mode
+    degrade_queue_batches: float = 2.0
+    # queue-shed depth without an SLO (with one, the wait budget decides)
+    shed_queue_batches: float = 8.0
+    # SLO budget split: service time gets `slo_latency_share`, queueing
+    # gets `slo_wait_share` (sizes the shed depth); the remainder is
+    # slack for dispatch overheads and in-flight batches
+    slo_latency_share: float = 0.4
+    slo_wait_share: float = 0.45
+    router_tick_interval: float = 0.1      # degrade enter/exit checks
+    p2c_seed: int = 0                      # power-of-two-choices sampling
+
+
+@dataclasses.dataclass
+class FabricNodeSpec:
+    """What the fabric needs to stand up one Packrat node."""
+
+    optimizer: PackratOptimizer
+    backend: LatencyBackend
+    node_id: str = ""                      # default: "node<k>"
+    calibrator: Optional[ProfileCalibrator] = None
+
+
+class FabricNodeServer(PackratServer):
+    """A :class:`PackratServer` whose control loop can be halted
+    permanently — the fabric's model of node death.  A halted server
+    never ticks again: no estimator samples, no reconfigurations, and
+    crucially no heartbeat respawn of its failed workers."""
+
+    def __init__(self, *args, **kwargs) -> None:
+        self.halted = False
+        super().__init__(*args, **kwargs)
+
+    def _tick(self) -> None:
+        if self.halted:
+            return
+        super()._tick()
+
+
+class FabricNode:
+    """One node's fleet-side state: the server plus the router's view of
+    it (admission bucket, λ̂ signal, degrade plan, undelivered map)."""
+
+    def __init__(self, index: int, node_id: str,
+                 server: FabricNodeServer) -> None:
+        self.index = index
+        self.node_id = node_id
+        self.server = server
+        self.rate = ArrivalRateSignal()     # per-node λ̂ (estimator reuse)
+        self.pending: Dict[int, Request] = {}   # routed, not yet delivered
+        self.routed = 0
+        self.delivered = 0
+        self.shed_counts: Dict[str, int] = {}
+        self.draining = False
+        self.dead = False
+        self.degraded = False
+        self.degrade_engagements = 0
+        # filled by the router's planning pass
+        self.b_deg = 1                  # degrade-mode batch floor/ceiling
+        self.thr_deg = 0.0              # its sustainable throughput
+        self.admission_rps = 0.0
+        self.degrade_depth = 1
+        self.shed_depth = 2
+        self.bucket = TokenBucket(0.0, 1.0)
+        self.base_min_batch = 1
+        self.base_max_batch = 1
+
+    @property
+    def routable(self) -> bool:
+        return not (self.dead or self.draining)
+
+
+class ClusterRouter:
+    """Least-expected-latency router + overload control over N nodes.
+
+    All nodes share one execution plane (``loop`` may be a raw
+    :class:`~repro.serving.simulator.EventLoop`), so a simulated fleet
+    is exactly as deterministic as a single simulated node.  Submit
+    requests with :meth:`submit`; delivered responses arrive on
+    :attr:`on_response` (exactly once per request id, fleet-wide) and
+    shed requests on :attr:`on_shed` as
+    :class:`~repro.serving.simulator.Shed` records.
+
+    The router schedules a periodic self-tick for degrade-mode
+    enter/exit, so drive the loop with ``run_until`` (``run()`` would
+    never terminate).
+    """
+
+    def __init__(self, loop, *, units_per_node: int,
+                 specs: Sequence[FabricNodeSpec], initial_batch: int,
+                 slo_deadline: Optional[float] = None,
+                 config: Optional[FabricConfig] = None,
+                 domain_size: Optional[int] = None) -> None:
+        if not specs:
+            raise ValueError("need at least one node")
+        if units_per_node < 1:
+            raise ValueError(f"units_per_node must be >= 1, "
+                             f"got {units_per_node}")
+        self.plane: ExecutionPlane = as_plane(loop)
+        self.loop = self.plane
+        self.fcfg = config or FabricConfig()
+        self.units_per_node = units_per_node
+        self.slo_deadline = slo_deadline
+        self._rng = random.Random(self.fcfg.p2c_seed)
+        self.on_response: Optional[Callable[[Response], None]] = None
+        self.on_shed: Optional[Callable[[Shed], None]] = None
+        self.responses: List[Response] = []
+        self.sheds: List[Shed] = []
+        self.offered = 0
+        self.rerouted = 0
+        self.drains = 0
+        self.failovers = 0
+        self.duplicates_suppressed = 0
+        self._delivered: set = set()
+        self.degrade_log: List[Tuple[float, str, str]] = []
+
+        self.nodes: List[FabricNode] = []
+        for k, spec in enumerate(specs):
+            node_id = spec.node_id or f"node{k}"
+            if any(n.node_id == node_id for n in self.nodes):
+                raise ValueError(f"duplicate node_id {node_id!r}")
+            ccfg = copy.deepcopy(self.fcfg.controller)
+            server = FabricNodeServer(
+                self.plane, total_units=units_per_node,
+                optimizer=spec.optimizer, backend=spec.backend,
+                initial_batch=initial_batch, config=ccfg,
+                domain_size=domain_size, calibrator=spec.calibrator,
+                on_response=(lambda resp, k=k:
+                             self._on_node_response(self.nodes[k], resp)))
+            node = FabricNode(k, node_id, server)
+            self._plan_node(node, spec.optimizer)
+            self.nodes.append(node)
+        self.loop.schedule(self.fcfg.router_tick_interval, self._tick)
+
+    # ------------------------------------------------------------------ #
+    # per-node overload plan (computed once, from the planning profile)
+    # ------------------------------------------------------------------ #
+    def _plan_node(self, node: FabricNode, opt: PackratOptimizer) -> None:
+        """Derive the node's degrade batch, admission rate and shed
+        depths.  With an SLO, the degrade batch is the largest batch
+        whose optimal makespan fits in ``slo_latency_share`` of the
+        deadline (the rest of the budget bounds queueing, which sizes
+        the shed depth); without one, it is the throughput-optimal
+        feasible batch and depths fall back to batch multiples."""
+        fcfg = self.fcfg
+        units = self.units_per_node
+        best_b, best_thr = 1, 0.0
+        b = 1
+        while True:
+            try:
+                cfg = opt.solve(units, b)
+            except ValueError:
+                break
+            if cfg.throughput > best_thr:
+                best_thr, best_b = cfg.throughput, b
+            b *= 2
+        if self.slo_deadline is not None:
+            budget = fcfg.slo_latency_share * self.slo_deadline
+            got = solve_with_slo(opt, units, budget)
+            if got is not None:
+                node.b_deg = got[0]
+                node.thr_deg = got[1].throughput
+            else:
+                # even B=1 misses the service budget: admit at the B=1
+                # rate and let the wait budget (possibly negative-free)
+                # shed the rest
+                node.b_deg = 1
+                node.thr_deg = opt.solve(units, 1).throughput
+        else:
+            node.b_deg = best_b
+            node.thr_deg = best_thr
+        node.admission_rps = fcfg.admission_rate_factor * node.thr_deg
+        node.bucket = TokenBucket(
+            node.admission_rps, fcfg.admission_burst_batches * node.b_deg)
+        node.degrade_depth = max(1, int(fcfg.degrade_queue_batches
+                                        * node.b_deg))
+        if self.slo_deadline is not None:
+            wait_budget = fcfg.slo_wait_share * self.slo_deadline
+            node.shed_depth = int(wait_budget * node.thr_deg)
+        else:
+            node.shed_depth = int(fcfg.shed_queue_batches * node.b_deg)
+        node.shed_depth = max(node.shed_depth, node.degrade_depth + 1)
+        est = node.server.estimator.config
+        node.base_min_batch = est.min_batch
+        node.base_max_batch = est.max_batch
+
+    # ------------------------------------------------------------------ #
+    # request path
+    # ------------------------------------------------------------------ #
+    def _score(self, node: FabricNode) -> float:
+        """Expected completion for one more request on ``node``: the
+        active config's (calibration-corrected) makespan scaled by the
+        node's queue backlog in aggregate-batch units."""
+        d = node.server.dispatcher
+        lat = d.config.latency
+        cal = node.server.calibrator
+        if cal is not None:
+            lat *= cal.global_ratio
+        backlog = d.queue_depth / max(1, d.config.total_batch)
+        return lat * (1.0 + backlog)
+
+    def _pick(self) -> Optional[FabricNode]:
+        """Power-of-two-choices: sample two routable nodes, keep the one
+        with the lower expected latency — O(1) per request, ties broken
+        by node index for determinism."""
+        cands = [n for n in self.nodes if n.routable]
+        if not cands:
+            return None
+        pair = cands if len(cands) <= 2 else self._rng.sample(cands, 2)
+        return min(pair, key=lambda n: (self._score(n), n.index))
+
+    def submit(self, req: Request) -> None:
+        """Route one request: pick a node (P2C), charge its admission
+        bucket, then apply queue-depth overload control — degrade the
+        node's batch floors first, shed only once degraded *and* past
+        the wait budget."""
+        now = self.loop.now
+        self.offered += 1
+        node = self._pick()
+        if node is None:
+            self._shed(req, None, "no-node", now)
+            return
+        node.rate.observe(now)
+        if not node.bucket.take(now):
+            self._shed(req, node, "admission", now)
+            return
+        depth = node.server.dispatcher.queue_depth
+        if depth >= node.degrade_depth:
+            self._engage_degrade(node, now)
+        if node.degraded and depth >= node.shed_depth:
+            self._shed(req, node, "queue", now)
+            return
+        self._deliver_to(node, req)
+
+    def _deliver_to(self, node: FabricNode, req: Request) -> None:
+        node.routed += 1
+        node.pending[req.id] = req
+        node.server.submit(req)
+
+    def _route_admitted(self, req: Request) -> None:
+        """Re-route an already-admitted request (drain/failure) without
+        charging admission again; sheds only if no node is routable."""
+        node = self._pick()
+        if node is None:
+            self._shed(req, None, "no-node", self.loop.now)
+            return
+        self.rerouted += 1
+        self._deliver_to(node, req)
+
+    def _shed(self, req: Request, node: Optional[FabricNode], reason: str,
+              now: float) -> None:
+        shed = Shed(request=req, time=now,
+                    node_id=node.node_id if node is not None else None,
+                    reason=reason)
+        self.sheds.append(shed)
+        if node is not None:
+            node.shed_counts[reason] = node.shed_counts.get(reason, 0) + 1
+        if self.on_shed is not None:
+            self.on_shed(shed)
+
+    def _on_node_response(self, node: FabricNode, resp: Response) -> None:
+        node.pending.pop(resp.request.id, None)
+        if resp.request.id in self._delivered:
+            # a failed-over request delivered from two paths; first wins
+            self.duplicates_suppressed += 1
+            return
+        self._delivered.add(resp.request.id)
+        node.delivered += 1
+        resp.node_id = node.node_id
+        self.responses.append(resp)
+        if self.on_response is not None:
+            self.on_response(resp)
+
+    @property
+    def queue_depth(self) -> int:
+        """Aggregate undispatched requests across live nodes (metrics
+        queue sampler)."""
+        return sum(n.server.dispatcher.queue_depth
+                   for n in self.nodes if not n.dead)
+
+    @property
+    def workers_ever(self) -> List[WorkerInstance]:
+        out: List[WorkerInstance] = []
+        for n in self.nodes:
+            out.extend(n.server.workers_ever)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # overload mode
+    # ------------------------------------------------------------------ #
+    def _engage_degrade(self, node: FabricNode, now: float) -> None:
+        """Pin the node's estimator to the degrade batch: floors *and*
+        ceiling move to the largest SLO-feasible batch, so the node
+        serves at maximum SLO-honouring throughput instead of chasing
+        queue depth into deadline-blowing batches."""
+        if node.degraded or node.dead:
+            return
+        node.degraded = True
+        node.degrade_engagements += 1
+        self.degrade_log.append((now, node.node_id, "enter"))
+        est = node.server.estimator.config
+        est.min_batch = node.b_deg
+        est.max_batch = node.b_deg
+        node.server.reconfigure(node.b_deg)
+
+    def _exit_degrade(self, node: FabricNode, now: float) -> None:
+        if not node.degraded:
+            return
+        node.degraded = False
+        self.degrade_log.append((now, node.node_id, "exit"))
+        est = node.server.estimator.config
+        est.min_batch = node.base_min_batch
+        est.max_batch = node.base_max_batch
+
+    def _tick(self) -> None:
+        """Periodic overload check: engage degrade on queue depth or a
+        per-node λ̂ above the admission rate; exit with hysteresis (a
+        quarter of the enter depth, λ̂ back under the degrade-batch
+        throughput) so bursts do not flap the mode."""
+        now = self.loop.now
+        for node in self.nodes:
+            if node.dead:
+                continue
+            depth = node.server.dispatcher.queue_depth
+            lam = node.rate.rate(now)
+            if not node.degraded and (depth >= node.degrade_depth
+                                      or lam > node.admission_rps):
+                self._engage_degrade(node, now)
+            elif node.degraded and (depth <= node.degrade_depth // 4
+                                    and lam <= node.thr_deg):
+                self._exit_degrade(node, now)
+        self.loop.schedule(self.fcfg.router_tick_interval, self._tick)
+
+    # ------------------------------------------------------------------ #
+    # drain / failure
+    # ------------------------------------------------------------------ #
+    def drain_node(self, index: int) -> int:
+        """Stop routing to a node and re-route its *undispatched*
+        requests; in-flight batches finish and deliver from the
+        draining node.  Returns the number of requests moved."""
+        node = self.nodes[index]
+        if node.dead or node.draining:
+            return 0
+        node.draining = True
+        self.drains += 1
+        moved = node.server.dispatcher.reclaim_undispatched()
+        for req in moved:
+            node.pending.pop(req.id, None)
+            self._route_admitted(req)
+        return len(moved)
+
+    def fail_node(self, index: int) -> int:
+        """Kill a node: halt its control loop (no heartbeat respawns),
+        fail its workers (in-flight completions on failed workers never
+        deliver), and re-route every undelivered request it held.  The
+        fleet-wide delivered set keeps delivery exactly-once even if a
+        straggling path later produces a duplicate.  Returns the number
+        of requests failed over."""
+        node = self.nodes[index]
+        if node.dead:
+            return 0
+        node.dead = True
+        node.draining = False
+        node.server.halted = True
+        for w in node.server.dispatcher.instances:
+            if not w.failed:
+                w.fail()
+        node.server.dispatcher.reclaim_undispatched()   # clear dead queues
+        orphans = sorted(node.pending.values(),
+                         key=lambda r: (r.arrival, r.id))
+        node.pending.clear()
+        self.failovers += len(orphans)
+        for req in orphans:
+            self._route_admitted(req)
+        return len(orphans)
+
+    # ------------------------------------------------------------------ #
+    # reporting
+    # ------------------------------------------------------------------ #
+    def fleet_report(self, now: float) -> Dict[str, object]:
+        """JSON-serializable fleet section: routing/overload counters
+        plus a per-node breakdown (the per-instance report is appended
+        by the benchmark, which owns the metrics convention)."""
+        per_node: Dict[str, Dict[str, object]] = {}
+        for n in self.nodes:
+            rlog = n.server.reconfig_log
+            per_node[n.node_id] = {
+                "routed": n.routed,
+                "delivered": n.delivered,
+                "shed": dict(sorted(n.shed_counts.items())),
+                "pending": len(n.pending),
+                "dead": n.dead,
+                "draining": n.draining,
+                "degraded": n.degraded,
+                "degrade_engagements": n.degrade_engagements,
+                "degrade_batch": n.b_deg,
+                "admission_rate_rps": n.admission_rps,
+                "arrival_rate_rps": n.rate.rate(now),
+                "reconfigurations": len(rlog) - 1,
+                "final_config": str(rlog[-1][2]),
+                "expected_latency_ms": rlog[-1][2].latency * 1e3,
+            }
+        return {
+            "nodes": len(self.nodes),
+            "units_per_node": self.units_per_node,
+            "offered": self.offered,
+            "shed": len(self.sheds),
+            "shed_rate": (len(self.sheds) / self.offered
+                          if self.offered else 0.0),
+            "rerouted": self.rerouted,
+            "drains": self.drains,
+            "failovers": self.failovers,
+            "duplicates_suppressed": self.duplicates_suppressed,
+            "degrade_log": [{"t": t, "node": nid, "event": ev}
+                            for t, nid, ev in self.degrade_log],
+            "per_node": per_node,
+        }
+
+
+__all__ = ["ClusterRouter", "FabricConfig", "FabricNode",
+           "FabricNodeServer", "FabricNodeSpec", "TokenBucket"]

@@ -22,7 +22,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .simulator import EventLoop, Request, Response
+from .simulator import EventLoop, Request, Response, Shed
 
 
 def nearest_rank(sorted_values: Sequence[float], q: float) -> float:
@@ -111,6 +111,14 @@ class MetricsCollector:
     key of :meth:`report`); a single-model run degenerates to one
     ``"default"`` entry that matches the aggregate numbers exactly.
     ``slo_by_model`` overrides the global SLO deadline per tenant.
+
+    Fabric runs additionally feed :meth:`on_shed` (a request refused by
+    admission or overload control — a terminal state: it never
+    completes) and tag responses with ``node_id``; the report then
+    carries shed counts and a per-node breakdown.  Latency percentiles
+    are **admitted-only by construction** — a shed request contributes
+    no latency sample — while goodput and SLO attainment divide by
+    *offered* load, so sheds count against both.
     """
 
     def __init__(self, *, slo_deadline: Optional[float] = None,
@@ -124,6 +132,10 @@ class MetricsCollector:
         self._batch_sizes: List[int] = []
         self.offered_by_model: Dict[str, int] = {}
         self.latencies_by_model: Dict[str, List[float]] = {}
+        self.shed = 0
+        self.shed_by_model: Dict[str, int] = {}
+        self.shed_by_node: Dict[str, int] = {}
+        self.latencies_by_node: Dict[str, List[float]] = {}
 
     def slo_for(self, model_id: str) -> Optional[float]:
         return self.slo_by_model.get(model_id, self.slo_deadline)
@@ -141,8 +153,20 @@ class MetricsCollector:
         self._batch_sizes.append(resp.batch_size)
         model = getattr(resp.request, "model_id", "default")
         self.latencies_by_model.setdefault(model, []).append(resp.latency)
+        node = getattr(resp, "node_id", None)
+        if node is not None:
+            self.latencies_by_node.setdefault(node, []).append(resp.latency)
         if resp.redispatched:
             self.redispatched += 1
+
+    def on_shed(self, shed: Shed) -> None:
+        """Record a terminal shed: counted against offered load (goodput
+        and attainment) but never in the latency percentiles."""
+        self.shed += 1
+        model = getattr(shed.request, "model_id", "default")
+        self.shed_by_model[model] = self.shed_by_model.get(model, 0) + 1
+        node = shed.node_id or "unrouted"
+        self.shed_by_node[node] = self.shed_by_node.get(node, 0) + 1
 
     def ingest(self, responses: Sequence[Response], *,
                offered: Optional[int] = None) -> None:
@@ -180,6 +204,30 @@ class MetricsCollector:
 
             disp.on_response = chained
         self.attach_queue_sampler(server.loop, sampled,
+                                  interval=sample_interval, until=until)
+
+    def attach_fabric(self, router, *, sample_interval: float = 0.1,
+                      until: Optional[float] = None) -> None:
+        """Hook a live :class:`~repro.serving.fabric.ClusterRouter`:
+        chains its ``on_response``/``on_shed`` callbacks and samples the
+        fleet-aggregate ``queue_depth`` on the shared clock."""
+        prev_resp = router.on_response
+
+        def chained_resp(resp: Response) -> None:
+            if prev_resp is not None:
+                prev_resp(resp)
+            self.on_response(resp)
+
+        router.on_response = chained_resp
+        prev_shed = router.on_shed
+
+        def chained_shed(shed: Shed) -> None:
+            if prev_shed is not None:
+                prev_shed(shed)
+            self.on_shed(shed)
+
+        router.on_shed = chained_shed
+        self.attach_queue_sampler(router.loop, router,
                                   interval=sample_interval, until=until)
 
     def attach_queue_sampler(self, loop: EventLoop, dispatcher, *,
@@ -250,7 +298,8 @@ class MetricsCollector:
         aggregate report, keyed by ``model_id``.  Models that were
         offered traffic but never completed a request still appear."""
         models = sorted(set(self.offered_by_model)
-                        | set(self.latencies_by_model))
+                        | set(self.latencies_by_model)
+                        | set(self.shed_by_model))
         out: Dict[str, Dict[str, object]] = {}
         for m in models:
             lats = sorted(self.latencies_by_model.get(m, []))
@@ -258,10 +307,12 @@ class MetricsCollector:
             offered = max(self.offered_by_model.get(m, 0), n)
             within = self.within_slo_model(m)
             slo = self.slo_for(m)
+            shed = self.shed_by_model.get(m, 0)
             out[m] = {
                 "offered": offered,
                 "completed": n,
-                "incomplete": max(offered - n, 0),
+                "shed": shed,
+                "incomplete": max(offered - n - shed, 0),
                 "latency_ms": {
                     "mean": (sum(lats) / n * 1e3) if n else None,
                     "p50": nearest_rank(lats, 50) * 1e3 if n else None,
@@ -273,6 +324,35 @@ class MetricsCollector:
                 "within_slo": within,
                 "goodput_rps": within / duration,
                 "slo_attainment": within / offered if offered else 1.0,
+            }
+        return out
+
+    def nodes_report(self, *, duration: float) -> Dict[str, Dict[str, object]]:
+        """Per-node breakdown for fabric runs: completions, admitted-only
+        percentiles, shed count and goodput, keyed by ``node_id``
+        (sheds that never reached a node appear under ``"unrouted"``).
+        Empty for single-node runs (no response carries a node tag)."""
+        node_ids = sorted(set(self.latencies_by_node)
+                          | set(self.shed_by_node))
+        out: Dict[str, Dict[str, object]] = {}
+        for nid in node_ids:
+            lats = sorted(self.latencies_by_node.get(nid, []))
+            n = len(lats)
+            slo = self.slo_deadline
+            within = (n if slo is None
+                      else sum(1 for lat in lats if lat <= slo))
+            out[nid] = {
+                "completed": n,
+                "shed": self.shed_by_node.get(nid, 0),
+                "latency_ms": {
+                    "mean": (sum(lats) / n * 1e3) if n else None,
+                    "p50": nearest_rank(lats, 50) * 1e3 if n else None,
+                    "p95": nearest_rank(lats, 95) * 1e3 if n else None,
+                    "p99": nearest_rank(lats, 99) * 1e3 if n else None,
+                    "max": lats[-1] * 1e3 if n else None,
+                },
+                "within_slo": within,
+                "goodput_rps": within / duration,
             }
         return out
 
@@ -290,7 +370,11 @@ class MetricsCollector:
         rep: Dict[str, object] = {
             "offered": max(self.offered, n),
             "completed": n,
-            "incomplete": max(self.offered - n, 0),
+            "admitted": max(self.offered, n) - self.shed,
+            "shed": self.shed,
+            "shed_rate": (self.shed / max(self.offered, n)
+                          if max(self.offered, n) else 0.0),
+            "incomplete": max(self.offered - n - self.shed, 0),
             "redispatched": self.redispatched,
             "latency_ms": {
                 "mean": (sum(lats) / n * 1e3) if n else None,
@@ -315,6 +399,11 @@ class MetricsCollector:
             ],
             "models": self.models_report(duration=duration),
         }
+        nodes = self.nodes_report(duration=duration)
+        if nodes:
+            # only fabric runs produce node-tagged samples; single-node
+            # reports keep their schema unchanged
+            rep["nodes"] = nodes
         return rep
 
 

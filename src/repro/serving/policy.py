@@ -44,6 +44,16 @@ class DispatchPolicy:
     ``bind`` is called once with the owning dispatcher; hooks may use
     its public state (``loop``, ``queue``, ``config``, ``instances``,
     ``dcfg``) and submit work via ``_execute``/``_submit``.
+
+    Lifecycle: ``bind`` → ``on_arrival`` per request →
+    ``on_batch_done`` per completed sub-batch, with
+    ``on_config_change`` at every instance-set swap and ``on_respawn``
+    / ``on_abandoned`` on the fault paths.  ``take_signal`` is polled
+    by the controller tick and must *consume* whatever window the
+    policy accumulates (it is the estimator's Q̂, §3.8).  Implement a
+    subclass and pass it as ``Dispatcher(policy=...)`` — or register a
+    name in :func:`make_policy` to select it from
+    ``ControllerConfig(dispatch_policy=...)``.
     """
 
     name = "abstract"

@@ -175,6 +175,64 @@ def _flash_crowd(ctx: ScenarioContext) -> Workload:
     return TraceWorkload(times=tuple(sorted(times)), name="flash-crowd")
 
 
+@scenario("overload",
+          "sustained overload: steady Poisson at 140% of the B=64 "
+          "capacity — no configuration keeps up; tests admission "
+          "control, shedding and goodput under saturation")
+def _overload(ctx: ScenarioContext) -> Workload:
+    return PoissonWorkload(rate_rps=1.4 * ctx.capacity_rps(64))
+
+
+@scenario("flash-overload",
+          "flash crowd beyond capacity: quiet at 30% of B=32 capacity, "
+          "spiking to 200% of B=64 capacity for 25% of the run — only "
+          "shedding bounds the admitted tail")
+def _flash_overload(ctx: ScenarioContext) -> Workload:
+    quiet = 0.3 * ctx.capacity_rps(32)
+    spike_start = 0.4 * ctx.duration
+    spike_len = 0.25 * ctx.duration
+    base = PoissonWorkload(rate_rps=quiet)
+    spike = PoissonWorkload(rate_rps=2.0 * ctx.capacity_rps(64))
+    times = [t for t in base.arrivals(ctx.duration, seed=ctx.seed)
+             if not (spike_start <= t < spike_start + spike_len)]
+    times += [spike_start + t for t in spike.arrivals(spike_len,
+                                                      seed=ctx.seed + 1)]
+    return TraceWorkload(times=tuple(sorted(times)), name="flash-overload")
+
+
+@scenario("node-failure",
+          "steady Poisson at 60% of B=32 capacity; under a multi-node "
+          "fabric, node 1 is killed at 40% of the run (fabric event) — "
+          "tests failover without duplicate delivery")
+def _node_failure(ctx: ScenarioContext) -> Workload:
+    return PoissonWorkload(rate_rps=0.6 * ctx.capacity_rps(32))
+
+
+# --------------------------------------------------------------------- #
+# fabric events: scheduled fleet actions attached to scenarios
+#
+# A scenario's workload describes *traffic*; some fabric behaviours are
+# instead triggered by *operator/fault events* (a node dying, a planned
+# drain).  Events are registered per scenario name and applied by the
+# multi-node benchmark runner; single-node runs ignore them.
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class FabricEvent:
+    at_frac: float      # event time as a fraction of the run duration
+    action: str         # "fail" | "drain"
+    node: int           # node index within the fabric
+
+
+FABRIC_EVENTS: Dict[str, Tuple[FabricEvent, ...]] = {
+    "node-failure": (FabricEvent(at_frac=0.4, action="fail", node=1),),
+}
+
+
+def fabric_events(scenario_name: str) -> Tuple[FabricEvent, ...]:
+    """Scheduled fleet events for a scenario (empty for most)."""
+    return FABRIC_EVENTS.get(scenario_name, ())
+
+
 # --------------------------------------------------------------------- #
 # multi-model (mixed-traffic) scenarios
 #
@@ -290,8 +348,8 @@ def _mixed_burst(mctx: MultiModelScenarioContext) -> Dict[str, Workload]:
 
 
 __all__ = [
-    "MultiModelScenario", "MultiModelScenarioContext", "Scenario",
-    "ScenarioContext", "get_mm_scenario", "get_scenario",
-    "list_mm_scenarios", "list_scenarios", "mm_scenario",
+    "FabricEvent", "MultiModelScenario", "MultiModelScenarioContext",
+    "Scenario", "ScenarioContext", "fabric_events", "get_mm_scenario",
+    "get_scenario", "list_mm_scenarios", "list_scenarios", "mm_scenario",
     "register_mm_scenario", "register_scenario", "scenario",
 ]

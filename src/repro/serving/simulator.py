@@ -71,10 +71,30 @@ class Response:
     instance_id: int
     redispatched: bool = False
     model_id: str = DEFAULT_MODEL
+    # set by the cluster fabric when the response crossed a router:
+    # which node served the request (None on single-node paths)
+    node_id: Optional[str] = None
 
     @property
     def latency(self) -> float:
         return self.completion - self.request.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class Shed:
+    """Terminal state for a request the serving fabric refused.
+
+    A shed request will never produce a :class:`Response`: it was turned
+    away at admission (token bucket empty), by queue-depth overload
+    control, or because no routable node existed.  Metrics count sheds
+    against offered load — goodput and SLO attainment treat them as
+    violations — while latency percentiles remain admitted-only.
+    """
+
+    request: Request
+    time: float                     # when the fabric refused it
+    node_id: Optional[str] = None   # node that refused (None: no node)
+    reason: str = "admission"       # "admission" | "queue" | "no-node"
 
 
 class ArrivalProcess:

@@ -73,6 +73,18 @@ def even_shares(total_units: int, tenant_ids: Sequence[str]
 class MultiModelServer:
     """Several model tenants sharing one pod's units, re-split live.
 
+    Build it from one :class:`TenantSpec` per model and submit requests
+    tagged with a ``model_id``; the server routes each to its tenant's
+    own controller and re-plans the unit split on a periodic tick:
+
+    >>> server = MultiModelServer(loop, total_units=16, tenants=[
+    ...     TenantSpec("resnet50", profile_r, TabulatedBackend(profile_r)),
+    ...     TenantSpec("bert", profile_b, TabulatedBackend(profile_b))])
+    >>> server.submit(Request(0, 0.0, model_id="bert"))
+
+    Aggregated state: ``responses`` (all tenants, delivery order),
+    ``queue_depth`` (fleet queue sampler hook), ``shares()`` (current
+    per-model unit split), ``plan_log`` (every executed re-plan).
     ``adaptive=False`` freezes the initial even split and never re-plans
     — the static even-split baseline the benchmark compares against.
     """

@@ -12,7 +12,8 @@ from repro.serving.scenarios import (ScenarioContext, get_scenario,
 from repro.serving.workloads import PoissonWorkload, TraceWorkload
 
 EXPECTED_SCENARIOS = {"steady-poisson", "bursty", "choppy", "diurnal",
-                      "step-up", "step-down", "ramp", "flash-crowd"}
+                      "step-up", "step-down", "ramp", "flash-crowd",
+                      "overload", "flash-overload", "node-failure"}
 
 
 def small_ctx(duration=12.0, units=8, seed=0):
@@ -122,6 +123,9 @@ def test_cli_writes_json_report(tmp_path):
         "--out", str(out)])
     assert rc == 0
     report = json.loads(out.read_text())
+    # every report leads with the schema version so downstream consumers
+    # detect format changes instead of silently misparsing (ISSUE 5)
+    assert report["schema_version"] == bench_serving.SCHEMA_VERSION
     assert report["model"] == "resnet50"
     sc = report["scenarios"]["step-up"]
     for policy in ("static", "packrat"):
@@ -159,6 +163,7 @@ def test_cli_real_execution_smoke(tmp_path):
         "--real-rate-cap", "150", "--out", str(out)])
     assert rc == 0
     report = json.loads(out.read_text())
+    assert report["schema_version"] == bench_serving.SCHEMA_VERSION
     assert report["execution"] == "real"
     sc = report["scenarios"]["steady-poisson"]
     assert sc["execution"] == "real" and sc["real_model"] == "mlp-tiny"
@@ -301,6 +306,7 @@ def test_cli_multimodel_writes_report(tmp_path):
         "--max-batch", "64", "--dispatch", "sync", "--out", str(out)])
     assert rc == 0
     report = json.loads(out.read_text())
+    assert report["schema_version"] == bench_serving.SCHEMA_VERSION
     assert report["models"] == ["resnet50", "bert"]
     sc = report["scenarios"]["mixed-steady"]
     for policy in ("static", "packrat"):

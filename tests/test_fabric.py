@@ -1,0 +1,353 @@
+"""Cluster fabric tests (ISSUE 5): routing, overload control,
+drain/failover exactly-once, and the --nodes benchmark axis."""
+
+import json
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.paper_profiles import RESNET50
+from repro.launch import bench_serving
+from repro.serving import (ClusterRouter, EventLoop, FabricConfig,
+                           FabricNodeSpec, MetricsCollector, Request,
+                           TabulatedBackend, TokenBucket)
+from repro.serving.scenarios import fabric_events, get_scenario
+
+
+UNITS = 8
+PROFILE = RESNET50.profile(UNITS, 64)
+
+
+def make_router(loop, n_nodes=3, *, slo=None, config=None,
+                initial_batch=8):
+    specs = [FabricNodeSpec(optimizer=PackratOptimizer(PROFILE),
+                            backend=TabulatedBackend(PROFILE))
+             for _ in range(n_nodes)]
+    return ClusterRouter(loop, units_per_node=UNITS, specs=specs,
+                         initial_batch=initial_batch, slo_deadline=slo,
+                         config=config)
+
+
+def node_capacity(batch=64):
+    return PackratOptimizer(PROFILE).solve(UNITS, batch).throughput
+
+
+def offer(loop, router, rate, duration, *, metrics=None, start=0.0):
+    """Deterministic evenly-spaced arrivals at ``rate`` req/s."""
+    n = int(rate * duration)
+    for i in range(n):
+        t = start + (i + 0.5) / rate
+        if metrics is not None:
+            metrics.on_request(Request(i, t))
+        loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
+    return n
+
+
+def assert_exactly_once(router):
+    ids = [r.request.id for r in router.responses]
+    assert len(ids) == len(set(ids)), "duplicate delivery"
+    shed_ids = {s.request.id for s in router.sheds}
+    assert not (shed_ids & set(ids)), "shed request also delivered"
+
+
+# --------------------------------------------------------------------- #
+# token bucket
+# --------------------------------------------------------------------- #
+def test_token_bucket_rate_and_burst():
+    tb = TokenBucket(rate_rps=10.0, burst=5.0)
+    # burst drains immediately...
+    assert sum(tb.take(0.0) for _ in range(10)) == 5
+    # ...then refills at the configured rate
+    assert not tb.take(0.05)          # only 0.5 tokens accrued
+    assert tb.take(0.11)              # > 1 token since the last take
+    # a long idle period caps at burst, not unbounded credit
+    tb2 = TokenBucket(rate_rps=10.0, burst=5.0)
+    for _ in range(5):
+        tb2.take(0.0)
+    assert sum(tb2.take(100.0) for _ in range(10)) == 5
+
+
+def test_token_bucket_disabled_when_rate_nonpositive():
+    tb = TokenBucket(rate_rps=0.0, burst=1.0)
+    assert all(tb.take(0.0) for _ in range(100))
+
+
+# --------------------------------------------------------------------- #
+# routing
+# --------------------------------------------------------------------- #
+def test_p2c_routing_spreads_load_and_is_deterministic():
+    def run():
+        loop = EventLoop()
+        router = make_router(loop, 3)
+        offer(loop, router, rate=0.8 * node_capacity(32) * 3, duration=8.0)
+        loop.run_until(30.0)
+        return router
+
+    a, b = run(), run()
+    routed_a = [n.routed for n in a.nodes]
+    assert all(r > 0 for r in routed_a), "a node never received work"
+    assert routed_a == [n.routed for n in b.nodes]
+    assert ([r.request.id for r in a.responses]
+            == [r.request.id for r in b.responses])
+    assert_exactly_once(a)
+
+
+def test_router_requires_nodes_and_unique_ids():
+    with pytest.raises(ValueError, match="at least one node"):
+        ClusterRouter(EventLoop(), units_per_node=UNITS, specs=[],
+                      initial_batch=8)
+    specs = [FabricNodeSpec(optimizer=PackratOptimizer(PROFILE),
+                            backend=TabulatedBackend(PROFILE),
+                            node_id="dup") for _ in range(2)]
+    with pytest.raises(ValueError, match="duplicate node_id"):
+        ClusterRouter(EventLoop(), units_per_node=UNITS, specs=specs,
+                      initial_batch=8)
+
+
+# --------------------------------------------------------------------- #
+# overload control: sheds are terminal and never pollute percentiles
+# --------------------------------------------------------------------- #
+def overloaded_run(duration=10.0):
+    loop = EventLoop()
+    slo = 4.0 * PackratOptimizer(PROFILE).solve(UNITS, 8).latency
+    router = make_router(loop, 2, slo=slo)
+    metrics = MetricsCollector(slo_deadline=slo)
+    metrics.attach_fabric(router, until=duration + 30.0)
+    offered = offer(loop, router, rate=3.0 * node_capacity() * 2,
+                    duration=duration, metrics=metrics)
+    loop.run_until(duration + 30.0)
+    return router, metrics, offered, slo
+
+
+def test_sheds_never_double_counted_in_latency_percentiles():
+    router, metrics, offered, slo = overloaded_run()
+    assert router.sheds, "overload produced no sheds"
+    assert_exactly_once(router)
+    rep = metrics.report(duration=10.0)
+    # percentiles are admitted-only: every latency sample comes from a
+    # delivered response, and delivered + shed + incomplete = offered
+    assert rep["completed"] == len(router.responses)
+    assert len(metrics.latencies) == rep["completed"]
+    assert rep["shed"] == len(router.sheds)
+    assert rep["offered"] == offered
+    assert (rep["completed"] + rep["shed"] + rep["incomplete"]
+            == rep["offered"])
+    assert rep["admitted"] == rep["offered"] - rep["shed"]
+    assert 0.0 < rep["shed_rate"] < 1.0
+    # sheds count against goodput/attainment (honest overload metrics)
+    assert rep["slo_attainment"] < 1.0
+    # admitted percentiles stay bounded because shedding bounds queues
+    assert rep["latency_ms"]["p95"] is not None
+
+
+def test_degrade_engages_before_queue_sheds():
+    router, metrics, _, _ = overloaded_run()
+    enters = [t for t, _, ev in router.degrade_log if ev == "enter"]
+    assert enters, "overload never engaged degrade mode"
+    queue_sheds = [s.time for s in router.sheds if s.reason == "queue"]
+    if queue_sheds:
+        assert min(enters) <= min(queue_sheds), \
+            "queue shedding started before batch floors were degraded"
+    # degraded nodes pin their estimator to the degrade batch
+    for _, node_id, ev in router.degrade_log:
+        node = next(n for n in router.nodes if n.node_id == node_id)
+        if ev == "enter":
+            assert node.b_deg >= 1
+
+
+def test_degrade_mode_exits_after_overload_clears():
+    loop = EventLoop()
+    slo = 4.0 * PackratOptimizer(PROFILE).solve(UNITS, 8).latency
+    router = make_router(loop, 2, slo=slo)
+    # 5 s of 3x overload, then 15 s of near-idle traffic
+    offer(loop, router, rate=3.0 * node_capacity() * 2, duration=5.0)
+    n0 = int(3.0 * node_capacity() * 2 * 5.0)
+    for k in range(10):
+        t = 6.0 + k * 1.0
+        loop.at(t, (lambda i=n0 + k, t=t: router.submit(Request(i, t))))
+    loop.run_until(60.0)
+    events = [ev for _, _, ev in router.degrade_log]
+    assert "enter" in events and "exit" in events
+    assert not any(n.degraded for n in router.nodes)
+
+
+# --------------------------------------------------------------------- #
+# drain / failure: exactly-once across re-routing
+# --------------------------------------------------------------------- #
+def faulted_run(action, duration=10.0, dispatch="sync"):
+    loop = EventLoop()
+    cfg = FabricConfig()
+    cfg.controller.dispatch_policy = dispatch
+    router = make_router(loop, 3, config=cfg)
+    rate = 0.7 * node_capacity(32) * 3
+    offered = offer(loop, router, rate=rate, duration=duration)
+    # fire mid-run, while batches are in flight on every node
+    loop.at(0.45 * duration, lambda: action(router))
+    loop.run_until(duration + 30.0)
+    return router, offered
+
+
+@pytest.mark.parametrize("dispatch", ["sync", "continuous"])
+def test_node_failure_mid_batch_reroutes_without_duplicates(dispatch):
+    router, offered = faulted_run(lambda r: r.fail_node(1),
+                                  dispatch=dispatch)
+    assert_exactly_once(router)
+    dead = router.nodes[1]
+    assert dead.dead and dead.server.halted
+    assert not dead.pending, "failed node still holds undelivered ids"
+    # every admitted request was delivered by a surviving node
+    assert len(router.responses) + len(router.sheds) == offered
+    assert router.duplicates_suppressed == 0
+    # the dead node delivered nothing after the failure instant: its
+    # in-flight batches complete on failed workers, which never deliver
+    from_dead = [r for r in router.responses if r.node_id == "node1"]
+    assert from_dead, "node1 served nothing before the failure"
+    assert max(r.completion for r in from_dead) <= 4.5 + 1e-9
+    fleet = router.fleet_report(router.loop.now)
+    assert fleet["per_node"]["node1"]["dead"] is True
+
+
+@pytest.mark.parametrize("dispatch", ["sync", "continuous"])
+def test_drain_mid_batch_preserves_exactly_once(dispatch):
+    router, offered = faulted_run(lambda r: r.drain_node(0),
+                                  dispatch=dispatch)
+    assert_exactly_once(router)
+    drained = router.nodes[0]
+    assert drained.draining and not drained.dead
+    # in-flight work delivered from the draining node; undispatched
+    # work moved — nothing lost either way
+    assert len(router.responses) + len(router.sheds) == offered
+    assert not drained.pending
+    # after the drain point, no *new* requests were routed to node0:
+    # everything it delivered arrived before the drain
+    routed_after = [r for r in router.responses
+                    if r.node_id == "node0" and r.request.arrival > 4.5]
+    assert not routed_after
+
+
+def test_failed_node_excluded_from_routing():
+    loop = EventLoop()
+    router = make_router(loop, 2)
+    loop.at(1.0, lambda: router.fail_node(0))
+    rate = 0.5 * node_capacity(32)
+    n = int(rate * 10.0)
+    for i in range(n):
+        t = 2.0 + i / rate
+        loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
+    loop.run_until(60.0)
+    assert router.nodes[0].routed == 0
+    assert router.nodes[1].routed == len(router.responses)
+    assert_exactly_once(router)
+
+
+def test_all_nodes_dead_sheds_with_no_node_reason():
+    loop = EventLoop()
+    router = make_router(loop, 2)
+    router.fail_node(0)
+    router.fail_node(1)
+    router.submit(Request(0, 0.0))
+    assert not router.responses
+    assert [s.reason for s in router.sheds] == ["no-node"]
+
+
+# --------------------------------------------------------------------- #
+# benchmark axis (--nodes)
+# --------------------------------------------------------------------- #
+FAB_KW = dict(model=RESNET50, nodes=3, units_per_node=8, duration=10.0,
+              seed=0, initial_batch=4, max_batch=64, slo_factor=4.0,
+              reconfigure_timeout=2.0)
+
+
+def test_run_fabric_scenario_reports_all_rows_and_fleet():
+    result = bench_serving.run_fabric_scenario(
+        get_scenario("steady-poisson"), **FAB_KW)
+    assert result["policies"] == ["single_fat", "single_packrat", "fabric"]
+    for key in result["policies"]:
+        rep = result[key]
+        assert rep["latency_ms"]["p95"] is not None
+        assert "shed" in rep and "shed_rate" in rep
+    fab = result["fabric"]
+    assert set(fab["fleet"]["per_node"]) == {"node0", "node1", "node2"}
+    for row in fab["fleet"]["per_node"].values():
+        assert row["instances"], "missing per-instance breakdown"
+    # single-server rows carry no fleet/nodes sections
+    assert "fleet" not in result["single_fat"]
+    assert "nodes" not in result["single_fat"]
+
+
+def test_run_fabric_scenario_is_deterministic():
+    a = bench_serving.run_fabric_scenario(get_scenario("flash-overload"),
+                                          **FAB_KW)
+    b = bench_serving.run_fabric_scenario(get_scenario("flash-overload"),
+                                          **FAB_KW)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_node_failure_scenario_applies_fabric_event():
+    assert fabric_events("node-failure")
+    assert fabric_events("steady-poisson") == ()
+    result = bench_serving.run_fabric_scenario(
+        get_scenario("node-failure"), **FAB_KW)
+    fab = result["fabric"]
+    assert fab["fleet"]["events"] == [
+        {"t": pytest.approx(4.0), "action": "fail", "node": 1}]
+    assert fab["fleet"]["per_node"]["node1"]["dead"] is True
+    assert fab["fleet"]["duplicates_suppressed"] == 0
+    # nothing admitted was lost to the failure
+    assert fab["incomplete"] == 0
+
+
+def test_acceptance_fabric_beats_single_fat_node_under_flash_overload():
+    """ISSUE 5 acceptance: on the seeded flash-crowd overload trace the
+    3-node fabric with admission control keeps admitted-request p95
+    within the SLO with a bounded shed rate, while the single-fat-node
+    baseline on the identical trace violates it."""
+    result = bench_serving.run_fabric_scenario(
+        get_scenario("flash-overload"),
+        **dict(FAB_KW, duration=20.0, reconfigure_timeout=5.0))
+    slo_ms = result["slo_deadline_ms"]
+    fab, fat = result["fabric"], result["single_fat"]
+    assert fab["latency_ms"]["p95"] <= slo_ms
+    assert 0.0 < fab["shed_rate"] <= 0.6          # bounded, not panicked
+    assert fat["latency_ms"]["p95"] > slo_ms
+    assert fat["shed"] == 0                       # baseline never sheds
+    # admitted-only accounting stayed consistent
+    assert (fab["completed"] + fab["shed"] + fab["incomplete"]
+            == fab["offered"] == result["offered"])
+
+
+def test_cli_nodes_1_matches_single_node_path_byte_for_byte(tmp_path):
+    args = ["--scenario", "steady-poisson", "--model", "resnet50",
+            "--units", "8", "--duration", "8", "--initial-batch", "4",
+            "--max-batch", "64", "--dispatch", "sync"]
+    out_default = tmp_path / "default.json"
+    out_nodes1 = tmp_path / "nodes1.json"
+    assert bench_serving.main(args + ["--out", str(out_default)]) == 0
+    assert bench_serving.main(args + ["--nodes", "1",
+                                      "--out", str(out_nodes1)]) == 0
+    assert out_default.read_bytes() == out_nodes1.read_bytes()
+
+
+def test_cli_nodes_3_writes_fleet_report(tmp_path):
+    out = tmp_path / "fabric.json"
+    rc = bench_serving.main([
+        "--nodes", "3", "--units", "8", "--model", "resnet50",
+        "--scenario", "overload", "--duration", "8",
+        "--initial-batch", "4", "--max-batch", "64",
+        "--dispatch", "sync", "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["schema_version"] == bench_serving.SCHEMA_VERSION
+    assert report["nodes"] == 3 and report["total_units"] == 24
+    sc = report["scenarios"]["overload"]
+    assert sc["fabric"]["shed"] > 0               # sustained overload sheds
+    assert sc["fabric"]["fleet"]["nodes"] == 3
+
+
+def test_cli_nodes_rejects_incompatible_flags():
+    with pytest.raises(SystemExit):
+        bench_serving.main(["--nodes", "0"])
+    with pytest.raises(SystemExit):
+        bench_serving.main(["--nodes", "2", "--models", "resnet50,bert"])
+    with pytest.raises(SystemExit):
+        bench_serving.main(["--nodes", "2", "--execution", "real"])

@@ -260,3 +260,67 @@ def test_attach_to_live_server():
     assert m.offered == len(arrivals)
     assert sorted(m.latencies) == sorted(r.latency for r in server.responses)
     assert m.queue_timeline, "queue sampler never fired"
+
+
+# --------------------------------------------------------------------- #
+# shed accounting (ISSUE 5: fabric overload control)
+# --------------------------------------------------------------------- #
+def test_shed_counts_against_offered_but_not_percentiles():
+    from repro.serving import Shed
+    m = MetricsCollector(slo_deadline=0.050)
+    for i in range(100):
+        m.on_request(Request(i, 0.0))
+        if i < 80:
+            m.on_response(mk_response(i, (i + 1) * 1e-3))
+        else:
+            m.on_shed(Shed(request=Request(i, 0.0), time=1.0,
+                           node_id="node0", reason="admission"))
+    rep = m.report(duration=10.0)
+    assert rep["offered"] == 100
+    assert rep["completed"] == 80 and rep["shed"] == 20
+    assert rep["admitted"] == 80 and rep["incomplete"] == 0
+    assert rep["shed_rate"] == pytest.approx(0.2)
+    # percentiles are admitted-only: identical to an 80-sample run
+    assert rep["latency_ms"]["p95"] == pytest.approx(76.0)
+    assert rep["latency_ms"]["max"] == pytest.approx(80.0)
+    # sheds are SLO violations: 50 of 100 offered met the deadline
+    assert rep["within_slo"] == 50
+    assert rep["slo_attainment"] == pytest.approx(0.5)
+    assert rep["goodput_rps"] == pytest.approx(5.0)
+
+
+def test_shed_breakdowns_by_model_and_node():
+    from repro.serving import Shed
+
+    def node_resp(i, latency, node):
+        r = mk_response(i, latency)
+        r.node_id = node
+        return r
+
+    m = MetricsCollector()
+    for i in range(10):
+        m.on_request(Request(i, 0.0))
+        m.on_response(node_resp(i, 0.010, "node0" if i < 6 else "node1"))
+    m.on_request(Request(10, 0.0, model_id="m2"))
+    m.on_shed(Shed(request=Request(10, 0.0, model_id="m2"), time=0.5,
+                   node_id="node1", reason="queue"))
+    m.on_request(Request(11, 0.0))
+    m.on_shed(Shed(request=Request(11, 0.0), time=0.6, node_id=None,
+                   reason="no-node"))
+    rep = m.report(duration=1.0)
+    nodes = rep["nodes"]
+    assert nodes["node0"]["completed"] == 6 and nodes["node0"]["shed"] == 0
+    assert nodes["node1"]["completed"] == 4 and nodes["node1"]["shed"] == 1
+    assert nodes["unrouted"]["shed"] == 1
+    assert nodes["unrouted"]["latency_ms"]["p95"] is None
+    # per-model rows carry their shed counts; a shed-only model appears
+    assert rep["models"]["m2"]["shed"] == 1
+    assert rep["models"]["m2"]["completed"] == 0
+    assert rep["models"]["default"]["shed"] == 1
+
+
+def test_single_node_report_has_no_nodes_section():
+    m = hand_built_collector(slo=0.050)
+    rep = m.report(duration=10.0)
+    assert "nodes" not in rep
+    assert rep["shed"] == 0 and rep["admitted"] == rep["offered"]

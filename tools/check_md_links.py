@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo's documentation.
+
+Scans markdown files for inline links/images (``[text](target)``) and
+reference definitions (``[ref]: target``) and verifies that every
+*local* target exists relative to the file that references it.
+External links (http/https/mailto) are not fetched — CI must stay
+hermetic — and pure in-page anchors (``#section``) are skipped.
+Fragments on local targets (``FILE.md#section``) are checked against
+the target file's headings.
+
+Usage:
+    python tools/check_md_links.py README.md docs
+    python tools/check_md_links.py            # defaults to README.md docs/
+
+Exit status 1 if any link is broken, listing every offender.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+# [text](target "title") — target stops at whitespace or closing paren;
+# images ![alt](target) match the same pattern via the optional bang
+_INLINE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)<>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+# [ref]: target
+_REFDEF = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+<?(\S+?)>?(?:\s|$)", re.M)
+_FENCE = re.compile(r"^(```|~~~)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def strip_code_fences(text: str) -> str:
+    """Drop fenced code blocks — their brackets are code, not links."""
+    out: List[str] = []
+    in_fence = False
+    for line in text.splitlines():
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (close enough for our own docs)."""
+    slug = re.sub(r"[^\w\- ]", "", heading.lower())
+    return re.sub(r" ", "-", slug.strip())
+
+
+def anchors_of(path: Path) -> set:
+    try:
+        text = path.read_text(encoding="utf-8")
+    except OSError:
+        return set()
+    return {slugify(h) for h in _HEADING.findall(strip_code_fences(text))}
+
+
+def iter_md_files(args: Iterable[str]) -> List[Path]:
+    files: List[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix.lower() == ".md":
+            files.append(p)
+        else:
+            raise SystemExit(f"not a markdown file or directory: {a}")
+    return files
+
+
+def check_file(path: Path) -> List[Tuple[str, str]]:
+    """Return (target, problem) pairs for every broken link in one file."""
+    text = strip_code_fences(path.read_text(encoding="utf-8"))
+    targets = _INLINE.findall(text) + _REFDEF.findall(text)
+    broken: List[Tuple[str, str]] = []
+    for target in targets:
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        base, _, fragment = target.partition("#")
+        dest = (path.parent / base).resolve()
+        if not dest.exists():
+            broken.append((target, "missing file"))
+            continue
+        if fragment and dest.suffix.lower() == ".md":
+            if slugify(fragment) not in anchors_of(dest):
+                broken.append((target, f"missing anchor #{fragment}"))
+    return broken
+
+
+def main(argv: List[str]) -> int:
+    roots = argv or ["README.md", "docs"]
+    files = iter_md_files(roots)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    failures = 0
+    for f in files:
+        for target, problem in check_file(f):
+            print(f"{f}: broken link -> {target} ({problem})")
+            failures += 1
+    checked = len(files)
+    if failures:
+        print(f"[check_md_links] {failures} broken link(s) "
+              f"across {checked} file(s)", file=sys.stderr)
+        return 1
+    print(f"[check_md_links] OK: {checked} file(s), no broken local links",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
