@@ -1,0 +1,276 @@
+"""Serving-engine performance benchmark → ``BENCH_serving.json``.
+
+Times the two simulation cores — the event-at-a-time ``EventLoop``
+oracle and the vectorized fast path (``repro.serving.fastsim``) — on
+identical traces through the full Packrat controller, and emits a
+schema-versioned JSON report: wall-clock seconds and simulated
+requests/sec per scenario per engine, the fast/event speedup, and
+whether the two engines' metric reports were byte-identical.
+
+Rows:
+
+* registered scenarios at capacity-relative rates (the regime the
+  differential tests replay — tick/timeout-dominated, so the speedup is
+  modest);
+* ``edge-high-rate`` — a synthetic high-throughput profile at batch 256
+  (~20k req/s simulated), the arrival-dominated regime the vectorized
+  core exists for.  Full mode runs 10⁶ requests (the ≥ 10× acceptance
+  row); ``--quick`` runs 10⁵ for CI.
+
+Gate mode (``--check BASELINE``) compares a fresh run against the
+committed report with **machine normalization**: the fresh/committed
+ratio of the *event* engine's sim-rps estimates how much faster or
+slower this machine is than the one that produced the baseline, and the
+fast engine must stay within 20% of the baseline after that correction.
+An absolute wall-clock gate would flake on every runner-speed change;
+the normalized gate only fires when the fast path itself regresses.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serving_perf --out BENCH_serving.json
+    PYTHONPATH=src python -m benchmarks.serving_perf --quick \
+        --out fresh.json --check BENCH_serving.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core.knapsack import PackratOptimizer
+from repro.core.paper_profiles import PAPER_MODELS, ProfileModel
+from repro.launch.bench_serving import run_policy
+from repro.serving.scenarios import ScenarioContext, get_scenario
+from repro.serving.workloads import PoissonWorkload
+
+# bumped whenever a key in this file's report is added/renamed/removed
+BENCH_SCHEMA_VERSION = 1
+
+UNITS = 16
+MAX_BATCH = 256
+MODEL = PAPER_MODELS["inception_v3"]
+
+# synthetic high-throughput profile: tiny per-item cost, near-perfect
+# batching — pushes the simulation into the arrival-dominated regime
+# (thousands of arrivals per dispatch) where columnar processing pays
+EDGE = ProfileModel("edge_cnn", c0=6.0, c1=0.5, p=1.0, sigma=0.03,
+                    kappa=0.0)
+EDGE_BATCH = 512
+EDGE_MAX_BATCH = 1024
+EDGE_UTILIZATION = 0.85
+
+SCENARIOS_FULL = ("steady-poisson", "bursty", "diurnal", "overload")
+SCENARIOS_QUICK = ("steady-poisson", "bursty")
+SCENARIO_DURATION_FULL = 30.0
+SCENARIO_DURATION_QUICK = 10.0
+EDGE_REQUESTS_FULL = 1_000_000
+EDGE_REQUESTS_QUICK = 100_000
+
+# gate: machine-normalized fast-engine throughput may not regress more
+# than this fraction vs the committed baseline
+REGRESSION_TOLERANCE = 0.20
+# rows smaller than this finish in hundredths of a second, where
+# scheduler jitter alone exceeds the tolerance — the gate only fires on
+# rows big enough for sim-rps to be a stable measurement
+MIN_GATE_REQUESTS = 50_000
+
+
+def _timed_run(arrivals: List[float], *, model: ProfileModel,
+               duration: float, engine: str, initial_batch: int,
+               max_batch: int):
+    # collect before timing: otherwise the garbage left by the previous
+    # engine's run (the event path materializes millions of objects)
+    # taxes this run's allocations and skews the comparison
+    gc.collect()
+    t0 = time.perf_counter()
+    rep = run_policy("packrat", arrivals, model=model, units=UNITS,
+                     duration=duration, initial_batch=initial_batch,
+                     max_batch=max_batch, slo_deadline=1.0,
+                     reconfigure_timeout=5.0, dispatch="sync",
+                     engine=engine)
+    wall = time.perf_counter() - t0
+    del rep["engine"]            # the one intentional report difference
+    return wall, rep
+
+
+def _row(arrivals: List[float], *, model: ProfileModel, duration: float,
+         initial_batch: int, max_batch: int) -> Dict[str, object]:
+    engines: Dict[str, Dict[str, float]] = {}
+    reports = {}
+    for engine in ("event", "fast"):
+        wall, rep = _timed_run(arrivals, model=model, duration=duration,
+                               engine=engine, initial_batch=initial_batch,
+                               max_batch=max_batch)
+        engines[engine] = {"wall_s": round(wall, 4),
+                           "sim_rps": round(len(arrivals) / wall, 1)}
+        reports[engine] = rep
+    return {
+        "offered": len(arrivals),
+        "sim_duration_s": round(duration, 3),
+        "engines": engines,
+        "speedup": round(engines["event"]["wall_s"]
+                         / engines["fast"]["wall_s"], 2),
+        "reports_identical": reports["event"] == reports["fast"],
+    }
+
+
+def bench_scenario(name: str, duration: float) -> Dict[str, object]:
+    opt = PackratOptimizer(MODEL.profile(UNITS, MAX_BATCH))
+    ctx = ScenarioContext(threads=UNITS, optimizer=opt, duration=duration,
+                          seed=0, max_total_batch=UNITS * MAX_BATCH)
+    arrivals = get_scenario(name).build(ctx).arrivals(duration, seed=0)
+    return _row(arrivals, model=MODEL, duration=duration,
+                initial_batch=8, max_batch=MAX_BATCH)
+
+
+def bench_edge(n_target: int) -> Dict[str, object]:
+    profile = EDGE.profile(UNITS, EDGE_MAX_BATCH)
+    cfg = PackratOptimizer(profile).solve(UNITS, EDGE_BATCH)
+    rate = EDGE_UTILIZATION * EDGE_BATCH / cfg.latency
+    duration = n_target / rate
+    arrivals = PoissonWorkload(rate_rps=rate).arrivals(duration, seed=1)
+    return _row(arrivals, model=EDGE, duration=duration,
+                initial_batch=EDGE_BATCH, max_batch=EDGE_MAX_BATCH)
+
+
+def _profile_rows(names, duration: float, edge_requests: int,
+                  label: str) -> Dict[str, object]:
+    out: Dict[str, object] = {"scenarios": {}}
+    for name in names:
+        row = bench_scenario(name, duration)
+        out["scenarios"][name] = row
+        _log(label, name, row)
+    edge = bench_edge(edge_requests)
+    out["scenarios"]["edge-high-rate"] = edge
+    _log(label, "edge-high-rate", edge)
+    return out
+
+
+def build_report(*, quick: bool) -> Dict[str, object]:
+    """Always produce the ``quick`` profile (the size-matched rows the
+    CI gate compares — comparing a 10⁵-request run against a
+    10⁶-request baseline would fold heap-size effects into the machine
+    factor); the committed baseline additionally carries the ``full``
+    profile with the 10⁶-request acceptance row."""
+    report: Dict[str, object] = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "units": UNITS,
+        "profiles": {},
+    }
+    report["profiles"]["quick"] = _profile_rows(
+        SCENARIOS_QUICK, SCENARIO_DURATION_QUICK, EDGE_REQUESTS_QUICK,
+        "quick")
+    if not quick:
+        report["profiles"]["full"] = _profile_rows(
+            SCENARIOS_FULL, SCENARIO_DURATION_FULL, EDGE_REQUESTS_FULL,
+            "full")
+    return report
+
+
+def _log(label: str, name: str, row: Dict[str, object]) -> None:
+    eng = row["engines"]
+    print(f"[bench] {label}/{name:16s} offered={row['offered']:8d}  "
+          f"event={eng['event']['wall_s']:.2f}s "
+          f"({eng['event']['sim_rps']:,.0f}/s)  "
+          f"fast={eng['fast']['wall_s']:.2f}s "
+          f"({eng['fast']['sim_rps']:,.0f}/s)  "
+          f"speedup={row['speedup']:.1f}x  "
+          f"identical={row['reports_identical']}", file=sys.stderr)
+
+
+def check_regression(fresh: Dict[str, object], baseline: Dict[str, object]
+                     ) -> List[str]:
+    """Gate failures (empty = pass): per scenario of the size-matched
+    ``quick`` profile, the fast engine's machine-normalized sim-rps
+    must stay within ``REGRESSION_TOLERANCE`` of the committed
+    baseline, and both engines must still produce identical metric
+    reports."""
+    failures = []
+    if baseline.get("schema_version") != BENCH_SCHEMA_VERSION:
+        failures.append(
+            f"baseline schema_version {baseline.get('schema_version')} != "
+            f"{BENCH_SCHEMA_VERSION}; regenerate the baseline")
+        return failures
+    f_prof = fresh["profiles"].get("quick", {}).get("scenarios", {})
+    b_prof = baseline["profiles"].get("quick", {}).get("scenarios", {})
+    shared = set(f_prof) & set(b_prof)
+    if not shared:
+        failures.append("no quick-profile scenarios shared with baseline")
+    gated = 0
+    for name in sorted(shared):
+        f_row, b_row = f_prof[name], b_prof[name]
+        if not f_row["reports_identical"]:
+            failures.append(f"{name}: engine reports diverged — the fast "
+                            f"path is no longer byte-identical")
+        if f_row["offered"] < MIN_GATE_REQUESTS:
+            print(f"[bench] gate: skipping {name} "
+                  f"(offered {f_row['offered']} < {MIN_GATE_REQUESTS}, "
+                  f"too small for a stable sim-rps)", file=sys.stderr)
+            continue
+        gated += 1
+        machine = (f_row["engines"]["event"]["sim_rps"]
+                   / b_row["engines"]["event"]["sim_rps"])
+        floor = ((1.0 - REGRESSION_TOLERANCE) * machine
+                 * b_row["engines"]["fast"]["sim_rps"])
+        got = f_row["engines"]["fast"]["sim_rps"]
+        if got < floor:
+            failures.append(
+                f"{name}: fast engine {got:,.0f} sim-rps < floor "
+                f"{floor:,.0f} (baseline {b_row['engines']['fast']['sim_rps']:,.0f}"
+                f" × machine factor {machine:.2f} × "
+                f"{1.0 - REGRESSION_TOLERANCE:.2f})")
+    if shared and not gated:
+        failures.append("every shared scenario was below the gate's "
+                        "minimum size — nothing was actually checked")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Serving simulation-engine benchmark "
+                    "(BENCH_serving.json emitter + CI regression gate)")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced matrix for CI: fewer scenarios, "
+                         "10^5-request edge row")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here (default: stdout)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="compare against a committed BENCH_serving.json "
+                         "and exit non-zero on a machine-normalized "
+                         "fast-engine regression > "
+                         f"{REGRESSION_TOLERANCE:.0%}")
+    args = ap.parse_args(argv)
+
+    report = build_report(quick=args.quick)
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"[bench] report written to {args.out}", file=sys.stderr)
+    else:
+        print(text)
+
+    for label, prof in report["profiles"].items():
+        for name, row in prof["scenarios"].items():
+            if not row["reports_identical"]:
+                print(f"[bench] FAIL: {label}/{name} reports diverged "
+                      f"between engines", file=sys.stderr)
+                return 1
+
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+        failures = check_regression(report, baseline)
+        for msg in failures:
+            print(f"[bench] GATE FAIL: {msg}", file=sys.stderr)
+        if failures:
+            return 1
+        print(f"[bench] gate passed vs {args.check}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

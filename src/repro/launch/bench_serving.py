@@ -119,6 +119,7 @@ from ..serving.scenarios import (MultiModelScenario,
                                  get_mm_scenario,
                                  get_scenario, list_mm_scenarios,
                                  list_scenarios)
+from ..serving.fastsim import FastLoop, feed_single_model_trace
 from ..serving.workloads import TraceWorkload
 
 POLICIES = ("static", "packrat")
@@ -131,7 +132,20 @@ FABRIC_POLICIES = ("single_fat", "single_packrat", "fabric")
 # consumers detect format changes instead of silently misparsing.
 # v1: implicit (PR 1-4 reports, no version key).
 # v2: schema_version + shed accounting keys + the --nodes fabric axis.
-SCHEMA_VERSION = 2
+# v3: per-run "engine" key + the --execution fast vectorized core
+#     (byte-identical reports to --execution sim, only faster).
+SCHEMA_VERSION = 3
+
+# simulation engines for the virtual-clock paths: the event-at-a-time
+# oracle and the vectorized core (repro.serving.fastsim).  Reports are
+# byte-identical between the two (tests/test_fast_plane.py).
+ENGINES = ("event", "fast")
+
+
+def _sim_loop(engine: str):
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}")
+    return FastLoop() if engine == "fast" else EventLoop()
 
 
 def policy_key(policy: str, dispatch: str) -> str:
@@ -186,7 +200,8 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
                max_batch: int, slo_deadline: float,
                reconfigure_timeout: float,
                dispatch: str = "sync",
-               interference: bool = False) -> Dict[str, object]:
+               interference: bool = False,
+               engine: str = "event") -> Dict[str, object]:
     """One (policy, dispatch) combination over one fixed trace → metrics."""
     if policy == "static":
         opt = _static_optimizer(model, units, max_batch)
@@ -204,7 +219,7 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
         raise ValueError(f"unknown policy {policy!r}")
     ccfg.dispatch_policy = dispatch
 
-    loop = EventLoop()
+    loop = _sim_loop(engine)
     server = PackratServer(loop, total_units=units, optimizer=opt,
                            backend=_make_backend(
                                model.profile(units, max_batch),
@@ -214,14 +229,22 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
     drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
     metrics.attach(server, sample_interval=min(0.25, duration / 100.0),
                    until=duration + drain)
-    for i, t in enumerate(arrivals):
-        metrics.on_request(Request(i, t))
-        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    if engine == "fast":
+        # bulk feed: arrivals stream through the vectorized trace path
+        # (batch-sync dispatch absorbs them columnar; continuous falls
+        # back to exact single-arrival processing inside the FastLoop)
+        metrics.on_requests(len(arrivals))
+        feed_single_model_trace(server, arrivals)
+    else:
+        for i, t in enumerate(arrivals):
+            metrics.on_request(Request(i, t))
+            loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
     loop.run_until(duration + drain)
 
     rep = metrics.report(duration=duration)
     rep["dispatch"] = dispatch
     rep["interference"] = interference
+    rep["engine"] = engine
     _controller_report_fields(rep, server, loop.now)
     fallbacks = server.backend.fallback_report()
     if fallbacks["count"]:
@@ -379,7 +402,8 @@ def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
                  policies: tuple = POLICIES,
                  dispatches: Tuple[str, ...] = ("sync",),
                  interference: bool = False,
-                 slo_ms: Optional[float] = None) -> Dict[str, object]:
+                 slo_ms: Optional[float] = None,
+                 engine: str = "event") -> Dict[str, object]:
     """Every policy × dispatch combo on one (seeded, shared) trace."""
     opt = PackratOptimizer(model.profile(units, max_batch))
     # T instances at the largest profiled per-instance batch is the
@@ -412,7 +436,7 @@ def run_scenario(sc: Scenario, *, model: ProfileModel, units: int,
                 duration=duration, initial_batch=initial_batch,
                 max_batch=max_batch, slo_deadline=slo,
                 reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
-                interference=interference)
+                interference=interference, engine=engine)
     return out
 
 
@@ -436,7 +460,7 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
                       seed: int, initial_batch: int, max_batch: int,
                       slo_deadline: float, reconfigure_timeout: float,
                       dispatch: str = "sync", interference: bool = False,
-                      events=()) -> Dict[str, object]:
+                      events=(), engine: str = "event") -> Dict[str, object]:
     """One fabric run: N Packrat nodes behind a :class:`ClusterRouter`
     on one shared simulated plane, with per-node admission control and
     the scenario's fabric events (node failures/drains) applied."""
@@ -451,7 +475,7 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
         backend=_make_backend(profile, interference=interference,
                               units=units_per_node))
         for _ in range(nodes)]
-    loop = EventLoop()
+    loop = _sim_loop(engine)
     router = ClusterRouter(
         loop, units_per_node=units_per_node, specs=specs,
         initial_batch=max(1, min(initial_batch,
@@ -473,6 +497,7 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
     rep = metrics.report(duration=duration)
     rep["dispatch"] = dispatch
     rep["interference"] = interference
+    rep["engine"] = engine
     fleet = router.fleet_report(loop.now)
     fleet["events"] = [{"t": ev.at_frac * duration, "action": ev.action,
                         "node": ev.node} for ev in events]
@@ -493,7 +518,8 @@ def run_fabric_scenario(sc: Scenario, *, model: ProfileModel, nodes: int,
                         slo_factor: float, reconfigure_timeout: float,
                         dispatches: Tuple[str, ...] = ("sync",),
                         interference: bool = False,
-                        slo_ms: Optional[float] = None) -> Dict[str, object]:
+                        slo_ms: Optional[float] = None,
+                        engine: str = "event") -> Dict[str, object]:
     """The --nodes comparison on one identical seeded trace: a single
     fat server with the fleet's total units (``single_fat`` — static
     one-instance baseline; ``single_packrat`` — the adaptive policy,
@@ -539,19 +565,20 @@ def run_fabric_scenario(sc: Scenario, *, model: ProfileModel, nodes: int,
             duration=duration, initial_batch=initial_batch,
             max_batch=max_batch, slo_deadline=slo,
             reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
-            interference=interference)
+            interference=interference, engine=engine)
         out[policy_key("single_packrat", dispatch)] = run_policy(
             "packrat", arrivals, model=model, units=total,
             duration=duration, initial_batch=initial_batch,
             max_batch=max_batch, slo_deadline=slo,
             reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
-            interference=interference)
+            interference=interference, engine=engine)
         out[policy_key("fabric", dispatch)] = run_fabric_policy(
             arrivals, model=model, nodes=nodes,
             units_per_node=units_per_node, duration=duration, seed=seed,
             initial_batch=initial_batch, max_batch=max_batch,
             slo_deadline=slo, reconfigure_timeout=reconfigure_timeout,
-            dispatch=dispatch, interference=interference, events=events)
+            dispatch=dispatch, interference=interference, events=events,
+            engine=engine)
     return out
 
 
@@ -563,7 +590,8 @@ def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
                           duration: float, initial_batch: int,
                           max_batch: int, slo_by_model: Dict[str, float],
                           reconfigure_timeout: float, dispatch: str = "sync",
-                          interference: bool = False) -> Dict[str, object]:
+                          interference: bool = False,
+                          engine: str = "event") -> Dict[str, object]:
     """One (policy, dispatch) combination over fixed per-model traces."""
     tenant_ids = list(models)
     shares = even_shares(units, tenant_ids)
@@ -589,7 +617,7 @@ def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
         specs.append(TenantSpec(tid, profile, backend,
                                 initial_batch=batch, optimizer=opt))
 
-    loop = EventLoop()
+    loop = _sim_loop(engine)
     server = MultiModelServer(loop, total_units=units, tenants=specs,
                               config=ccfg, adaptive=(policy == "packrat"),
                               plan_interval=reconfigure_timeout)
@@ -610,6 +638,7 @@ def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
     rep = metrics.report(duration=duration)
     rep["dispatch"] = dispatch
     rep["interference"] = interference
+    rep["engine"] = engine
     rep["shares"] = server.shares()
     rep["plans"] = len(server.plan_log) - 1
     rep["plan_log"] = [
@@ -641,7 +670,8 @@ def run_mm_scenario(sc: MultiModelScenario, *,
                     policies: tuple = POLICIES,
                     dispatches: Tuple[str, ...] = ("sync",),
                     interference: bool = False,
-                    slo_ms: Optional[float] = None) -> Dict[str, object]:
+                    slo_ms: Optional[float] = None,
+                    engine: str = "event") -> Dict[str, object]:
     """Every policy × dispatch combo on identical per-model traces."""
     tenant_ids = list(models)
     shares = even_shares(units, tenant_ids)
@@ -690,7 +720,7 @@ def run_mm_scenario(sc: MultiModelScenario, *,
                 duration=duration, initial_batch=initial_batch,
                 max_batch=max_batch, slo_by_model=slo_by_model,
                 reconfigure_timeout=reconfigure_timeout, dispatch=dispatch,
-                interference=interference)
+                interference=interference, engine=engine)
     return out
 
 
@@ -790,10 +820,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                     choices=("sync", "continuous", "both"),
                     help="dispatch policy axis: paper-faithful batch-sync, "
                          "continuous per-instance, or both")
-    ap.add_argument("--execution", default="sim", choices=("sim", "real"),
+    ap.add_argument("--execution", default="sim",
+                    choices=("sim", "fast", "real"),
                     help="execution plane: deterministic virtual-clock "
-                         "simulation, or real wall-clock jitted JAX "
-                         "execution of a micro model")
+                         "simulation (event-at-a-time), its vectorized "
+                         "core ('fast' — byte-identical reports, large "
+                         "traces finish orders of magnitude sooner), or "
+                         "real wall-clock jitted JAX execution of a "
+                         "micro model")
     ap.add_argument("--real-model", default="mlp-tiny",
                     help="micro model for --execution real "
                          "(repro.models.micro registry)")
@@ -832,6 +866,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     dispatches = (DISPATCHES if args.dispatch == "both"
                   else (args.dispatch,))
     keys = [policy_key(p, d) for p in POLICIES for d in dispatches]
+    engine = "fast" if args.execution == "fast" else "event"
 
     if args.execution == "real":
         if args.models:
@@ -918,6 +953,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             "slo_factor": args.slo_factor,
             "slo_ms": args.slo_ms,
             "interference": args.interference,
+            "engine": engine,
             "dispatches": list(dispatches),
             "policies": keys,
             "scenarios": {},
@@ -965,6 +1001,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             "slo_factor": args.slo_factor,
             "slo_ms": args.slo_ms,
             "interference": args.interference,
+            "engine": engine,
             "dispatches": list(dispatches),
             "policies": keys,
             "scenarios": {},
@@ -1004,6 +1041,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         "slo_factor": args.slo_factor,
         "slo_ms": args.slo_ms,
         "interference": args.interference,
+        "engine": engine,
         "dispatches": list(dispatches),
         "policies": keys,
         "scenarios": {},

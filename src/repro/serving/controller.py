@@ -107,10 +107,17 @@ class ModelTenant:
             on_swap=self._on_swap)
         self.apc.start(first, now=self.plane.now)
         workers = self._spawn_workers(first)
-        self.dispatcher = Dispatcher(self.plane, first, workers,
-                                     self._on_response, self.ccfg.dispatcher,
-                                     policy=make_policy(self.ccfg.dispatch_policy),
-                                     model_id=model_id, peer_live=peer_live)
+        self.dispatcher = self.plane.make_dispatcher(
+            first, workers, self._on_response, self.ccfg.dispatcher,
+            policy=make_policy(self.ccfg.dispatch_policy),
+            model_id=model_id, peer_live=peer_live)
+        # a block-capable dispatcher (fast plane) delivers completions as
+        # per-sub-batch blocks; adopt its block log as the response sink.
+        # Callers that installed their own per-response hook (the cluster
+        # fabric, the multi-model server) keep the exact per-item path.
+        attach_block_log = getattr(self.dispatcher, "attach_block_log", None)
+        if attach_block_log is not None and self._extra_on_response is None:
+            self.responses = attach_block_log()
         self.calibrator = calibrator
         self.calibration_refreshes = 0
         if calibrator is not None:

@@ -1,0 +1,702 @@
+"""Vectorized simulation core: the batched-event fast path.
+
+The legacy :class:`~repro.serving.simulator.EventLoop` pipeline spends
+~40 µs of Python per request — one heap event per arrival, one
+:class:`Request` object per enqueue, one :class:`Response` object plus
+several dict/set operations per delivery.  At fleet scale (10⁶–10⁷
+requests) that is minutes of pure interpreter overhead for a run whose
+*decisions* (dispatches, reconfigurations, ticks) number only in the
+thousands.
+
+This module rebuilds the hot paths on numpy arrays while keeping every
+decision point byte-identical to the event-loop oracle:
+
+* :class:`FastLoop` — an :class:`EventLoop` that can carry one sorted
+  arrival *trace* as an array.  ``add_trace`` reserves a contiguous
+  sequence-number block (one per arrival — exactly what the legacy
+  driver consumed by pre-scheduling each arrival with ``at()``), and
+  ``run_until`` merges the heap against the trace cursor by exact
+  ``(time, seq)`` order, so ties between arrivals and timers resolve
+  the same way they always did.
+* :class:`ColumnQueue` — the dispatcher's central queue as id/arrival
+  columns with deque-compatible access for the slow paths.
+* :class:`FastSyncDispatcher` / :class:`FastBatchSyncPolicy` — the
+  batch-synchronous engine operating on array slices.  Arrivals that
+  are provably unobservable (they neither arm a timer nor unblock a
+  dispatch — see :meth:`FastSyncDispatcher.absorption_capacity`) are
+  absorbed in bulk; every arrival that *could* change behaviour is
+  processed one-at-a-time through the unmodified policy code.  Worker
+  failure drops the affected flight back onto the inherited legacy
+  per-id bookkeeping (watchdogs, redispatch, retirement), so the fault
+  paths are literally the same code as the oracle.
+* :class:`ResponseBlock` / :class:`ResponseLog` — completions delivered
+  as one record per sub-batch instead of one object per request, with
+  lazy materialization for consumers that want ``Response`` objects.
+* :class:`FastPlane` — a :class:`~repro.serving.plane.SimulatedPlane`
+  over a :class:`FastLoop` whose ``make_dispatcher`` hook picks the
+  fast engine for batch-synchronous tenants (everything else gets the
+  legacy dispatcher and stays exact by construction).
+
+Equivalence is enforced by tests/test_fast_plane.py: every registered
+scenario × dispatch policy × node count replays through both cores and
+must produce byte-identical response timelines, and the pinned golden
+hashes must reproduce through :class:`FastPlane`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .dispatcher import Dispatcher, DispatcherConfig
+from .plane import SimulatedPlane
+from .policy import BatchSyncPolicy
+from .simulator import DEFAULT_MODEL, EventLoop, Request, Response
+
+
+# --------------------------------------------------------------------- #
+# block-structured responses
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ResponseBlock:
+    """One sub-batch worth of deliveries: the columnar dual of a list of
+    :class:`~repro.serving.simulator.Response` objects.  ``completion``,
+    ``batch_size``, ``instance_id`` and the flags are scalars because a
+    sub-batch completes as a unit; latencies are
+    ``completion - arrivals`` (float64 arithmetic is bit-identical to
+    the per-object Python subtraction)."""
+
+    ids: np.ndarray          # int64 request ids, delivery order
+    arrivals: np.ndarray     # float64 arrival times, same order
+    completion: float
+    batch_size: int
+    instance_id: int
+    redispatched: bool = False
+    model_id: str = DEFAULT_MODEL
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    def latencies(self) -> np.ndarray:
+        return self.completion - self.arrivals
+
+    def responses(self) -> List[Response]:
+        """Materialize the per-request objects (value-identical to what
+        the legacy dispatcher would have delivered)."""
+        comp, bs, wid = self.completion, self.batch_size, self.instance_id
+        rd, mid = self.redispatched, self.model_id
+        return [Response(request=Request(rid, arr, model_id=mid),
+                         completion=comp, batch_size=bs, instance_id=wid,
+                         redispatched=rd, model_id=mid)
+                for rid, arr in zip(self.ids.tolist(), self.arrivals.tolist())]
+
+    @classmethod
+    def from_response(cls, resp: Response) -> "ResponseBlock":
+        return cls(ids=np.array([resp.request.id], dtype=np.int64),
+                   arrivals=np.array([resp.request.arrival],
+                                     dtype=np.float64),
+                   completion=resp.completion, batch_size=resp.batch_size,
+                   instance_id=resp.instance_id,
+                   redispatched=resp.redispatched, model_id=resp.model_id)
+
+
+class ResponseLog:
+    """A list-compatible response sink that accepts whole blocks.
+
+    Drop-in for the ``ModelTenant.responses`` list: ``len``, iteration
+    and indexing all work, materializing :class:`Response` objects
+    lazily (and caching them), so test and report code written against
+    the legacy list runs unchanged on the fast path."""
+
+    def __init__(self) -> None:
+        self._entries: List[object] = []    # ResponseBlock | Response
+        self._flat: Optional[List[Response]] = None
+        self._n = 0
+
+    def append_block(self, block: ResponseBlock) -> None:
+        self._entries.append(block)
+        self._flat = None
+        self._n += len(block)
+
+    def append(self, resp: Response) -> None:
+        self._entries.append(resp)
+        self._flat = None
+        self._n += 1
+
+    def blocks(self) -> List[object]:
+        return list(self._entries)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _materialize(self) -> List[Response]:
+        if self._flat is None:
+            out: List[Response] = []
+            for e in self._entries:
+                if isinstance(e, ResponseBlock):
+                    out.extend(e.responses())
+                else:
+                    out.append(e)
+            self._flat = out
+        return self._flat
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def __getitem__(self, idx):
+        return self._materialize()[idx]
+
+
+# --------------------------------------------------------------------- #
+# columnar central queue
+# --------------------------------------------------------------------- #
+class ColumnQueue:
+    """The dispatcher's central queue as id/arrival columns.
+
+    Bulk appends and slice pops are O(1)-amortized array copies; the
+    deque surface (``len``/``append``/``popleft``/``clear``/iteration)
+    stays available for the exact-fidelity slow paths, materializing
+    :class:`Request` objects on demand (requests are frozen value
+    types, so reconstruction is identity-free)."""
+
+    __slots__ = ("model_id", "_ids", "_arr", "_head", "_tail", "_cap")
+
+    def __init__(self, model_id: str = DEFAULT_MODEL) -> None:
+        self.model_id = model_id
+        self._cap = 1024
+        self._ids = np.empty(self._cap, dtype=np.int64)
+        self._arr = np.empty(self._cap, dtype=np.float64)
+        self._head = 0
+        self._tail = 0
+
+    def __len__(self) -> int:
+        return self._tail - self._head
+
+    def __bool__(self) -> bool:
+        return self._tail > self._head
+
+    def _make_room(self, need: int) -> None:
+        n = self._tail - self._head
+        if n + need > self._cap:
+            while self._cap < n + need:
+                self._cap *= 2
+            ids = np.empty(self._cap, dtype=np.int64)
+            arr = np.empty(self._cap, dtype=np.float64)
+            ids[:n] = self._ids[self._head:self._tail]
+            arr[:n] = self._arr[self._head:self._tail]
+            self._ids, self._arr = ids, arr
+        else:   # compact the live region to the front
+            self._ids[:n] = self._ids[self._head:self._tail]
+            self._arr[:n] = self._arr[self._head:self._tail]
+        self._head, self._tail = 0, n
+
+    def append(self, req: Request) -> None:
+        if self._tail == self._cap:
+            self._make_room(1)
+        self._ids[self._tail] = req.id
+        self._arr[self._tail] = req.arrival
+        self._tail += 1
+
+    def extend(self, reqs) -> None:
+        for r in reqs:
+            self.append(r)
+
+    def extend_arrays(self, ids: np.ndarray, arrivals: np.ndarray) -> None:
+        k = len(ids)
+        if self._tail + k > self._cap:
+            self._make_room(k)
+        self._ids[self._tail:self._tail + k] = ids
+        self._arr[self._tail:self._tail + k] = arrivals
+        self._tail += k
+
+    def popleft(self) -> Request:
+        if self._head == self._tail:
+            raise IndexError("pop from an empty ColumnQueue")
+        i = self._head
+        self._head = i + 1
+        return Request(int(self._ids[i]), float(self._arr[i]),
+                       model_id=self.model_id)
+
+    def pop_slice(self, n: int):
+        """Remove and return the first ``n`` entries as (ids, arrivals)
+        array copies (callers own them past future queue growth)."""
+        i = self._head
+        j = i + n
+        self._head = j
+        return self._ids[i:j].copy(), self._arr[i:j].copy()
+
+    def clear(self) -> None:
+        self._head = self._tail = 0
+
+    def __iter__(self):
+        mid = self.model_id
+        ids = self._ids[self._head:self._tail].tolist()
+        arr = self._arr[self._head:self._tail].tolist()
+        return iter([Request(i, t, model_id=mid)
+                     for i, t in zip(ids, arr)])
+
+
+# --------------------------------------------------------------------- #
+# the fast event loop: heap merged with an array-backed arrival trace
+# --------------------------------------------------------------------- #
+class _Trace:
+    __slots__ = ("times", "n", "cursor", "base", "arrive_one", "absorber")
+
+
+class FastLoop(EventLoop):
+    """An :class:`EventLoop` that merges one sorted arrival trace with
+    the heap by exact ``(time, seq)`` order.
+
+    ``add_trace(times, arrive_one, absorber)`` reserves one sequence
+    number per arrival — the same numbers the legacy driver consumed by
+    pre-scheduling every arrival with ``at()`` — so same-timestamp
+    ordering against heap events is bit-identical to the oracle.  The
+    optional ``absorber(times, cur, bound) -> k`` callback may consume
+    ``k`` leading arrivals in bulk; it must only do so when those
+    arrivals are *unobservable* (no timer armed, no dispatch unblocked,
+    no clock read) — every arrival it declines is delivered through
+    ``arrive_one(index, time)`` with the clock advanced, exactly like a
+    popped heap event.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._trace: Optional[_Trace] = None
+
+    # ------------------------------------------------------------------ #
+    def add_trace(self, times, arrive_one: Callable[[int, float], None],
+                  absorber: Optional[Callable] = None) -> None:
+        if self._trace is not None and self._trace.cursor < self._trace.n:
+            raise ValueError("a trace is already pending on this loop")
+        arr = np.ascontiguousarray(times, dtype=np.float64)
+        if arr.size and np.any(np.diff(arr) < 0.0):
+            raise ValueError("trace times must be sorted")
+        tr = _Trace()
+        tr.times = arr
+        tr.n = int(arr.size)
+        tr.cursor = 0
+        tr.arrive_one = arrive_one
+        tr.absorber = absorber
+        # reserve seqs base..base+n-1 for the arrivals (one each, just
+        # as n legacy at() calls would have consumed); the next runtime
+        # event picks up at base+n
+        tr.base = next(self._seq)
+        self._seq = itertools.count(tr.base + tr.n)
+        self._trace = tr
+
+    @property
+    def pending_arrivals(self) -> int:
+        tr = self._trace
+        return 0 if tr is None else tr.n - tr.cursor
+
+    # ------------------------------------------------------------------ #
+    def run_until(self, t_end: float) -> None:
+        heap = self._heap
+        while True:
+            tr = self._trace
+            have_t = (tr is not None and tr.cursor < tr.n
+                      and tr.times[tr.cursor] <= t_end)
+            have_h = bool(heap) and heap[0][0] <= t_end
+            if not have_h and not have_t:
+                break
+            if have_t:
+                t0 = tr.times[tr.cursor]
+                s0 = tr.base + tr.cursor
+                if not have_h or (t0, s0) < (heap[0][0], heap[0][1]):
+                    if have_h:
+                        # bound the arrival window by the heap head in
+                        # merged (time, seq) order: heap events created
+                        # before the trace have lower seqs and win ties,
+                        # runtime events have higher seqs and lose them
+                        bound = heap[0][0]
+                        side = "right" if heap[0][1] > s0 else "left"
+                    else:
+                        bound, side = t_end, "right"
+                    self._consume_arrivals(tr, bound, side)
+                    continue
+            time, _, fn = heapq.heappop(heap)
+            if time > self.now:
+                self.now = time
+            fn()
+        if self.now < t_end:
+            self.now = t_end
+        if self._trace is not None and self._trace.cursor >= self._trace.n:
+            self._trace = None
+
+    def run(self) -> None:
+        while True:
+            tr = self._trace
+            have_t = tr is not None and tr.cursor < tr.n
+            if not self._heap and not have_t:
+                return
+            bound = self._heap[0][0] if self._heap else 0.0
+            if have_t:
+                bound = max(bound, float(tr.times[-1]))
+            self.run_until(bound)
+
+    # ------------------------------------------------------------------ #
+    def _consume_arrivals(self, tr: _Trace, bound: float, side: str) -> None:
+        k_bound = int(np.searchsorted(tr.times, bound, side=side))
+        heap = self._heap
+        while tr.cursor < k_bound:
+            k = 0
+            if tr.absorber is not None:
+                k = tr.absorber(tr.times, tr.cursor, k_bound)
+            if k > 0:
+                # absorbed arrivals are unobservable: the clock need not
+                # advance — the next processed event max()es past them
+                tr.cursor += k
+                continue
+            i = tr.cursor
+            t = float(tr.times[i])
+            if t > self.now:
+                self.now = t
+            tr.cursor = i + 1
+            tr.arrive_one(i, t)
+            # the handler may have scheduled events inside the window;
+            # fall back to the merge loop to re-establish ordering
+            return
+
+
+# --------------------------------------------------------------------- #
+# the fast batch-synchronous engine
+# --------------------------------------------------------------------- #
+class _Flight:
+    """One in-flight sub-batch on the fast path.  A flight that
+    completes on a live worker delivers all its ids as a block and its
+    watchdog is a no-op; a flight whose worker died is *chained* — its
+    ids are registered in the inherited legacy per-id bookkeeping and
+    every subsequent event (watchdog, redispatch, retirement) runs the
+    unmodified oracle code."""
+
+    __slots__ = ("ids", "arrivals", "worker", "threads", "redispatch",
+                 "deadline", "chained")
+
+    def __init__(self, ids, arrivals, worker, threads, redispatch):
+        self.ids = ids
+        self.arrivals = arrivals
+        self.worker = worker
+        self.threads = threads
+        self.redispatch = redispatch
+        self.deadline = 0.0
+        self.chained = False
+
+    def materialize(self, model_id: str) -> List[Request]:
+        return [Request(i, t, model_id=model_id)
+                for i, t in zip(self.ids.tolist(), self.arrivals.tolist())]
+
+
+class FastBatchSyncPolicy(BatchSyncPolicy):
+    """The batch-synchronous policy dispatching array slices.
+
+    Decision logic (idle barrier, partial-batch timeout, wake-ups,
+    queue-highwater sampling) is inherited unchanged; only the act of
+    popping an aggregate batch and partitioning it per ⟨i,t,b⟩ moves to
+    slices, feeding :meth:`FastSyncDispatcher._submit_block`."""
+
+    def _try_dispatch(self, force_partial: bool = False) -> None:
+        d = self.d
+        queue = d.queue
+        while queue:
+            live = d._live()
+            if not live:
+                self._wakeup_at(d.loop.now + d.dcfg.batch_timeout)
+                return
+            if len(queue) < d.batch_size and not force_partial:
+                return
+            busy = [w for w in live if not w.is_idle(d.loop.now)]
+            if busy:
+                self._wakeup_at(min(w.busy_until for w in busy))
+                return
+            d._queue_highwater = max(d._queue_highwater, len(queue))
+            n = min(len(queue), d.batch_size)
+            ids, arrs = queue.pop_slice(n)
+            self._partition_and_submit_arrays(ids, arrs)
+            d.batches_dispatched += 1
+            force_partial = False
+
+    def _partition_and_submit_arrays(self, ids: np.ndarray,
+                                     arrs: np.ndarray) -> None:
+        d = self.d
+        n = len(ids)
+        cursor = 0
+        for group in d.config.groups:
+            for _ in range(group.i):
+                if cursor >= n:
+                    return
+                end = cursor + group.b
+                d._submit_block(ids[cursor:end], arrs[cursor:end],
+                                group.t, 0)
+                cursor = end
+        while cursor < n:
+            remaining = n - cursor
+            fits = [g for g in d.config.groups if g.b >= remaining]
+            group = (min(fits, key=lambda g: g.b) if fits
+                     else max(d.config.groups, key=lambda g: g.b))
+            end = cursor + group.b
+            d._submit_block(ids[cursor:end], arrs[cursor:end], group.t, 0)
+            cursor = end
+
+
+class FastSyncDispatcher(Dispatcher):
+    """The :class:`~repro.serving.dispatcher.Dispatcher` with columnar
+    queueing, flight-based execution and block delivery.
+
+    The external surface (``on_request``/``set_config``/``take_signal``
+    /``queue_depth``/``reclaim_undispatched``/counters) is inherited, so
+    the controller, tenancy plane and cluster fabric run unchanged.
+    Failure paths are the inherited legacy machinery: a flight whose
+    worker died converts to per-id bookkeeping and redispatches through
+    the unmodified ``_submit``/``_execute``/``_retire`` chain.
+    """
+
+    supports_blocks = True
+
+    def __init__(self, loop, config, instances,
+                 on_response: Callable[[Response], None],
+                 dcfg: Optional[DispatcherConfig] = None,
+                 policy=None, model_id: str = DEFAULT_MODEL,
+                 peer_live=None) -> None:
+        self.on_response_block = None
+        if policy is None:
+            policy = FastBatchSyncPolicy()
+        if not isinstance(policy, FastBatchSyncPolicy):
+            raise TypeError("FastSyncDispatcher requires a "
+                            "FastBatchSyncPolicy (other policies use the "
+                            "legacy Dispatcher)")
+        super().__init__(loop, config, instances, on_response, dcfg,
+                         policy=policy, model_id=model_id,
+                         peer_live=peer_live)
+        # the deque installed by the base constructor is empty at this
+        # point (set_config dispatches nothing from an empty queue)
+        self.queue = ColumnQueue(model_id)
+
+    # ------------------------------------------------------------------ #
+    # block delivery
+    # ------------------------------------------------------------------ #
+    def attach_block_log(self) -> ResponseLog:
+        """Switch this dispatcher to block delivery into a fresh
+        :class:`ResponseLog` (which is returned — the tenant adopts it
+        as its ``responses`` sink).  Per-request deliveries from the
+        legacy fault paths are wrapped into single-item blocks so every
+        consumer sees one stream."""
+        log = ResponseLog()
+        self.on_response_block = log.append_block
+        self.on_response = self._single_as_block
+        return log
+
+    def _single_as_block(self, resp: Response) -> None:
+        self.on_response_block(ResponseBlock.from_response(resp))
+
+    def _deliver_block(self, flight: _Flight) -> None:
+        worker = flight.worker
+        comp = self.loop.now
+        bs = len(flight.ids)
+        rd = flight.redispatch > 0
+        if self.on_response_block is not None:
+            self.on_response_block(ResponseBlock(
+                ids=flight.ids, arrivals=flight.arrivals, completion=comp,
+                batch_size=bs, instance_id=worker.id, redispatched=rd,
+                model_id=worker.model_id))
+            return
+        on_r = self.on_response
+        wid = worker.id
+        wmid = worker.model_id
+        mid = self.model_id
+        for rid, arr in zip(flight.ids.tolist(), flight.arrivals.tolist()):
+            on_r(Response(request=Request(rid, arr, model_id=mid),
+                          completion=comp, batch_size=bs, instance_id=wid,
+                          redispatched=rd, model_id=wmid))
+
+    # ------------------------------------------------------------------ #
+    # flight execution
+    # ------------------------------------------------------------------ #
+    def _submit_block(self, ids: np.ndarray, arrs: np.ndarray,
+                      threads: int, redispatch: int) -> None:
+        worker = self._pick_instance(threads)
+        if worker is None:
+            # defensive parity with the legacy deferral (unreachable from
+            # _try_dispatch, which checked for live workers): retry after
+            # a timeout with the same single scheduled event
+            self.loop.schedule(
+                self.dcfg.batch_timeout,
+                lambda: self._submit_block(ids, arrs, threads, redispatch))
+            return
+        self._execute_block(worker, ids, arrs, threads, redispatch)
+
+    def _execute_block(self, worker, ids: np.ndarray, arrs: np.ndarray,
+                       threads: int, redispatch: int) -> None:
+        n_live = len(self._live())
+        if self.peer_live is not None:
+            n_live += self.peer_live()
+        flight = _Flight(ids, arrs, worker, threads, redispatch)
+        n_items = len(ids)
+
+        def complete(observed):
+            if worker.failed:
+                # the worker died mid-flight: hand these ids to the
+                # legacy per-id machinery; the watchdog redispatches
+                self._chain_flight(flight)
+                return
+            if self.on_measure is not None:
+                self.on_measure(worker.threads, n_items, observed)
+            self._deliver_block(flight)
+            self.policy.on_batch_done(worker, n_items)
+
+        expected = self.plane.execute_batch(
+            worker, n_items, n_live_instances=n_live, on_complete=complete)
+        deadline = self.loop.now + expected * self.dcfg.straggler_factor
+        flight.deadline = deadline
+
+        def watchdog():
+            if not flight.chained:
+                return      # delivered in full; nothing to redispatch
+            sub = flight.materialize(self.model_id)
+            if redispatch < self.dcfg.max_redispatch:
+                missing = [r for r in sub
+                           if r.id not in self._done_requests
+                           and r.id in self._retire_at]
+                if missing:
+                    self.redispatches += 1
+                    self._submit(missing, threads, redispatch + 1)
+            self._retire(sub)
+
+        self.loop.at(deadline, watchdog)
+
+    def _chain_flight(self, flight: _Flight) -> None:
+        """Register a failed flight's ids in the legacy bookkeeping with
+        exactly the state the oracle would hold at this point: the
+        in-flight count decremented back to zero and the retire deadline
+        pinned at the flight's watchdog (the failed completion's own
+        retire pass is empty — on the virtual clock a completion always
+        precedes its watchdog deadline)."""
+        flight.chained = True
+        deadline = flight.deadline
+        ra = self._retire_at
+        for rid in flight.ids.tolist():
+            prev = ra.get(rid, 0.0)
+            ra[rid] = deadline if deadline > prev else prev
+
+    # ------------------------------------------------------------------ #
+    # bulk-arrival absorption
+    # ------------------------------------------------------------------ #
+    def absorption_capacity(self, times: np.ndarray, cur: int,
+                            k_bound: int) -> int:
+        """How many leading arrivals of ``times[cur:k_bound]`` are
+        unobservable and may be absorbed as pure queue appends.
+
+        An arrival is passive iff its ``on_arrival`` provably does
+        nothing beyond the append:
+
+        * queue below ``B - 1`` with the partial-batch timer already
+          armed → up to ``B - 1 - q`` arrivals stay under the dispatch
+          threshold;
+        * queue at/above ``B - 1`` → the arrival calls ``_try_dispatch``,
+          which is a no-op only while a wake-up is already armed and
+          either no live worker exists, or some live worker is still
+          busy at the arrival time (the instance-set barrier).  Worker
+          state only changes inside heap events, which bound the window,
+          so the busy test reduces to ``t < max(live busy_until)``.
+
+        Everything else returns 0 and the arrival runs through the
+        unmodified policy code.
+        """
+        pol = self.policy
+        q = len(self.queue)
+        B = self.batch_size
+        avail = k_bound - cur
+        if q + 1 < B:
+            if not pol._timeout_armed:
+                return 0
+            cap = B - 1 - q
+            return cap if cap < avail else avail
+        if not pol._wakeup_armed:
+            return 0
+        live = self._live()
+        if not live:
+            return avail
+        max_busy = max(w.busy_until for w in live)
+        if times[cur] >= max_busy:
+            return 0
+        return int(np.searchsorted(times[cur:k_bound], max_busy,
+                                   side="left"))
+
+
+# --------------------------------------------------------------------- #
+# the plane
+# --------------------------------------------------------------------- #
+class FastPlane(SimulatedPlane):
+    """A :class:`~repro.serving.plane.SimulatedPlane` over a
+    :class:`FastLoop` whose dispatcher factory selects the vectorized
+    engine for batch-synchronous tenants.  Continuous-dispatch tenants
+    get the legacy dispatcher (exact by construction, unaccelerated)."""
+
+    name = "fast"
+
+    def __init__(self, loop: Optional[FastLoop] = None) -> None:
+        if loop is None:
+            loop = FastLoop()
+        if not isinstance(loop, FastLoop):
+            raise TypeError(f"FastPlane needs a FastLoop, got {type(loop)}")
+        super().__init__(loop)
+
+    def make_dispatcher(self, config, instances, on_response, dcfg=None,
+                        policy=None, model_id: str = DEFAULT_MODEL,
+                        peer_live=None):
+        if policy is None or type(policy) is BatchSyncPolicy:
+            return FastSyncDispatcher(
+                self, config, instances, on_response, dcfg,
+                policy=FastBatchSyncPolicy(), model_id=model_id,
+                peer_live=peer_live)
+        return Dispatcher(self, config, instances, on_response, dcfg,
+                          policy=policy, model_id=model_id,
+                          peer_live=peer_live)
+
+
+# --------------------------------------------------------------------- #
+# trace feeding
+# --------------------------------------------------------------------- #
+def feed_single_model_trace(server, arrivals: Sequence[float], *,
+                            id_offset: int = 0) -> int:
+    """Attach a single-model arrival trace to a server on a
+    :class:`FastLoop` (ids ``offset..offset+n-1`` in trace order — what
+    the legacy driver's ``enumerate`` produced).
+
+    When the server's dispatcher is a :class:`FastSyncDispatcher`,
+    passive arrivals are absorbed straight into its columnar queue;
+    otherwise every arrival is delivered one-at-a-time (identical
+    behaviour, unaccelerated).  Returns the number of arrivals fed.
+    """
+    loop = server.plane.loop
+    if not isinstance(loop, FastLoop):
+        raise TypeError("feed_single_model_trace needs a FastLoop server")
+    times = np.ascontiguousarray(arrivals, dtype=np.float64)
+    n = int(times.size)
+    ids = np.arange(id_offset, id_offset + n, dtype=np.int64)
+    disp = server.dispatcher
+
+    absorber = None
+    if isinstance(disp, FastSyncDispatcher):
+        def absorber(ts, cur, k_bound, _disp=disp, _ids=ids):
+            k = _disp.absorption_capacity(ts, cur, k_bound)
+            if k:
+                _disp.queue.extend_arrays(_ids[cur:cur + k],
+                                          ts[cur:cur + k])
+            return k
+
+    def arrive_one(i, t, _submit=server.submit):
+        _submit(Request(id_offset + i, t))
+
+    loop.add_trace(times, arrive_one, absorber=absorber)
+    return n
+
+
+__all__ = [
+    "ColumnQueue", "FastBatchSyncPolicy", "FastLoop", "FastPlane",
+    "FastSyncDispatcher", "ResponseBlock", "ResponseLog",
+    "feed_single_model_trace",
+]

@@ -22,6 +22,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .simulator import EventLoop, Request, Response, Shed
 
 
@@ -35,6 +37,57 @@ def nearest_rank(sorted_values: Sequence[float], q: float) -> float:
     return sorted_values[rank - 1]
 
 
+# --------------------------------------------------------------------- #
+# vectorized aggregation kernels
+#
+# Column duals of the per-record reference implementations above/below.
+# Each is value-identical to its scalar counterpart on float64 inputs
+# (no re-summation or fused arithmetic that could round differently);
+# tests/test_metrics_properties.py checks them property-style against
+# the per-record reference on random streams.
+# --------------------------------------------------------------------- #
+def vector_percentiles(values: Sequence[float],
+                       qs: Sequence[float]) -> List[float]:
+    """Nearest-rank percentiles of an unsorted sample in one sort."""
+    arr = np.sort(np.asarray(values, dtype=np.float64))
+    n = int(arr.size)
+    out = []
+    for q in qs:
+        if not (0.0 < q <= 100.0):
+            raise ValueError(f"q must be in (0, 100], got {q}")
+        if n == 0:
+            out.append(float("nan"))
+        else:
+            rank = max(1, math.ceil(q / 100.0 * n))
+            out.append(float(arr[rank - 1]))
+    return out
+
+
+def vector_within_slo(values: Sequence[float],
+                      slo: Optional[float]) -> int:
+    """Count of samples at or under the deadline (all, if no SLO)."""
+    arr = np.asarray(values, dtype=np.float64)
+    if slo is None:
+        return int(arr.size)
+    return int(np.count_nonzero(arr <= slo))
+
+
+def vector_log2_ms_buckets(values_s: Sequence[float]) -> Dict[int, int]:
+    """{bucket index: count} of durations under the log₂-ms scheme.
+
+    ``frexp`` decomposes ms = m·2^e with m ∈ [0.5, 1), so the bucket
+    ``floor(log2(ms)) + 1`` is exactly ``e`` — integer arithmetic,
+    bit-identical to the scalar :func:`log2_ms_bucket` on every input.
+    """
+    ms = np.asarray(values_s, dtype=np.float64) * 1e3
+    if ms.size == 0:
+        return {}
+    _, exps = np.frexp(ms)
+    exps = np.where(ms < 1.0, 0, exps)
+    idx, counts = np.unique(exps, return_counts=True)
+    return {int(k): int(c) for k, c in zip(idx, counts)}
+
+
 @dataclasses.dataclass(frozen=True)
 class LatencyBucket:
     lo_ms: float          # inclusive
@@ -43,9 +96,18 @@ class LatencyBucket:
 
 
 def log2_ms_bucket(value_s: float) -> int:
-    """Bucket index of a duration (seconds) in the log₂-ms scheme."""
+    """Bucket index of a duration (seconds) in the log₂-ms scheme.
+
+    Computed via ``frexp`` (ms = m·2^e, m ∈ [0.5, 1) → bucket is exactly
+    ``e`` = floor(log₂ ms) + 1): pure integer extraction, so the scalar
+    and vectorized (:func:`vector_log2_ms_buckets`) paths agree on every
+    float, including values one ulp under a power of two where a rounded
+    ``log2`` could land in the wrong bucket.
+    """
     ms = value_s * 1e3
-    return 0 if ms < 1.0 else int(math.floor(math.log2(ms))) + 1
+    if ms < 1.0:
+        return 0
+    return math.frexp(ms)[1]
 
 
 def buckets_to_histogram(buckets: Dict[int, int]) -> List[LatencyBucket]:
@@ -148,6 +210,16 @@ class MetricsCollector:
         model = getattr(req, "model_id", "default")
         self.offered_by_model[model] = self.offered_by_model.get(model, 0) + 1
 
+    def on_requests(self, n: int, model_id: str = "default") -> None:
+        """Bulk-count offered load: equivalent to ``n`` calls of
+        :meth:`on_request` with the same model (offered counts are
+        order-independent), without materializing request objects."""
+        if n <= 0:
+            return
+        self.offered += n
+        self.offered_by_model[model_id] = (
+            self.offered_by_model.get(model_id, 0) + n)
+
     def on_response(self, resp: Response) -> None:
         self.latencies.append(resp.latency)
         self._batch_sizes.append(resp.batch_size)
@@ -158,6 +230,23 @@ class MetricsCollector:
             self.latencies_by_node.setdefault(node, []).append(resp.latency)
         if resp.redispatched:
             self.redispatched += 1
+
+    def on_response_block(self, block) -> None:
+        """Ingest one :class:`~repro.serving.fastsim.ResponseBlock`.
+
+        The latency column is ``completion - arrivals`` in float64 —
+        bit-identical to the per-object ``resp.latency`` subtraction —
+        so every derived quantity matches the per-record path exactly.
+        Blocks only occur on single-node fast paths, which never carry a
+        ``node_id``.
+        """
+        lats = (block.completion - block.arrivals).tolist()
+        n = len(lats)
+        self.latencies.extend(lats)
+        self._batch_sizes.extend([block.batch_size] * n)
+        self.latencies_by_model.setdefault(block.model_id, []).extend(lats)
+        if block.redispatched:
+            self.redispatched += n
 
     def on_shed(self, shed: Shed) -> None:
         """Record a terminal shed: counted against offered load (goodput
@@ -196,6 +285,18 @@ class MetricsCollector:
             dispatchers = [server.dispatcher]
             sampled = server.dispatcher
         for disp in dispatchers:
+            block_prev = getattr(disp, "on_response_block", None)
+            if block_prev is not None:
+                # block-delivering dispatcher: chain the block hook only
+                # (its per-item fault path feeds the same hook as
+                # single-item blocks, so chaining on_response too would
+                # double-count)
+                def chained_block(block, prev=block_prev) -> None:
+                    prev(block)
+                    self.on_response_block(block)
+
+                disp.on_response_block = chained_block
+                continue
             prev = disp.on_response
 
             def chained(resp: Response, prev=prev) -> None:
@@ -248,14 +349,11 @@ class MetricsCollector:
         return len(self.latencies)
 
     def percentile(self, q: float) -> float:
-        return nearest_rank(sorted(self.latencies), q)
+        return vector_percentiles(self.latencies, (q,))[0]
 
     def within_slo(self) -> int:
         if not self.slo_by_model:
-            if self.slo_deadline is None:
-                return self.completed
-            return sum(1 for lat in self.latencies
-                       if lat <= self.slo_deadline)
+            return vector_within_slo(self.latencies, self.slo_deadline)
         return sum(self.within_slo_model(m) for m in self.latencies_by_model)
 
     def within_slo_model(self, model_id: str) -> int:
@@ -289,8 +387,9 @@ class MetricsCollector:
         return sum(d for _, d in self.queue_timeline) / len(self.queue_timeline)
 
     def histogram(self) -> List[LatencyBucket]:
-        """Log₂ latency buckets from 1 ms up, covering every sample."""
-        return log2_ms_histogram(self.latencies)
+        """Log₂ latency buckets from 1 ms up, covering every sample
+        (vectorized; bucket-identical to :func:`log2_ms_histogram`)."""
+        return buckets_to_histogram(vector_log2_ms_buckets(self.latencies))
 
     # ------------------------------------------------------------------ #
     def models_report(self, *, duration: float) -> Dict[str, Dict[str, object]]:
@@ -408,4 +507,5 @@ class MetricsCollector:
 
 
 __all__ = ["LatencyBucket", "MetricsCollector", "instance_report",
-           "log2_ms_histogram", "nearest_rank"]
+           "log2_ms_histogram", "nearest_rank", "vector_log2_ms_buckets",
+           "vector_percentiles", "vector_within_slo"]

@@ -106,6 +106,24 @@ class ExecutionPlane:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # ------------------------------------------------------------------ #
+    # dispatcher factory
+    # ------------------------------------------------------------------ #
+    def make_dispatcher(self, config, instances, on_response, dcfg=None,
+                        policy=None, model_id: str = "default",
+                        peer_live=None):
+        """Build the dispatcher a tenant on this plane should run.
+
+        The default is the exact event-at-a-time
+        :class:`~repro.serving.dispatcher.Dispatcher`; planes with a
+        vectorized engine (``FastPlane``) override this to substitute
+        their accelerated equivalent where it is proven bit-identical.
+        """
+        from .dispatcher import Dispatcher
+        return Dispatcher(self, config, instances, on_response, dcfg,
+                          policy=policy, model_id=model_id,
+                          peer_live=peer_live)
+
 
 class SimulatedPlane(ExecutionPlane):
     """The existing EventLoop + LatencyBackend path behind the plane
@@ -357,11 +375,16 @@ class RealPlane(ExecutionPlane):
 
 
 def as_plane(loop_or_plane) -> ExecutionPlane:
-    """Adopt a raw :class:`EventLoop` into a :class:`SimulatedPlane`;
-    pass planes through untouched (idempotent)."""
+    """Adopt a raw :class:`EventLoop` into a :class:`SimulatedPlane`
+    (a ``FastLoop`` into a ``FastPlane``); pass planes through untouched
+    (idempotent)."""
     if isinstance(loop_or_plane, ExecutionPlane):
         return loop_or_plane
     if isinstance(loop_or_plane, EventLoop):
+        # deferred import: fastsim builds on this module
+        from .fastsim import FastLoop, FastPlane
+        if isinstance(loop_or_plane, FastLoop):
+            return FastPlane(loop_or_plane)
         return SimulatedPlane(loop_or_plane)
     raise TypeError(f"expected EventLoop or ExecutionPlane, "
                     f"got {type(loop_or_plane).__name__}")

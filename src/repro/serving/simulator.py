@@ -23,8 +23,25 @@ import itertools
 from typing import Callable, List, Optional, Tuple
 
 
+# Tolerance for scheduling "in the past": events up to this far behind
+# the clock are accepted (and fire immediately at the current time, never
+# rewinding it) so float round-off in deadline arithmetic cannot crash a
+# run.  Part of the loop's public contract — the vectorized fast path
+# (repro.serving.fastsim) must honour the identical epsilon, and
+# tests/test_simulator_contract.py pins it.
+PAST_EPSILON = 1e-12
+
+
 class EventLoop:
-    """Minimal deterministic event loop (heap of timestamped callbacks)."""
+    """Minimal deterministic event loop (heap of timestamped callbacks).
+
+    Ordering contract (shared with the vectorized fast path): events are
+    processed in ``(time, seq)`` order, where ``seq`` is the scheduling
+    sequence number — same-timestamp events fire in the order they were
+    scheduled, and ``run_until(t)`` includes events at exactly ``t``.
+    The clock never rewinds: an event accepted up to ``PAST_EPSILON``
+    behind ``now`` runs at ``now``.
+    """
 
     def __init__(self) -> None:
         self.now = 0.0
@@ -35,7 +52,7 @@ class EventLoop:
         self.at(self.now + delay, fn)
 
     def at(self, time: float, fn: Callable[[], None]) -> None:
-        if time < self.now - 1e-12:
+        if time < self.now - PAST_EPSILON:
             raise ValueError(f"cannot schedule in the past ({time} < {self.now})")
         heapq.heappush(self._heap, (time, next(self._seq), fn))
 

@@ -1,0 +1,153 @@
+"""Shared golden-run drivers and differential oracles.
+
+One source of truth for the pinned golden timelines (PR 2 single-model,
+PR 3 multi-model) and the dispatcher-level equivalence drivers that were
+previously duplicated across tests/test_policy.py and
+tests/test_plane.py.  The fast-path differential harness
+(tests/test_fast_plane.py) replays the same drivers through the
+vectorized core, so a golden can never drift between suites.
+
+Every driver takes the *loop* (or a loop factory) as a parameter: pass
+an :class:`~repro.serving.simulator.EventLoop` for the event-at-a-time
+oracle, a :class:`~repro.serving.fastsim.FastLoop` for the vectorized
+path, or an explicit plane.
+"""
+
+import hashlib
+import json
+
+from repro.core import PackratOptimizer
+from repro.core.knapsack import InstanceGroup, PackratConfig
+from repro.core.paper_profiles import INCEPTION_V3, PAPER_MODELS, RESNET50
+from repro.serving import (ControllerConfig, EventLoop, MultiModelServer,
+                           PackratServer, Request, TabulatedBackend,
+                           TenantSpec, WorkerInstance, as_plane)
+from repro.serving.workloads import MMPPWorkload, PoissonWorkload
+
+# --------------------------------------------------------------------- #
+# shared fixtures
+# --------------------------------------------------------------------- #
+PROFILE = RESNET50.profile(16, 64)
+TWO_GROUP_CONFIG = PackratConfig(
+    groups=(InstanceGroup(2, 4, 8), InstanceGroup(1, 8, 16)),
+    latency=PROFILE[(8, 16)])
+
+# captured from the pre-refactor code at commit 29c2308 (PR 2) with one
+# intentional controller fix applied (duplicate heartbeat respawns no
+# longer reset busy_until mid-batch)
+GOLDEN_SHA256 = ("161103eee6360be7571dc51ec34f33e0"
+                 "9ab35d69edb443e3d1d26c7dd2cdee51")
+# captured pre-refactor @3ebad30 (PR 3 multi-model resource plane)
+MM_GOLDEN_SHA256 = ("587b5cd3d0a5fdf9da26ddf851e460ae"
+                    "27da9810723572149da1561b909e7c78")
+
+
+def timeline_digest(timeline) -> str:
+    """sha256 of the canonical JSON encoding of a response timeline."""
+    return hashlib.sha256(json.dumps(timeline).encode()).hexdigest()
+
+
+def single_model_timeline(server):
+    """The pinned single-model golden encoding: (id, completion@1ns)."""
+    return [(r.request.id, round(r.completion, 9))
+            for r in server.responses]
+
+
+def mm_timeline(server):
+    """The pinned multi-model golden encoding."""
+    return [(r.request.id, r.model_id, round(r.completion, 9))
+            for r in server.responses]
+
+
+def response_tuples(responses):
+    """Full-fidelity response encoding for differential comparison —
+    every observable field of every delivery, in delivery order."""
+    return [(r.request.id, r.request.arrival, r.request.model_id,
+             round(r.completion, 9), r.batch_size, r.instance_id,
+             r.redispatched, r.model_id, getattr(r, "node_id", None))
+            for r in responses]
+
+
+# --------------------------------------------------------------------- #
+# dispatcher-level drivers (shared by the legacy-equivalence and the
+# fast-path property tests)
+# --------------------------------------------------------------------- #
+def _workers(config, backend):
+    return [WorkerInstance(j, g.t, g.b, backend)
+            for j, g in enumerate(
+                g for g in config.groups for _ in range(g.i))]
+
+
+def _run_dispatcher(make, arrivals, fail_at, duration=60.0,
+                    loop_factory=EventLoop):
+    loop = loop_factory()
+    responses = []
+    disp = make(loop, responses)
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: disp.on_request(Request(i, t))))
+    if fail_at is not None:
+        loop.at(fail_at, lambda: disp.instances[0].fail())
+    loop.run_until(duration)
+    return [(r.request.id, r.completion, r.instance_id, r.batch_size,
+             r.redispatched) for r in responses]
+
+
+# --------------------------------------------------------------------- #
+# full-controller golden drivers
+# --------------------------------------------------------------------- #
+def golden_run(dispatch_policy, loop_factory=EventLoop, fast_feed=False):
+    """The PR 2 golden: one PackratServer, MMPP load, a worker failure
+    injected at t=9.  ``fast_feed=True`` routes the arrivals through the
+    FastLoop bulk trace path instead of per-arrival scheduling (the
+    sequence-number reservation makes the two byte-identical)."""
+    profile = INCEPTION_V3.profile(16, 1024)
+    opt = PackratOptimizer(profile)
+    loop = loop_factory()
+    server = PackratServer(loop, total_units=16, optimizer=opt,
+                           backend=TabulatedBackend(profile),
+                           initial_batch=8,
+                           config=ControllerConfig(
+                               dispatch_policy=dispatch_policy))
+    cfg8 = opt.solve(16, 8)
+    wl = MMPPWorkload(rates=(0.5 * 8 / cfg8.latency, 2.5 * 8 / cfg8.latency),
+                      mean_dwell=(5.0, 2.5))
+    arrivals = wl.arrivals(30.0, seed=7)
+    if fast_feed:
+        from repro.serving.fastsim import feed_single_model_trace
+        feed_single_model_trace(server, arrivals)
+    else:
+        for i, t in enumerate(arrivals):
+            loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.at(9.0, lambda: server.inject_failure(0))
+    loop.run_until(90.0)
+    return server, arrivals
+
+
+def mm_golden_run(loop_or_plane):
+    """The PR 3 golden: adaptive two-tenant MultiModelServer over one
+    plane, merged resnet50+bert traces."""
+    units = 8
+    ccfg = ControllerConfig()
+    ccfg.estimator.max_batch = 64
+    specs = []
+    for tid in ("resnet50", "bert"):
+        profile = PAPER_MODELS[tid].profile(units, 64)
+        specs.append(TenantSpec(tid, profile, TabulatedBackend(profile),
+                                initial_batch=4))
+    plane = as_plane(loop_or_plane)
+    server = MultiModelServer(loop_or_plane, total_units=units, tenants=specs,
+                              config=ccfg, adaptive=True, plan_interval=5.0)
+    traces = {
+        "resnet50": PoissonWorkload(rate_rps=30.0).arrivals(20.0, seed=11),
+        "bert": MMPPWorkload(rates=(5.0, 40.0),
+                             mean_dwell=(4.0, 2.0)).arrivals(20.0, seed=12),
+    }
+    merged = sorted((t, k, tid)
+                    for k, tid in enumerate(("resnet50", "bert"))
+                    for t in traces[tid])
+    for i, (t, _, tid) in enumerate(merged):
+        req = Request(i, t, model_id=tid)
+        plane.at(t, (lambda req=req: server.submit(req)))
+    plane.run_until(80.0)
+    assert len(server.responses) == len(merged) == 999
+    return mm_timeline(server)

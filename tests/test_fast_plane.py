@@ -1,0 +1,405 @@
+"""Differential harness: the vectorized fast path vs the event-loop oracle.
+
+Every registered scenario × dispatch policy × node count is replayed
+through both simulation cores and must produce a *byte-identical*
+response timeline (every observable field of every delivery, in
+delivery order) — plus identical metrics reports on the single-node
+matrix, where the fast path delivers completions as blocks.
+
+The pinned PR 2 / PR 3 golden hashes are additionally reproduced
+through the FastPlane, so the fast path is chained to the same
+pre-refactor oracle as the legacy engine.
+"""
+
+import pytest
+
+from repro.core import PackratOptimizer
+from repro.core.paper_profiles import PAPER_MODELS, RESNET50
+from repro.serving import (ControllerConfig, EventLoop, MultiModelServer,
+                           PackratServer, Request, TabulatedBackend,
+                           TenantSpec)
+from repro.serving.dispatcher import DispatcherConfig
+from repro.serving.fabric import ClusterRouter, FabricConfig, FabricNodeSpec
+from repro.serving.fastsim import (ColumnQueue, FastLoop, FastPlane,
+                                   FastSyncDispatcher, ResponseBlock,
+                                   ResponseLog, feed_single_model_trace)
+from repro.serving.metrics import MetricsCollector
+from repro.serving.scenarios import (MultiModelScenarioContext,
+                                     ScenarioContext, fabric_events,
+                                     get_mm_scenario, get_scenario,
+                                     list_mm_scenarios, list_scenarios)
+from repro.serving.workloads import PoissonWorkload
+
+from oracles import (GOLDEN_SHA256, MM_GOLDEN_SHA256, golden_run,
+                     mm_golden_run, response_tuples, single_model_timeline,
+                     timeline_digest)
+
+# run shape: small enough that the whole matrix stays in tier-1 budget,
+# large enough that every scenario produces real dispatch/shed activity
+UNITS = 8
+MAX_BATCH = 64
+DURATION = 6.0
+DRAIN = 30.0
+SLO = 1.0
+
+PROFILE8 = RESNET50.profile(UNITS, MAX_BATCH)
+OPT8 = PackratOptimizer(PROFILE8)
+
+NODES = 3
+NODE_UNITS = 4
+NODE_PROFILE = RESNET50.profile(NODE_UNITS, MAX_BATCH)
+FLEET_OPT = PackratOptimizer(RESNET50.profile(NODES * NODE_UNITS, MAX_BATCH))
+
+SCENARIO_NAMES = [s.name for s in list_scenarios()]
+MM_SCENARIO_NAMES = [s.name for s in list_mm_scenarios()]
+DISPATCHES = ("sync", "continuous")
+
+_ARRIVAL_CACHE = {}
+
+
+def _arrivals(name, *, fleet):
+    key = (name, fleet)
+    if key not in _ARRIVAL_CACHE:
+        threads = NODES * NODE_UNITS if fleet else UNITS
+        opt = FLEET_OPT if fleet else OPT8
+        ctx = ScenarioContext(threads=threads, optimizer=opt,
+                              duration=DURATION, seed=0,
+                              max_total_batch=threads * MAX_BATCH)
+        wl = get_scenario(name).build(ctx)
+        _ARRIVAL_CACHE[key] = wl.arrivals(DURATION, seed=0)
+    return _ARRIVAL_CACHE[key]
+
+
+def _loop(engine):
+    return EventLoop() if engine == "event" else FastLoop()
+
+
+# --------------------------------------------------------------------- #
+# single node: every scenario × dispatch policy, responses AND report
+# --------------------------------------------------------------------- #
+def _run_single_node(arrivals, dispatch, engine):
+    loop = _loop(engine)
+    server = PackratServer(loop, total_units=UNITS, optimizer=OPT8,
+                           backend=TabulatedBackend(PROFILE8),
+                           initial_batch=8,
+                           config=ControllerConfig(dispatch_policy=dispatch))
+    metrics = MetricsCollector(slo_deadline=SLO)
+    metrics.attach(server, sample_interval=0.25, until=DURATION + DRAIN)
+    if engine == "fast":
+        metrics.on_requests(len(arrivals))
+        feed_single_model_trace(server, arrivals)
+    else:
+        for i, t in enumerate(arrivals):
+            metrics.on_request(Request(i, t))
+            loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
+    loop.run_until(DURATION + DRAIN)
+    return (response_tuples(server.responses),
+            metrics.report(duration=DURATION))
+
+
+@pytest.mark.parametrize("dispatch", DISPATCHES)
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_single_node_differential(name, dispatch):
+    arrivals = _arrivals(name, fleet=False)
+    event_tl, event_rep = _run_single_node(arrivals, dispatch, "event")
+    fast_tl, fast_rep = _run_single_node(arrivals, dispatch, "fast")
+    assert event_tl, f"scenario {name} produced no responses"
+    assert fast_tl == event_tl
+    assert fast_rep == event_rep
+
+
+# --------------------------------------------------------------------- #
+# 3-node fabric: every scenario × dispatch policy, responses AND sheds
+# --------------------------------------------------------------------- #
+def _run_fabric(arrivals, dispatch, engine, events):
+    ccfg = ControllerConfig()
+    ccfg.estimator.max_batch = MAX_BATCH
+    ccfg.dispatch_policy = dispatch
+    fcfg = FabricConfig(controller=ccfg, p2c_seed=0)
+    specs = [FabricNodeSpec(optimizer=PackratOptimizer(NODE_PROFILE),
+                            backend=TabulatedBackend(NODE_PROFILE))
+             for _ in range(NODES)]
+    loop = _loop(engine)
+    router = ClusterRouter(loop, units_per_node=NODE_UNITS, specs=specs,
+                           initial_batch=8, slo_deadline=SLO, config=fcfg)
+    sheds = []
+    router.on_shed = sheds.append
+    for i, t in enumerate(arrivals):
+        loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
+    for ev in events:
+        action = {"fail": router.fail_node,
+                  "drain": router.drain_node}[ev.action]
+        loop.at(ev.at_frac * DURATION,
+                (lambda action=action, ev=ev: action(ev.node)))
+    loop.run_until(DURATION + DRAIN)
+    shed_tl = [(s.request.id, round(s.time, 9), s.node_id, s.reason)
+               for s in sheds]
+    return response_tuples(router.responses), shed_tl
+
+
+@pytest.mark.parametrize("dispatch", DISPATCHES)
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_fabric_three_node_differential(name, dispatch):
+    arrivals = _arrivals(name, fleet=True)
+    events = fabric_events(name)
+    event_tl, event_shed = _run_fabric(arrivals, dispatch, "event", events)
+    fast_tl, fast_shed = _run_fabric(arrivals, dispatch, "fast", events)
+    assert event_tl, f"scenario {name} produced no responses"
+    assert fast_tl == event_tl
+    assert fast_shed == event_shed
+
+
+# --------------------------------------------------------------------- #
+# multi-model: every registered mixed scenario
+# --------------------------------------------------------------------- #
+def _run_mm(name, engine):
+    models = ("resnet50", "bert")
+    units = UNITS
+    share = units // len(models)
+    contexts = {
+        m: ScenarioContext(threads=share,
+                           optimizer=PackratOptimizer(
+                               PAPER_MODELS[m].profile(share, 32)),
+                           duration=DURATION, seed=0)
+        for m in models}
+    mctx = MultiModelScenarioContext(models=models, contexts=contexts,
+                                     duration=DURATION, seed=0)
+    workloads = get_mm_scenario(name).build(mctx)
+    traces = {m: workloads[m].arrivals(DURATION, seed=3 + k)
+              for k, m in enumerate(models)}
+
+    ccfg = ControllerConfig()
+    ccfg.estimator.max_batch = 32
+    specs = [TenantSpec(m, PAPER_MODELS[m].profile(units, 32),
+                        TabulatedBackend(PAPER_MODELS[m].profile(units, 32)),
+                        initial_batch=4)
+             for m in models]
+    loop = _loop(engine)
+    server = MultiModelServer(loop, total_units=units, tenants=specs,
+                              config=ccfg, adaptive=True, plan_interval=2.0)
+    merged = sorted((t, k, m) for k, m in enumerate(models)
+                    for t in traces[m])
+    for i, (t, _, m) in enumerate(merged):
+        req = Request(i, t, model_id=m)
+        loop.at(t, (lambda req=req: server.submit(req)))
+    loop.run_until(DURATION + DRAIN)
+    return response_tuples(server.responses)
+
+
+@pytest.mark.parametrize("name", MM_SCENARIO_NAMES)
+def test_multimodel_differential(name):
+    event_tl = _run_mm(name, "event")
+    fast_tl = _run_mm(name, "fast")
+    assert event_tl, f"mm scenario {name} produced no responses"
+    assert fast_tl == event_tl
+
+
+# --------------------------------------------------------------------- #
+# pinned goldens through the FastPlane
+# --------------------------------------------------------------------- #
+def test_fast_plane_reproduces_golden_bulk_feed():
+    """The PR 2 golden hash through the full fast stack: FastLoop trace
+    absorption, columnar queue, flight execution, block delivery."""
+    server, arrivals = golden_run("sync", FastLoop, fast_feed=True)
+    assert isinstance(server.dispatcher, FastSyncDispatcher)
+    assert isinstance(server.responses, ResponseLog)
+    timeline = single_model_timeline(server)
+    assert len(timeline) == len(arrivals) == 4789
+    assert timeline_digest(timeline) == GOLDEN_SHA256
+    # the bulk path actually engaged: multi-item blocks were delivered
+    blocks = server.responses.blocks()
+    assert any(isinstance(b, ResponseBlock) and len(b) > 1 for b in blocks)
+
+
+def test_fast_plane_reproduces_golden_per_event_feed():
+    """Same golden with per-arrival scheduling on the FastLoop (no trace
+    machinery): the fast dispatcher alone must already be exact."""
+    server, _ = golden_run("sync", FastLoop, fast_feed=False)
+    assert timeline_digest(single_model_timeline(server)) == GOLDEN_SHA256
+
+
+def test_fast_plane_continuous_matches_event_engine():
+    """Continuous dispatch falls back to the legacy dispatcher on the
+    fast plane and stays exact."""
+    event_server, _ = golden_run("continuous", EventLoop)
+    fast_server, _ = golden_run("continuous", FastLoop)
+    assert not isinstance(fast_server.dispatcher, FastSyncDispatcher)
+    assert (response_tuples(fast_server.responses)
+            == response_tuples(event_server.responses))
+
+
+@pytest.mark.parametrize("make_driver", [FastLoop,
+                                         lambda: FastPlane(FastLoop())],
+                         ids=["raw-fastloop", "explicit-fastplane"])
+def test_fast_plane_reproduces_multimodel_golden(make_driver):
+    timeline = mm_golden_run(make_driver())
+    assert timeline_digest(timeline) == MM_GOLDEN_SHA256
+
+
+# --------------------------------------------------------------------- #
+# property: random traces, bulk feed vs event engine
+# --------------------------------------------------------------------- #
+def _check_fast_feed(seed, rate, fail_at):
+    arrivals = PoissonWorkload(rate_rps=rate).arrivals(5.0, seed=seed)
+
+    def run(engine):
+        loop = _loop(engine)
+        server = PackratServer(
+            loop, total_units=UNITS, optimizer=OPT8,
+            backend=TabulatedBackend(PROFILE8), initial_batch=8,
+            config=ControllerConfig(dispatch_policy="sync"))
+        if engine == "fast":
+            feed_single_model_trace(server, arrivals)
+        else:
+            for i, t in enumerate(arrivals):
+                loop.at(t, (lambda i=i, t=t:
+                            server.submit(Request(i, t))))
+        if fail_at is not None:
+            loop.at(fail_at, lambda: server.inject_failure(0))
+        loop.run_until(40.0)
+        return response_tuples(server.responses)
+
+    assert run("fast") == run("event")
+
+
+@pytest.mark.parametrize("seed,rate,fail_at",
+                         [(0, 30.0, None), (1, 120.0, None),
+                          (2, 200.0, 1.5), (3, 60.0, 0.5),
+                          (4, 180.0, 3.9), (5, 25.0, 2.0)])
+def test_fast_feed_matches_event_engine_seeded(seed, rate, fail_at):
+    _check_fast_feed(seed, rate, fail_at)
+
+
+def test_fast_feed_matches_event_engine_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           rate=st.floats(min_value=20.0, max_value=200.0),
+           fail_at=st.one_of(st.none(), st.floats(0.5, 4.0)))
+    def check(seed, rate, fail_at):
+        _check_fast_feed(seed, rate, fail_at)
+
+    check()
+
+
+# --------------------------------------------------------------------- #
+# FastLoop merge-order semantics
+# --------------------------------------------------------------------- #
+def test_fastloop_trace_reserves_sequence_block():
+    """Heap events scheduled before the trace win timestamp ties (lower
+    seq); events scheduled after lose them — exactly as if every trace
+    arrival had been pre-scheduled with at()."""
+    loop = FastLoop()
+    order = []
+    loop.at(1.0, lambda: order.append("pre"))          # seq 0
+    loop.add_trace([1.0, 2.0], lambda i, t: order.append(f"arr{i}"))
+    loop.at(2.0, lambda: order.append("post"))         # seq after trace
+    loop.run_until(3.0)
+    assert order == ["pre", "arr0", "arr1", "post"]
+    assert loop.now == 3.0
+
+
+def test_fastloop_handler_scheduled_events_interleave():
+    """An event scheduled by an arrival handler fires before later
+    arrivals when its timestamp precedes them."""
+    loop = FastLoop()
+    order = []
+
+    def arrive(i, t):
+        order.append(("arr", i, loop.now))
+        if i == 0:
+            loop.at(t + 0.5, lambda: order.append(("timer", loop.now)))
+
+    loop.add_trace([1.0, 2.0, 3.0], arrive)
+    loop.run_until(10.0)
+    assert order == [("arr", 0, 1.0), ("timer", 1.5),
+                     ("arr", 1, 2.0), ("arr", 2, 3.0)]
+
+
+def test_fastloop_run_drains_trace():
+    loop = FastLoop()
+    seen = []
+    loop.add_trace([0.5, 1.5], lambda i, t: seen.append(t))
+    loop.run()
+    assert seen == [0.5, 1.5]
+    assert loop.pending_arrivals == 0
+
+
+def test_fastloop_absorber_consumes_in_bulk():
+    loop = FastLoop()
+    singles, absorbed = [], []
+
+    def absorber(times, cur, bound):
+        # absorb everything after the first arrival of each window
+        k = bound - cur
+        if k > 1 and times[cur] > 1.0:
+            absorbed.extend(times[cur:bound].tolist())
+            return k
+        return 0
+
+    loop.add_trace([1.0, 2.0, 2.5, 3.0], lambda i, t: singles.append(t),
+                   absorber=absorber)
+    loop.run_until(5.0)
+    assert singles == [1.0]
+    assert absorbed == [2.0, 2.5, 3.0]
+    assert loop.now == 5.0
+
+
+def test_fastloop_rejects_unsorted_and_overlapping_traces():
+    loop = FastLoop()
+    with pytest.raises(ValueError):
+        loop.add_trace([2.0, 1.0], lambda i, t: None)
+    loop.add_trace([1.0, 2.0], lambda i, t: None)
+    with pytest.raises(ValueError):
+        loop.add_trace([3.0], lambda i, t: None)
+
+
+# --------------------------------------------------------------------- #
+# ColumnQueue drop-in surface
+# --------------------------------------------------------------------- #
+def test_column_queue_deque_surface():
+    q = ColumnQueue("m")
+    assert len(q) == 0 and not q
+    q.append(Request(1, 0.5, model_id="m"))
+    q.append(Request(2, 0.75, model_id="m"))
+    assert len(q) == 2 and q
+    assert list(q) == [Request(1, 0.5, model_id="m"),
+                       Request(2, 0.75, model_id="m")]
+    assert q.popleft() == Request(1, 0.5, model_id="m")
+    q.clear()
+    assert len(q) == 0
+    with pytest.raises(IndexError):
+        q.popleft()
+
+
+def test_column_queue_bulk_ops_and_growth():
+    import numpy as np
+    q = ColumnQueue()
+    ids = np.arange(3000, dtype=np.int64)
+    ts = np.linspace(0.0, 3.0, 3000)
+    q.extend_arrays(ids, ts)                 # forces capacity growth
+    assert len(q) == 3000
+    got_ids, got_ts = q.pop_slice(5)
+    assert got_ids.tolist() == [0, 1, 2, 3, 4]
+    assert got_ts.tolist() == ts[:5].tolist()
+    assert len(q) == 2995
+    # popped slices are owned copies: later growth must not alias them
+    q.extend_arrays(ids, ts)
+    assert got_ids.tolist() == [0, 1, 2, 3, 4]
+
+
+def test_response_log_materializes_blocks():
+    import numpy as np
+    log = ResponseLog()
+    log.append_block(ResponseBlock(
+        ids=np.array([7, 8], dtype=np.int64),
+        arrivals=np.array([0.25, 0.5]), completion=1.0, batch_size=2,
+        instance_id=3, redispatched=False, model_id="m"))
+    assert len(log) == 2
+    items = list(log)
+    assert [r.request.id for r in items] == [7, 8]
+    assert items[0].latency == 0.75 and items[1].latency == 0.5
+    assert items[0].batch_size == 2 and items[0].instance_id == 3
+    assert log[1].request.arrival == 0.5

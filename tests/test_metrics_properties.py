@@ -1,0 +1,228 @@
+"""Property tests: vectorized metrics aggregation vs per-record reference.
+
+The vectorized kernels in :mod:`repro.serving.metrics`
+(``vector_percentiles`` / ``vector_within_slo`` /
+``vector_log2_ms_buckets``) and the block-ingestion path
+(``MetricsCollector.on_response_block``) must be *value-identical* to
+the per-record scalar implementations on every input — that is the
+contract that lets the fast simulation core feed metrics in bulk
+without perturbing a single reported number.
+
+Seeded random streams always run; a hypothesis fuzz layer rides on top
+when the library is available.
+"""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.serving.fastsim import ResponseBlock
+from repro.serving.metrics import (MetricsCollector, buckets_to_histogram,
+                                   log2_ms_bucket, log2_ms_histogram,
+                                   nearest_rank, vector_log2_ms_buckets,
+                                   vector_percentiles, vector_within_slo)
+from repro.serving.simulator import Request, Response, Shed
+
+QS = (1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0)
+
+
+def _random_latencies(seed, n):
+    rng = random.Random(seed)
+    kinds = [lambda: rng.uniform(0.0, 5.0),
+             lambda: rng.expovariate(10.0),
+             lambda: 2.0 ** rng.uniform(-12, 6) / 1e3,     # bucket edges
+             lambda: math.ulp(1.0) * rng.randint(0, 4)]    # denormal-ish
+    return [rng.choice(kinds)() for _ in range(n)]
+
+
+# --------------------------------------------------------------------- #
+# kernel equivalence
+# --------------------------------------------------------------------- #
+def _check_kernels(values, slo):
+    ref_sorted = sorted(values)
+    got = vector_percentiles(values, QS)
+    for q, g in zip(QS, got):
+        r = nearest_rank(ref_sorted, q)
+        assert g == r or (math.isnan(g) and math.isnan(r)), (q, g, r)
+
+    assert vector_within_slo(values, slo) == (
+        len(values) if slo is None
+        else sum(1 for v in values if v <= slo))
+    assert vector_within_slo(values, None) == len(values)
+
+    ref_buckets = {}
+    for v in values:
+        k = log2_ms_bucket(v)
+        ref_buckets[k] = ref_buckets.get(k, 0) + 1
+    assert vector_log2_ms_buckets(values) == ref_buckets
+    assert (buckets_to_histogram(vector_log2_ms_buckets(values))
+            == log2_ms_histogram(values))
+
+
+@pytest.mark.parametrize("seed,n,slo",
+                         [(0, 0, 0.5), (1, 1, 0.5), (2, 1, None),
+                          (3, 7, 0.1), (4, 100, 0.5), (5, 1000, 1.0),
+                          (6, 333, None), (7, 50, 0.0)])
+def test_vector_kernels_match_reference_seeded(seed, n, slo):
+    _check_kernels(_random_latencies(seed, n), slo)
+
+
+def test_vector_kernels_bucket_edges():
+    """Values one ulp either side of a power-of-two millisecond boundary
+    land in the same bucket under both paths."""
+    edges = []
+    for e in range(-5, 8):
+        ms = 2.0 ** e
+        for v in (ms, math.nextafter(ms, 0.0), math.nextafter(ms, math.inf)):
+            edges.append(v / 1e3)
+    edges.append(0.0)
+    _check_kernels(edges, 0.004)
+
+
+def test_vector_percentiles_rejects_bad_q():
+    with pytest.raises(ValueError):
+        vector_percentiles([1.0], (0.0,))
+    with pytest.raises(ValueError):
+        vector_percentiles([1.0], (100.5,))
+    with pytest.raises(ValueError):
+        nearest_rank([1.0], 0.0)
+
+
+def test_vector_kernels_empty_inputs():
+    assert math.isnan(vector_percentiles([], (50.0,))[0])
+    assert vector_within_slo([], 1.0) == 0
+    assert vector_within_slo([], None) == 0
+    assert vector_log2_ms_buckets([]) == {}
+
+
+def test_vector_kernels_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(values=st.lists(st.floats(min_value=0.0, max_value=1e6,
+                                     allow_nan=False), max_size=200),
+           slo=st.one_of(st.none(), st.floats(0.0, 10.0)))
+    def check(values, slo):
+        _check_kernels(values, slo)
+
+    check()
+
+
+# --------------------------------------------------------------------- #
+# collector block path vs per-record path
+# --------------------------------------------------------------------- #
+def _random_blocks(seed, n_blocks):
+    """(blocks, equivalent per-record Response list) pair."""
+    rng = random.Random(seed)
+    blocks, per_record = [], []
+    next_id = 0
+    for _ in range(n_blocks):
+        n = rng.randint(1, 12)
+        completion = rng.uniform(1.0, 50.0)
+        arrivals = np.array(sorted(completion - rng.uniform(0.0, 2.0)
+                                   for _ in range(n)))
+        ids = np.arange(next_id, next_id + n, dtype=np.int64)
+        next_id += n
+        model = rng.choice(("resnet50", "bert"))
+        redis = rng.random() < 0.2
+        blocks.append(ResponseBlock(
+            ids=ids, arrivals=arrivals, completion=completion,
+            batch_size=n, instance_id=rng.randint(0, 3),
+            redispatched=redis, model_id=model))
+        for i in range(n):
+            per_record.append(Response(
+                Request(int(ids[i]), float(arrivals[i]), model_id=model),
+                completion=completion, batch_size=n,
+                instance_id=blocks[-1].instance_id,
+                redispatched=redis, model_id=model))
+    return blocks, per_record
+
+
+def _collector():
+    return MetricsCollector(slo_deadline=0.8,
+                            slo_by_model={"bert": 1.5})
+
+
+@pytest.mark.parametrize("seed,n_blocks", [(0, 1), (1, 5), (2, 40), (3, 13)])
+def test_block_ingestion_matches_per_record(seed, n_blocks):
+    blocks, per_record = _random_blocks(seed, n_blocks)
+
+    a = _collector()
+    a.on_requests(len(per_record) + 5, "resnet50")
+    for r in per_record:
+        a.on_response(r)
+
+    b = _collector()
+    for _ in range(len(per_record) + 5):
+        b.on_request(Request(0, 0.0, model_id="resnet50"))
+    for blk in blocks:
+        b.on_response_block(blk)
+
+    assert b.latencies == a.latencies          # same values, same order
+    assert b.report(duration=10.0) == a.report(duration=10.0)
+    assert b.worst_model_p95() == a.worst_model_p95()
+
+
+def test_block_ingestion_empty_and_single_sample():
+    empty = _collector()
+    rep = empty.report(duration=1.0)
+    assert rep["completed"] == 0 and rep["offered"] == 0
+    assert rep["latency_ms"]["p99"] is None
+    assert rep["latency_histogram"] == []
+    assert rep["slo_attainment"] == 1.0
+
+    one = _collector()
+    one.on_requests(1)
+    one.on_response_block(ResponseBlock(
+        ids=np.array([0], dtype=np.int64), arrivals=np.array([0.25]),
+        completion=0.75, batch_size=1, instance_id=0,
+        redispatched=False, model_id="default"))
+    rep = one.report(duration=1.0)
+    assert rep["completed"] == 1
+    assert rep["latency_ms"]["p50"] == rep["latency_ms"]["p99"] == 500.0
+    assert rep["within_slo"] == 1 and rep["slo_attainment"] == 1.0
+
+
+def test_all_shed_run_reports_zero_goodput():
+    m = _collector()
+    for i in range(10):
+        req = Request(i, 0.1 * i)
+        m.on_request(req)
+        m.on_shed(Shed(req, time=0.1 * i, node_id="node-0", reason="queue"))
+    rep = m.report(duration=1.0)
+    assert rep["offered"] == rep["shed"] == 10
+    assert rep["completed"] == 0 and rep["admitted"] == 0
+    assert rep["shed_rate"] == 1.0
+    assert rep["goodput_rps"] == 0.0 and rep["slo_attainment"] == 0.0
+    assert rep["nodes"]["node-0"]["shed"] == 10
+
+
+def test_on_requests_bulk_equals_repeated_on_request():
+    a, b = _collector(), _collector()
+    for _ in range(7):
+        a.on_request(Request(0, 0.0, model_id="m"))
+    b.on_requests(7, "m")
+    b.on_requests(0, "m")
+    b.on_requests(-3, "m")      # guard: no-op
+    assert (a.offered, a.offered_by_model) == (b.offered, b.offered_by_model)
+
+
+def test_collector_block_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_blocks=st.integers(0, 20))
+    def check(seed, n_blocks):
+        blocks, per_record = _random_blocks(seed, n_blocks)
+        a, b = _collector(), _collector()
+        for r in per_record:
+            a.on_response(r)
+        for blk in blocks:
+            b.on_response_block(blk)
+        assert b.report(duration=5.0) == a.report(duration=5.0)
+
+    check()

@@ -40,17 +40,10 @@ from repro.serving import (CalibratedBackend, ControllerConfig, EventLoop,
 from repro.serving.dispatcher import Dispatcher, DispatcherConfig
 from repro.serving.workloads import MMPPWorkload, PoissonWorkload
 
-PROFILE = RESNET50.profile(16, 64)
-TWO_GROUP_CONFIG = PackratConfig(
-    groups=(InstanceGroup(2, 4, 8), InstanceGroup(1, 8, 16)),
-    latency=PROFILE[(8, 16)])
-
-
-# --------------------------------------------------------------------- #
-# plane equivalence: single-model golden (same pin as test_policy)
-# --------------------------------------------------------------------- #
-GOLDEN_SHA256 = ("161103eee6360be7571dc51ec34f33e0"
-                 "9ab35d69edb443e3d1d26c7dd2cdee51")
+# shared fixtures, golden pins and drivers (one source of truth with
+# test_policy.py and the fast-path differential harness)
+from oracles import (GOLDEN_SHA256, MM_GOLDEN_SHA256, PROFILE,
+                     TWO_GROUP_CONFIG, mm_golden_run, timeline_digest)
 
 
 def test_simulated_plane_reproduces_pre_refactor_golden():
@@ -79,39 +72,10 @@ def test_simulated_plane_reproduces_pre_refactor_golden():
 
 
 # --------------------------------------------------------------------- #
-# plane equivalence: multi-model golden (captured pre-refactor @3ebad30)
+# plane equivalence: multi-model golden (captured pre-refactor @3ebad30;
+# driver + pin shared via tests/oracles.py)
 # --------------------------------------------------------------------- #
-MM_GOLDEN_SHA256 = ("587b5cd3d0a5fdf9da26ddf851e460ae"
-                    "27da9810723572149da1561b909e7c78")
-
-
-def _mm_golden_run(loop_or_plane):
-    units = 8
-    ccfg = ControllerConfig()
-    ccfg.estimator.max_batch = 64
-    specs = []
-    for tid in ("resnet50", "bert"):
-        profile = PAPER_MODELS[tid].profile(units, 64)
-        specs.append(TenantSpec(tid, profile, TabulatedBackend(profile),
-                                initial_batch=4))
-    plane = as_plane(loop_or_plane)
-    server = MultiModelServer(loop_or_plane, total_units=units, tenants=specs,
-                              config=ccfg, adaptive=True, plan_interval=5.0)
-    traces = {
-        "resnet50": PoissonWorkload(rate_rps=30.0).arrivals(20.0, seed=11),
-        "bert": MMPPWorkload(rates=(5.0, 40.0),
-                             mean_dwell=(4.0, 2.0)).arrivals(20.0, seed=12),
-    }
-    merged = sorted((t, k, tid)
-                    for k, tid in enumerate(("resnet50", "bert"))
-                    for t in traces[tid])
-    for i, (t, _, tid) in enumerate(merged):
-        req = Request(i, t, model_id=tid)
-        plane.at(t, (lambda req=req: server.submit(req)))
-    plane.run_until(80.0)
-    assert len(server.responses) == len(merged) == 999
-    return [(r.request.id, r.model_id, round(r.completion, 9))
-            for r in server.responses]
+_mm_golden_run = mm_golden_run
 
 
 @pytest.mark.parametrize("make_driver", [EventLoop,
@@ -119,8 +83,7 @@ def _mm_golden_run(loop_or_plane):
                          ids=["raw-eventloop", "explicit-plane"])
 def test_simulated_plane_reproduces_multimodel_golden(make_driver):
     timeline = _mm_golden_run(make_driver())
-    digest = hashlib.sha256(json.dumps(timeline).encode()).hexdigest()
-    assert digest == MM_GOLDEN_SHA256
+    assert timeline_digest(timeline) == MM_GOLDEN_SHA256
 
 
 # --------------------------------------------------------------------- #

@@ -29,6 +29,13 @@ from repro.serving import (ControllerConfig, EventLoop, PackratServer,
 from repro.serving.dispatcher import Dispatcher, DispatcherConfig
 from repro.serving.workloads import MMPPWorkload, PoissonWorkload
 
+# shared golden-run drivers and fixtures (one source of truth with
+# test_plane.py and the fast-path differential harness); the names are
+# re-exported here because sibling suites import them from this module
+from oracles import (GOLDEN_SHA256, PROFILE, TWO_GROUP_CONFIG,  # noqa: F401
+                     _run_dispatcher, _workers, golden_run,
+                     single_model_timeline, timeline_digest)
+
 
 # --------------------------------------------------------------------- #
 # verbatim pre-refactor dispatcher (commit 29c2308) — the test oracle
@@ -171,31 +178,6 @@ class LegacyDispatcher:
             self.loop.at(deadline, watchdog)
 
 
-PROFILE = RESNET50.profile(16, 64)
-TWO_GROUP_CONFIG = PackratConfig(
-    groups=(InstanceGroup(2, 4, 8), InstanceGroup(1, 8, 16)),
-    latency=PROFILE[(8, 16)])
-
-
-def _workers(config, backend):
-    return [WorkerInstance(j, g.t, g.b, backend)
-            for j, g in enumerate(
-                g for g in config.groups for _ in range(g.i))]
-
-
-def _run_dispatcher(make, arrivals, fail_at, duration=60.0):
-    loop = EventLoop()
-    responses = []
-    disp = make(loop, responses)
-    for i, t in enumerate(arrivals):
-        loop.at(t, (lambda i=i, t=t: disp.on_request(Request(i, t))))
-    if fail_at is not None:
-        loop.at(fail_at, lambda: disp.instances[0].fail())
-    loop.run_until(duration)
-    return [(r.request.id, r.completion, r.instance_id, r.batch_size,
-             r.redispatched) for r in responses]
-
-
 def _timeline_kwargs():
     backend = TabulatedBackend(PROFILE)
     return backend
@@ -251,41 +233,18 @@ def test_sync_policy_matches_legacy_dispatcher_property():
 
 # --------------------------------------------------------------------- #
 # full-controller golden pin: captured from the pre-refactor code at
-# commit 29c2308 with one intentional controller fix applied (duplicate
-# heartbeat respawns no longer reset busy_until mid-batch); the
+# commit 29c2308 (driver + pinned hash shared via tests/oracles.py); the
 # refactored BatchSyncPolicy stack reproduces it bit-for-bit
 # --------------------------------------------------------------------- #
-GOLDEN_SHA256 = ("161103eee6360be7571dc51ec34f33e0"
-                 "9ab35d69edb443e3d1d26c7dd2cdee51")
-
-
 def _golden_run(dispatch_policy):
-    profile = INCEPTION_V3.profile(16, 1024)
-    opt = PackratOptimizer(profile)
-    loop = EventLoop()
-    server = PackratServer(loop, total_units=16, optimizer=opt,
-                           backend=TabulatedBackend(profile),
-                           initial_batch=8,
-                           config=ControllerConfig(
-                               dispatch_policy=dispatch_policy))
-    cfg8 = opt.solve(16, 8)
-    wl = MMPPWorkload(rates=(0.5 * 8 / cfg8.latency, 2.5 * 8 / cfg8.latency),
-                      mean_dwell=(5.0, 2.5))
-    arrivals = wl.arrivals(30.0, seed=7)
-    for i, t in enumerate(arrivals):
-        loop.at(t, (lambda i=i, t=t: server.submit(Request(i, t))))
-    loop.at(9.0, lambda: server.inject_failure(0))
-    loop.run_until(90.0)
-    return server, arrivals
+    return golden_run(dispatch_policy)
 
 
 def test_sync_full_server_matches_pre_refactor_golden():
     server, arrivals = _golden_run("sync")
-    timeline = [(r.request.id, round(r.completion, 9))
-                for r in server.responses]
-    digest = hashlib.sha256(json.dumps(timeline).encode()).hexdigest()
+    timeline = single_model_timeline(server)
     assert len(timeline) == len(arrivals) == 4789
-    assert digest == GOLDEN_SHA256
+    assert timeline_digest(timeline) == GOLDEN_SHA256
 
 
 def test_continuous_full_server_serves_everything_once():

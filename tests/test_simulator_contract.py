@@ -1,0 +1,157 @@
+"""The event-loop ordering contract, pinned for both simulation cores.
+
+The vectorized fast path (:class:`repro.serving.fastsim.FastLoop`)
+byte-reproduces the legacy :class:`~repro.serving.simulator.EventLoop`
+only because both implement the *identical* contract:
+
+* events fire in ``(time, seq)`` order — same-timestamp ties break by
+  scheduling sequence number;
+* ``at()`` accepts timestamps up to ``PAST_EPSILON`` (1e-12) behind the
+  clock (float round-off in deadline arithmetic) and rejects anything
+  older;
+* the clock never rewinds — a within-epsilon past event runs at ``now``;
+* ``run_until(t)`` is inclusive of events at exactly ``t``.
+
+Every test here runs against both loop classes.
+"""
+
+import math
+
+import pytest
+
+from repro.serving.fastsim import FastLoop
+from repro.serving.simulator import PAST_EPSILON, EventLoop
+
+LOOPS = [EventLoop, FastLoop]
+LOOP_IDS = ["event-loop", "fast-loop"]
+
+
+@pytest.fixture(params=LOOPS, ids=LOOP_IDS)
+def loop(request):
+    return request.param()
+
+
+def test_past_epsilon_value_is_pinned():
+    # the epsilon is part of the cross-core contract: changing it here
+    # requires changing fastsim's trace-merge acceptance identically
+    assert PAST_EPSILON == 1e-12
+
+
+def test_same_timestamp_ties_fire_in_scheduling_order(loop):
+    order = []
+    for k in range(5):
+        loop.at(1.0, (lambda k=k: order.append(k)))
+    loop.at(0.5, lambda: order.append("early"))
+    loop.run_until(1.0)
+    assert order == ["early", 0, 1, 2, 3, 4]
+
+
+def test_handler_scheduled_tie_fires_after_preexisting(loop):
+    """An event scheduled *during* a timestamp-t handler for time t gets
+    a later seq, so it fires after every pre-existing t event."""
+    order = []
+
+    def first():
+        order.append("first")
+        loop.at(2.0, lambda: order.append("nested"))
+
+    loop.at(2.0, first)
+    loop.at(2.0, lambda: order.append("second"))
+    loop.run_until(2.0)
+    assert order == ["first", "second", "nested"]
+
+
+def test_at_accepts_within_epsilon_past(loop):
+    loop.run_until(10.0)
+    assert loop.now == 10.0
+    fired = []
+    loop.at(10.0 - PAST_EPSILON, lambda: fired.append(loop.now))
+    loop.run_until(10.0)
+    # the clock never rewinds: the event ran at now, not in the past
+    assert fired == [10.0]
+    assert loop.now == 10.0
+
+
+def test_at_rejects_beyond_epsilon_past(loop):
+    loop.run_until(10.0)
+    with pytest.raises(ValueError):
+        loop.at(10.0 - 1e-9, lambda: None)
+    with pytest.raises(ValueError):
+        loop.at(math.nextafter(10.0 - PAST_EPSILON, 0.0), lambda: None)
+
+
+def test_run_until_is_inclusive_and_advances_clock(loop):
+    fired = []
+    loop.at(3.0, lambda: fired.append("at-3"))
+    loop.at(math.nextafter(3.0, math.inf), lambda: fired.append("after-3"))
+    loop.run_until(3.0)
+    assert fired == ["at-3"]
+    assert loop.now == 3.0           # clock reaches t_end even when idle
+    loop.run_until(5.0)
+    assert fired == ["at-3", "after-3"]
+    assert loop.now == 5.0
+
+
+def test_clock_monotone_through_epsilon_past_events(loop):
+    """Deadline arithmetic that lands a hair behind the clock must not
+    rewind ``now`` for later events."""
+    seen = []
+
+    def at_five():
+        seen.append(loop.now)
+        loop.at(loop.now - PAST_EPSILON, lambda: seen.append(loop.now))
+        loop.at(loop.now + 1.0, lambda: seen.append(loop.now))
+
+    loop.at(5.0, at_five)
+    loop.run()
+    assert seen == [5.0, 5.0, 6.0]
+
+
+def test_schedule_is_relative_to_now(loop):
+    fired = []
+    loop.at(2.0, lambda: loop.schedule(1.5, lambda: fired.append(loop.now)))
+    loop.run()
+    assert fired == [3.5]
+
+
+def test_run_drains_everything(loop):
+    fired = []
+    loop.at(1.0, lambda: loop.at(4.0, lambda: fired.append("late")))
+    loop.at(2.0, lambda: fired.append("mid"))
+    loop.run()
+    assert fired == ["mid", "late"]
+    assert loop.now == 4.0
+
+
+# --------------------------------------------------------------------- #
+# FastLoop-only: the trace merge obeys the same contract
+# --------------------------------------------------------------------- #
+def test_fastloop_trace_ties_respect_sequence_reservation():
+    """add_trace reserves one seq per arrival at registration time, so a
+    heap event scheduled before the trace wins a timestamp tie and one
+    scheduled after loses it — indistinguishable from pre-scheduling
+    every arrival with at()."""
+    loop = FastLoop()
+    order = []
+    loop.at(1.0, lambda: order.append("heap-pre"))
+    loop.add_trace([1.0, 1.0, 2.0], lambda i, t: order.append(f"arr{i}"))
+    loop.at(1.0, lambda: order.append("heap-post"))
+    loop.at(2.0, lambda: order.append("heap-post-2"))
+    loop.run()
+    assert order == ["heap-pre", "arr0", "arr1", "heap-post",
+                     "arr2", "heap-post-2"]
+
+
+def test_fastloop_epsilon_contract_with_trace_pending():
+    """The epsilon acceptance is unchanged while a trace is draining."""
+    loop = FastLoop()
+    fired = []
+    loop.add_trace([1.0, 5.0], lambda i, t: fired.append(t))
+    loop.run_until(2.0)
+    assert fired == [1.0] and loop.now == 2.0
+    loop.at(2.0 - PAST_EPSILON, lambda: fired.append(loop.now))
+    with pytest.raises(ValueError):
+        loop.at(2.0 - 1e-9, lambda: None)
+    loop.run()
+    assert fired == [1.0, 2.0, 5.0]
+    assert loop.pending_arrivals == 0

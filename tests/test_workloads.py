@@ -1,8 +1,11 @@
 """Workload scenario engine tests: seeded determinism, rate fidelity,
-trace round-trips (ISSUE 1 tentpole coverage)."""
+trace round-trips (ISSUE 1 tentpole coverage), and pinned cross-version
+arrival digests."""
 
+import hashlib
 import math
 
+import numpy as np
 import pytest
 
 from repro.serving.workloads import (DiurnalWorkload, MMPPWorkload,
@@ -28,6 +31,37 @@ def test_seeded_determinism(wl):
     assert a == b, "same seed must give identical arrivals"
     c = wl.arrivals(20.0, seed=8)
     assert a != c, "different seeds must give different sample paths"
+
+
+# sha256 of the first 256 arrivals (float64 buffer) of each generator at
+# seed 2026 over 60 s.  These pin the *exact sample path* across
+# refactors: the fast simulation core replays pre-generated traces, so
+# any silent change to a generator's RNG stream would shift every
+# downstream golden.  If a generator's algorithm changes intentionally,
+# re-capture with the snippet in the test body.
+ARRIVAL_DIGESTS = {
+    "poisson": ("b40657fd6f6d9f4aeea507bf7e34895d"
+                "1eddc705cf3a1bb38f93c571dc0bb6c4"),
+    "step": ("da7570a8a72aed9e18b6aac1e0ead319"
+             "6aca478f120b3414f72304d56e7810e3"),
+    "ramp": ("30e9ceb2076de3c4a068f834ee527b2b"
+             "be36dec9cf3030f7fd9c6c2cc4bb8a22"),
+    "diurnal": ("a942fb9e27a3e4924a6aebebdc58bf07"
+                "b39c7c2224d04c7fbb04e5365f6124a6"),
+    "mmpp": ("2762433e4e209e2f737a804645b61f47"
+             "2a932af90ecbd03a37aa5726e5df50cc"),
+}
+
+
+@pytest.mark.parametrize("wl", ALL_GENERATORS, ids=lambda w: w.name)
+def test_pinned_arrival_digest(wl):
+    times = wl.arrivals(60.0, seed=2026)
+    assert len(times) >= 256, "digest window must be fully populated"
+    head = np.asarray(times[:256], dtype=np.float64)
+    digest = hashlib.sha256(head.tobytes()).hexdigest()
+    assert digest == ARRIVAL_DIGESTS[wl.name], (
+        f"{wl.name} sample path drifted — this breaks trace replay "
+        f"reproducibility; only re-pin on an intentional generator change")
 
 
 @pytest.mark.parametrize("wl", ALL_GENERATORS, ids=lambda w: w.name)
