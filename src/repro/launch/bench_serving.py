@@ -119,7 +119,9 @@ from ..serving.scenarios import (MultiModelScenario,
                                  get_mm_scenario,
                                  get_scenario, list_mm_scenarios,
                                  list_scenarios)
-from ..serving.fastsim import FastLoop, feed_single_model_trace
+from ..serving.fabric import feed_fabric_trace
+from ..serving.fastsim import (FastLoop, feed_multi_model_trace,
+                               feed_single_model_trace)
 from ..serving.workloads import TraceWorkload
 
 POLICIES = ("static", "packrat")
@@ -134,7 +136,10 @@ FABRIC_POLICIES = ("single_fat", "single_packrat", "fabric")
 # v2: schema_version + shed accounting keys + the --nodes fabric axis.
 # v3: per-run "engine" key + the --execution fast vectorized core
 #     (byte-identical reports to --execution sim, only faster).
-SCHEMA_VERSION = 3
+# v4: per-run "fastpath" coverage report, engine-tagged instance rows,
+#     and fast-engine acceleration of continuous dispatch, multi-model
+#     tenancy, and the --nodes fabric (still byte-identical).
+SCHEMA_VERSION = 4
 
 # simulation engines for the virtual-clock paths: the event-at-a-time
 # oracle and the vectorized core (repro.serving.fastsim).  Reports are
@@ -184,7 +189,9 @@ def _controller_report_fields(rep: Dict[str, object], server,
         {"t": t, "batch": b, "config": str(cfg)}
         for t, b, cfg in server.reconfig_log
     ]
-    rep["instances"] = instance_report(server.workers_ever, now)
+    rep["instances"] = instance_report(
+        server.workers_ever, now, engine=server.dispatcher.engine_name)
+    rep["fastpath"] = server.dispatcher.fastpath_report()
 
 
 def _static_optimizer(model: ProfileModel, units: int, max_batch: int
@@ -231,8 +238,8 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
                    until=duration + drain)
     if engine == "fast":
         # bulk feed: arrivals stream through the vectorized trace path
-        # (batch-sync dispatch absorbs them columnar; continuous falls
-        # back to exact single-arrival processing inside the FastLoop)
+        # (batch-sync and continuous dispatch both absorb columnar;
+        # anything unprovable falls back to exact per-arrival replay)
         metrics.on_requests(len(arrivals))
         feed_single_model_trace(server, arrivals)
     else:
@@ -485,9 +492,16 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
     drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
     metrics.attach_fabric(router, sample_interval=min(0.25, duration / 100.0),
                           until=duration + drain)
-    for i, t in enumerate(arrivals):
-        metrics.on_request(Request(i, t))
-        loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
+    if engine == "fast":
+        # bulk feed: arrivals stream through the vectorized fabric path
+        # (P2C routing + admission replayed on array slices between heap
+        # events); fabric events still land as exact heap events below
+        metrics.on_requests(len(arrivals))
+        feed_fabric_trace(router, arrivals)
+    else:
+        for i, t in enumerate(arrivals):
+            metrics.on_request(Request(i, t))
+            loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
     for ev in events:
         action = {"fail": router.fail_node, "drain": router.drain_node}[ev.action]
         loop.at(ev.at_frac * duration,
@@ -503,8 +517,10 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
                         "node": ev.node} for ev in events]
     for node in router.nodes:
         fleet["per_node"][node.node_id]["instances"] = instance_report(
-            node.server.workers_ever, loop.now)
+            node.server.workers_ever, loop.now,
+            engine=node.server.dispatcher.engine_name)
     rep["fleet"] = fleet
+    rep["fastpath"] = router.fastpath_report()
     fallback_count = sum(spec.backend.fallback_report()["count"]
                          for spec in specs)
     if fallback_count:
@@ -625,14 +641,22 @@ def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
     drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
     metrics.attach(server, sample_interval=min(0.25, duration / 100.0),
                    until=duration + drain)
-    # merge the per-model traces into one deterministic arrival timeline
-    merged = sorted((t, k, tid)
-                    for k, tid in enumerate(tenant_ids)
-                    for t in traces[tid])
-    for i, (t, _, tid) in enumerate(merged):
-        req = Request(i, t, model_id=tid)
-        metrics.on_request(req)
-        loop.at(t, (lambda req=req: server.submit(req)))
+    if engine == "fast":
+        # bulk feed: per-tenant traces stream through the vectorized
+        # multi-model path (offered counts are order-independent, so
+        # per-tenant bulk accounting matches the merged-timeline walk)
+        for tid in tenant_ids:
+            metrics.on_requests(len(traces[tid]), model_id=tid)
+        feed_multi_model_trace(server, traces)
+    else:
+        # merge the per-model traces into one deterministic arrival timeline
+        merged = sorted((t, k, tid)
+                        for k, tid in enumerate(tenant_ids)
+                        for t in traces[tid])
+        for i, (t, _, tid) in enumerate(merged):
+            req = Request(i, t, model_id=tid)
+            metrics.on_request(req)
+            loop.at(t, (lambda req=req: server.submit(req)))
     loop.run_until(duration + drain)
 
     rep = metrics.report(duration=duration)
@@ -658,7 +682,9 @@ def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
         }
         for tid in tenant_ids
     }
-    rep["instances"] = instance_report(server.workers_ever, loop.now)
+    rep["fastpath"] = server.fastpath_report()
+    rep["instances"] = instance_report(
+        server.workers_ever, loop.now, engine=rep["fastpath"]["engine"])
     return rep
 
 
@@ -966,7 +992,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                 slo_factor=args.slo_factor,
                 reconfigure_timeout=args.reconfigure_timeout,
                 dispatches=dispatches, interference=args.interference,
-                slo_ms=args.slo_ms)
+                slo_ms=args.slo_ms, engine=engine)
             report["scenarios"][sc.name] = result
             parts = []
             for key in keys:
@@ -1014,7 +1040,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                 max_batch=args.max_batch, slo_factor=args.slo_factor,
                 reconfigure_timeout=args.reconfigure_timeout,
                 dispatches=dispatches, interference=args.interference,
-                slo_ms=args.slo_ms)
+                slo_ms=args.slo_ms, engine=engine)
             report["scenarios"][sc.name] = result
             parts = []
             for key in keys:
@@ -1053,7 +1079,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             max_batch=args.max_batch, slo_factor=args.slo_factor,
             reconfigure_timeout=args.reconfigure_timeout,
             dispatches=dispatches, interference=args.interference,
-            slo_ms=args.slo_ms)
+            slo_ms=args.slo_ms, engine=engine)
         report["scenarios"][sc.name] = result
 
         def fmt(ms):

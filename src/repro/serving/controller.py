@@ -114,10 +114,10 @@ class ModelTenant:
         # a block-capable dispatcher (fast plane) delivers completions as
         # per-sub-batch blocks; adopt its block log as the response sink.
         # Callers that installed their own per-response hook (the cluster
-        # fabric, the multi-model server) keep the exact per-item path.
-        attach_block_log = getattr(self.dispatcher, "attach_block_log", None)
-        if attach_block_log is not None and self._extra_on_response is None:
-            self.responses = attach_block_log()
+        # fabric, the multi-model server) keep the exact per-item path
+        # unless they opt into blocks via :meth:`adopt_block_sink`.
+        if self._extra_on_response is None:
+            self.adopt_block_sink()
         self.calibrator = calibrator
         self.calibration_refreshes = 0
         if calibrator is not None:
@@ -184,6 +184,31 @@ class ModelTenant:
         self.responses.append(resp)
         if self._extra_on_response is not None:
             self._extra_on_response(resp)
+
+    def adopt_block_sink(self, on_block=None) -> bool:
+        """Switch a block-capable dispatcher to block-granular delivery.
+
+        The dispatcher's fresh :class:`~repro.serving.fastsim.ResponseLog`
+        becomes this tenant's ``responses`` sink (list-compatible, so all
+        report code runs unchanged).  ``on_block``, when given, is called
+        with every delivered block *after* it lands in the tenant log —
+        the aggregation hook for the multi-model server and the cluster
+        fabric, which replace their per-response ``on_response`` chains
+        with a block chain of identical delivery order.  Returns False
+        (and changes nothing) when the dispatcher has no block surface
+        (legacy engine), letting callers fall back to the per-item path.
+        """
+        attach = getattr(self.dispatcher, "attach_block_log", None)
+        if attach is None:
+            return False
+        log = attach()
+        self.responses = log
+        if on_block is not None:
+            def chained(block, _log=log, _cb=on_block):
+                _log.append_block(block)
+                _cb(block)
+            self.dispatcher.on_response_block = chained
+        return True
 
     # ------------------------------------------------------------------ #
     # control loop (driven by the owning server's periodic tick)

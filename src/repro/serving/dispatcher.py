@@ -75,6 +75,15 @@ class Dispatcher:
     in-flight copy could still deliver them.
     """
 
+    # which simulation core runs this dispatcher: "event" for the
+    # event-at-a-time oracle, "fast" for the vectorized engines in
+    # repro.serving.fastsim — surfaced per instance/tenant/node by
+    # MetricsCollector.instance_report and fastpath_report so a silent
+    # legacy fallback is visible to operators
+    engine_name = "event"
+    # whether completions can be delivered as ResponseBlocks
+    supports_blocks = False
+
     def __init__(self, loop: EventLoop, config: PackratConfig,
                  instances: Sequence[WorkerInstance],
                  on_response: Callable[[Response], None],
@@ -109,6 +118,11 @@ class Dispatcher:
         self.timeouts_fired = 0
         self.redispatches = 0
         self.batches_dispatched = 0
+        # fast-path accounting (always present so reports are uniform):
+        # arrivals bulk-absorbed by a trace feed vs. delivered through
+        # the one-at-a-time exact path.  The event engine never absorbs.
+        self.fast_absorbed = 0
+        self.fast_one_by_one = 0
         self.policy = policy or BatchSyncPolicy()
         self.policy.bind(self)
         self.set_config(config, instances)
@@ -167,6 +181,18 @@ class Dispatcher:
     def estimated_extra_drain(self, now: float) -> float:
         """Extra drain time for queued per-instance work (0 for sync)."""
         return self.policy.extra_drain(now)
+
+    def fastpath_report(self) -> Dict[str, object]:
+        """Which engine served this tenant and how much of the trace the
+        fast path absorbed in bulk — the operator's check that a mode is
+        actually accelerated (a fast engine whose every arrival went
+        one-by-one is running at oracle speed)."""
+        return {
+            "engine": self.engine_name,
+            "accelerated": self.engine_name == "fast",
+            "absorbed": self.fast_absorbed,
+            "one_by_one": self.fast_one_by_one,
+        }
 
     # ------------------------------------------------------------------ #
     # execution (shared by all policies)

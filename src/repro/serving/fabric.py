@@ -52,6 +52,8 @@ import dataclasses
 import random
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from ..core.estimator import ArrivalRateSignal
 from ..core.knapsack import PackratOptimizer
 from ..core.multimodel import solve_with_slo
@@ -205,6 +207,7 @@ class ClusterRouter:
         self.slo_deadline = slo_deadline
         self._rng = random.Random(self.fcfg.p2c_seed)
         self.on_response: Optional[Callable[[Response], None]] = None
+        self.on_response_block = None       # block twin (fast plane)
         self.on_shed: Optional[Callable[[Shed], None]] = None
         self.responses: List[Response] = []
         self.sheds: List[Shed] = []
@@ -213,8 +216,13 @@ class ClusterRouter:
         self.drains = 0
         self.failovers = 0
         self.duplicates_suppressed = 0
+        self.fast_absorbed = 0          # trace arrivals routed passively
+        self.fast_one_by_one = 0        # trace arrivals via submit()
         self._delivered: set = set()
         self.degrade_log: List[Tuple[float, str, str]] = []
+        # homogeneous fleets re-derive the same overload plan per node;
+        # memoise by planning inputs so N identical nodes solve once
+        self._plan_memo: Dict[tuple, Tuple[int, float]] = {}
 
         self.nodes: List[FabricNode] = []
         for k, spec in enumerate(specs):
@@ -232,7 +240,26 @@ class ClusterRouter:
             node = FabricNode(k, node_id, server)
             self._plan_node(node, spec.optimizer)
             self.nodes.append(node)
+        self._adopt_block_sinks()
         self.loop.schedule(self.fcfg.router_tick_interval, self._tick)
+
+    def _adopt_block_sinks(self) -> None:
+        """When every node's dispatcher is block-capable (fast plane),
+        switch fleet delivery to block granularity: each node's tenant
+        adopts its block log and chains whole blocks into the router's
+        exactly-once handler, which checks the fleet delivered-set per
+        block and falls back to the per-response path the moment any id
+        in a block has already been delivered elsewhere (failover
+        duplicates)."""
+        if not all(getattr(n.server.dispatcher, "supports_blocks", False)
+                   for n in self.nodes):
+            return
+        from .fastsim import ResponseLog    # deferred: fastsim is optional
+        self.responses = ResponseLog()
+        for n in self.nodes:
+            n.server.adopt_block_sink(
+                lambda block, node=n:
+                self._on_node_response_block(node, block))
 
     # ------------------------------------------------------------------ #
     # per-node overload plan (computed once, from the planning profile)
@@ -246,31 +273,38 @@ class ClusterRouter:
         feasible batch and depths fall back to batch multiples."""
         fcfg = self.fcfg
         units = self.units_per_node
-        best_b, best_thr = 1, 0.0
-        b = 1
-        while True:
-            try:
-                cfg = opt.solve(units, b)
-            except ValueError:
-                break
-            if cfg.throughput > best_thr:
-                best_thr, best_b = cfg.throughput, b
-            b *= 2
-        if self.slo_deadline is not None:
-            budget = fcfg.slo_latency_share * self.slo_deadline
-            got = solve_with_slo(opt, units, budget)
-            if got is not None:
-                node.b_deg = got[0]
-                node.thr_deg = got[1].throughput
-            else:
-                # even B=1 misses the service budget: admit at the B=1
-                # rate and let the wait budget (possibly negative-free)
-                # shed the rest
-                node.b_deg = 1
-                node.thr_deg = opt.solve(units, 1).throughput
+        memo_key = (units, opt.allow_unused_threads, opt.dispatch_overhead,
+                    frozenset(opt.profile.items()))
+        memo = self._plan_memo.get(memo_key)
+        if memo is not None:
+            node.b_deg, node.thr_deg = memo
         else:
-            node.b_deg = best_b
-            node.thr_deg = best_thr
+            best_b, best_thr = 1, 0.0
+            b = 1
+            while True:
+                try:
+                    cfg = opt.solve(units, b)
+                except ValueError:
+                    break
+                if cfg.throughput > best_thr:
+                    best_thr, best_b = cfg.throughput, b
+                b *= 2
+            if self.slo_deadline is not None:
+                budget = fcfg.slo_latency_share * self.slo_deadline
+                got = solve_with_slo(opt, units, budget)
+                if got is not None:
+                    node.b_deg = got[0]
+                    node.thr_deg = got[1].throughput
+                else:
+                    # even B=1 misses the service budget: admit at the
+                    # B=1 rate and let the wait budget (possibly
+                    # negative-free) shed the rest
+                    node.b_deg = 1
+                    node.thr_deg = opt.solve(units, 1).throughput
+            else:
+                node.b_deg = best_b
+                node.thr_deg = best_thr
+            self._plan_memo[memo_key] = (node.b_deg, node.thr_deg)
         node.admission_rps = fcfg.admission_rate_factor * node.thr_deg
         node.bucket = TokenBucket(
             node.admission_rps, fcfg.admission_burst_batches * node.b_deg)
@@ -373,6 +407,31 @@ class ClusterRouter:
         if self.on_response is not None:
             self.on_response(resp)
 
+    def _on_node_response_block(self, node: FabricNode, block) -> None:
+        """Block-granular exactly-once delivery (fast plane): the whole
+        sub-batch clears the per-node pending map and joins the fleet
+        delivered-set in one pass.  Any already-delivered id in the
+        block (a failed-over request completing on two paths) drops the
+        block to the exact per-response handler, so duplicate accounting
+        is byte-identical to the event engine."""
+        ids = block.ids.tolist()
+        if not self._delivered.isdisjoint(ids):
+            for resp in block.responses():
+                self._on_node_response(node, resp)
+            return
+        pending = node.pending
+        for rid in ids:
+            pending.pop(rid, None)
+        self._delivered.update(ids)
+        node.delivered += len(ids)
+        block.node_id = node.node_id
+        self.responses.append_block(block)
+        if self.on_response_block is not None:
+            self.on_response_block(block)
+        elif self.on_response is not None:
+            for resp in block.responses():
+                self.on_response(resp)
+
     @property
     def queue_depth(self) -> int:
         """Aggregate undispatched requests across live nodes (metrics
@@ -468,8 +527,13 @@ class ClusterRouter:
             if not w.failed:
                 w.fail()
         node.server.dispatcher.reclaim_undispatched()   # clear dead queues
-        orphans = sorted(node.pending.values(),
-                         key=lambda r: (r.arrival, r.id))
+        # the fast trace feed stores bare arrival times in the pending
+        # map; requests are frozen value types, so rebuilding them here
+        # is identity-free and the (arrival, id) order is unchanged
+        orphans = sorted(
+            (req if isinstance(req, Request) else Request(rid, req)
+             for rid, req in node.pending.items()),
+            key=lambda r: (r.arrival, r.id))
         node.pending.clear()
         self.failovers += len(orphans)
         for req in orphans:
@@ -479,6 +543,20 @@ class ClusterRouter:
     # ------------------------------------------------------------------ #
     # reporting
     # ------------------------------------------------------------------ #
+    def fastpath_report(self) -> Dict[str, object]:
+        """Fleet-level fast-engine coverage: router trace counters plus
+        every node dispatcher's own :meth:`fastpath_report`.  ``engine``
+        is ``"fast"`` only when every node runs a vectorized dispatcher
+        — a silent legacy fallback on any node shows up here."""
+        per_node = {n.node_id: n.server.dispatcher.fastpath_report()
+                    for n in self.nodes}
+        fast = all(r["engine"] == "fast" for r in per_node.values())
+        return {"engine": "fast" if fast else "event",
+                "accelerated": fast,
+                "absorbed": self.fast_absorbed,
+                "one_by_one": self.fast_one_by_one,
+                "per_node": per_node}
+
     def fleet_report(self, now: float) -> Dict[str, object]:
         """JSON-serializable fleet section: routing/overload counters
         plus a per-node breakdown (the per-instance report is appended
@@ -519,5 +597,336 @@ class ClusterRouter:
         }
 
 
+# --------------------------------------------------------------------- #
+# fast trace feeding
+# --------------------------------------------------------------------- #
+def feed_fabric_trace(router: ClusterRouter, arrivals, *,
+                      id_offset: int = 0) -> int:
+    """Attach an arrival trace to a :class:`ClusterRouter` on a
+    :class:`~repro.serving.fastsim.FastLoop` (ids in trace order, the
+    legacy driver's ``enumerate``).
+
+    Between heap events the absorber replays the router's per-request
+    pipeline — the power-of-two-choices sample (the real RNG draw, so
+    the Mersenne stream stays byte-identical), the picked node's λ̂
+    observation and admission-token charge (both inlined into local
+    floats and flushed on every window exit), then the degrade/shed
+    checks — and delivers passive arrivals straight into the picked
+    node's absorption window.  Only the *picked* node ever matters: an
+    arrival the picked node must observe (a full batch meeting an idle
+    worker, a degrade-mode engagement) is completed inline through the
+    exact :meth:`FabricNodeServer.submit` machinery and ends the window,
+    so one loaded node never forces the whole fleet onto the per-event
+    path.  Degrade/shed/drain/fail transitions happen in heap events,
+    which bound every window.  Returns the number of arrivals fed.
+    """
+    from .fastsim import (FastLoop,     # deferred: fastsim is optional
+                          _SyncAbsorbWindow)
+    loop = router.plane.loop
+    if not isinstance(loop, FastLoop):
+        raise TypeError("feed_fabric_trace needs a FastLoop router")
+    times = np.ascontiguousarray(arrivals, dtype=np.float64)
+    n = int(times.size)
+    rng = router._rng
+    sample = rng.sample
+    # a plain Random's sample(seq, 2) consumes exactly _randbelow(n)
+    # then _randbelow(n-1) from getrandbits — replay that inline (a
+    # subclass could override the internals, so gate on the exact type)
+    grb = rng.getrandbits if type(rng) is random.Random else None
+    submit = router.submit
+    shed = router._shed
+
+    def arrive_one(i, t):
+        router.fast_one_by_one += 1
+        submit(Request(id_offset + i, t))
+
+    def absorber(ts, cur, k_bound):
+        cands = [nd for nd in router.nodes if nd.routable]
+        ts_l = ts[cur:k_bound].tolist()
+        consumed = 0
+        if not cands:
+            # every arrival in the window is a deterministic no-node
+            # shed — Shed records carry the arrival time, exactly what
+            # the per-event path would have stamped
+            for t in ts_l:
+                router.offered += 1
+                shed(Request(id_offset + cur + consumed, t), None,
+                     "no-node", t)
+                consumed += 1
+            router.fast_absorbed += consumed
+            return consumed
+        n_cands = len(cands)
+        wins = []
+        depths = []
+        lat_eff = []
+        tbs = []
+        routed_add = []
+        pendings = []
+        dg_dep, sh_dep, dg_on = [], [], []
+        # λ̂ / bucket state as locals; `flush` writes them back on every
+        # window exit (heap events and the exact paths read the objects)
+        r_last, r_mg, r_alpha = [], [], []
+        b_tok, b_last, b_rate, b_burst = [], [], [], []
+        # batch-sync windows get fully inlined: frozen policy state as
+        # parallel lists, absorbed ids/arrivals buffered per node and
+        # bulk-appended on window exit; any other window type keeps the
+        # generic peek_one/absorb_one protocol
+        w_sync = []
+        w_qlen, w_B, w_ta, w_wa = [], [], [], []
+        w_live, w_maxb, w_busys, w_pol, w_to = [], [], [], [], []
+        buf_i, buf_t = [], []
+        for nd in cands:
+            d = nd.server.dispatcher
+            begin = getattr(d, "begin_absorb_window", None)
+            win = begin() if begin is not None else None
+            if win is None:
+                return 0        # legacy dispatcher / unusable state
+            wins.append(win)
+            depths.append(d.queue_depth)
+            lat = d.config.latency
+            cal = nd.server.calibrator
+            if cal is not None:
+                lat *= cal.global_ratio
+            lat_eff.append(lat)
+            tbs.append(max(1, d.config.total_batch))
+            routed_add.append(0)
+            pendings.append(nd.pending)
+            dg_dep.append(nd.degrade_depth)
+            sh_dep.append(nd.shed_depth)
+            dg_on.append(nd.degraded)
+            sig = nd.rate
+            r_last.append(sig._last)
+            r_mg.append(sig._mean_gap)
+            r_alpha.append(sig.alpha)
+            bk = nd.bucket
+            b_tok.append(bk.tokens)
+            b_last.append(bk._last)
+            b_rate.append(bk.rate)
+            b_burst.append(bk.burst)
+            sync = type(win) is _SyncAbsorbWindow
+            w_sync.append(sync)
+            w_qlen.append(win.qlen if sync else 0)
+            w_B.append(win.B if sync else 0)
+            w_ta.append(win.timeout_armed if sync else False)
+            w_wa.append(win.wakeup_armed if sync else False)
+            w_live.append(win.has_live if sync else False)
+            w_maxb.append(win.max_busy if sync else 0.0)
+            w_busys.append(win.busys if sync else ())
+            w_pol.append(d.policy)
+            w_to.append(d.dcfg.batch_timeout if sync else 0.0)
+            buf_i.append([])
+            buf_t.append([])
+        indices = {nd.index: m for m, nd in enumerate(cands)}
+        if grb is not None and n_cands > 2:
+            kb1 = n_cands.bit_length()
+            ncm1 = n_cands - 1
+            kb2 = ncm1.bit_length()
+        loop_at = loop.at
+
+        def flush():
+            for m, nd in enumerate(cands):
+                sig = nd.rate
+                sig._last = r_last[m]
+                sig._mean_gap = r_mg[m]
+                bk = nd.bucket
+                bk.tokens = b_tok[m]
+                bk._last = b_last[m]
+                nd.routed += routed_add[m]
+                bi = buf_i[m]
+                if bi:
+                    d = nd.server.dispatcher
+                    d.queue.extend_arrays(
+                        np.array(bi, dtype=np.int64),
+                        np.array(buf_t[m], dtype=np.float64))
+                    d.fast_absorbed += len(bi)
+                    buf_i[m] = []
+                    buf_t[m] = []
+
+        rid = id_offset + cur
+        for t in ts_l:
+            # replay submit() exactly: offered, P2C, λ̂, admission,
+            # overload checks, then delivery — passive into the window,
+            # or exact through the node server when it must observe
+            if n_cands > 2:
+                if grb is not None:
+                    # random.sample(cands, 2): pool pick via
+                    # _randbelow(n) then _randbelow(n - 1)
+                    j1 = grb(kb1)
+                    while j1 >= n_cands:
+                        j1 = grb(kb1)
+                    j2 = grb(kb2)
+                    while j2 >= ncm1:
+                        j2 = grb(kb2)
+                    m2 = ncm1 if j2 == j1 else j2
+                    s1 = lat_eff[j1] * (1.0 + depths[j1] / tbs[j1])
+                    s2 = lat_eff[m2] * (1.0 + depths[m2] / tbs[m2])
+                    # cands is in node-index order: ties break low-m
+                    if s2 < s1 or (s2 == s1 and m2 < j1):
+                        bm = m2
+                    else:
+                        bm = j1
+                else:
+                    pair = sample(cands, 2)
+                    m1 = indices[pair[0].index]
+                    m2 = indices[pair[1].index]
+                    s1 = lat_eff[m1] * (1.0 + depths[m1] / tbs[m1])
+                    s2 = lat_eff[m2] * (1.0 + depths[m2] / tbs[m2])
+                    if s2 < s1 or (s2 == s1 and m2 < m1):
+                        bm = m2
+                    else:
+                        bm = m1
+            else:
+                bm = 0
+                bscore = lat_eff[0] * (1.0 + depths[0] / tbs[0])
+                for m in range(1, n_cands):
+                    score = lat_eff[m] * (1.0 + depths[m] / tbs[m])
+                    if score < bscore:
+                        bm, bscore = m, score
+            # ArrivalRateSignal.observe(t), inlined
+            last = r_last[bm]
+            if last is not None:
+                gap = t - last
+                if gap < 1e-9:
+                    gap = 1e-9
+                mg = r_mg[bm]
+                if mg is None:
+                    r_mg[bm] = gap
+                else:
+                    a = r_alpha[bm]
+                    r_mg[bm] = a * gap + (1.0 - a) * mg
+            r_last[bm] = t
+            # TokenBucket.take(t), inlined
+            brate = b_rate[bm]
+            if brate > 0.0:
+                el = t - b_last[bm]
+                if el < 0.0:
+                    el = 0.0
+                b_last[bm] = t
+                tok = b_tok[bm] + el * brate
+                burst = b_burst[bm]
+                if tok > burst:
+                    tok = burst
+                if tok >= 1.0:
+                    b_tok[bm] = tok - 1.0
+                else:
+                    b_tok[bm] = tok
+                    shed(Request(rid, t), cands[bm], "admission", t)
+                    rid += 1
+                    consumed += 1
+                    continue
+            depth = depths[bm]
+            if depth >= dg_dep[bm] and not dg_on[bm]:
+                # engaging degrade reconfigures the node: flush, advance
+                # the clock to the arrival (the oracle runs this inside
+                # the arrival event), run submit()'s tail exactly, and
+                # end the window
+                best = cands[bm]
+                flush()
+                router.offered += consumed + 1
+                if t > loop.now:
+                    loop.now = t
+                router._engage_degrade(best, t)
+                if best.degraded and depth >= best.shed_depth:
+                    shed(Request(rid, t), best, "queue", t)
+                else:
+                    best.routed += 1
+                    best.pending[rid] = t
+                    best.server.submit(Request(rid, t))
+                consumed += 1
+                router.fast_absorbed += consumed
+                return consumed
+            if dg_on[bm] and depth >= sh_dep[bm]:
+                shed(Request(rid, t), cands[bm], "queue", t)
+                rid += 1
+                consumed += 1
+                continue
+            if w_sync[bm]:
+                ql = w_qlen[bm]
+                armed = False
+                if ql + 1 < w_B[bm]:
+                    if not w_ta[bm]:
+                        # on_arrival's timeout-arming branch, now == t
+                        pol = w_pol[bm]
+                        pol._timeout_armed = True
+                        loop_at(t + w_to[bm], pol._on_timeout)
+                        w_ta[bm] = True
+                        armed = True
+                elif (not w_live[bm]) or t < w_maxb[bm]:
+                    if not w_wa[bm]:
+                        # _try_dispatch's wake-up branch, now == t
+                        pol = w_pol[bm]
+                        if not w_live[bm]:
+                            pol._wakeup_at(t + w_to[bm])
+                        else:
+                            pol._wakeup_at(min(b for b in w_busys[bm]
+                                               if b > t))
+                        w_wa[bm] = True
+                        armed = True
+                else:
+                    # the picked node observes this arrival (a dispatch
+                    # fires): advance the clock and deliver through the
+                    # exact machinery — the heap changes, window ends
+                    best = cands[bm]
+                    flush()
+                    router.offered += consumed + 1
+                    if t > loop.now:
+                        loop.now = t
+                    best.routed += 1
+                    best.pending[rid] = t
+                    best.server.submit(Request(rid, t))
+                    consumed += 1
+                    router.fast_absorbed += consumed
+                    return consumed
+                routed_add[bm] += 1
+                pendings[bm][rid] = t
+                buf_i[bm].append(rid)
+                buf_t[bm].append(t)
+                w_qlen[bm] = ql + 1
+                depths[bm] = depth + 1
+                rid += 1
+                consumed += 1
+                if armed:
+                    # the node armed a timer: this window's bound may
+                    # be stale — stop and let the merge loop re-order
+                    flush()
+                    router.offered += consumed
+                    router.fast_absorbed += consumed
+                    return consumed
+            else:
+                win = wins[bm]
+                if win.peek_one(t):
+                    routed_add[bm] += 1
+                    pendings[bm][rid] = t
+                    win.absorb_one(rid, t)      # True: peek held
+                    depths[bm] = depth + 1
+                    rid += 1
+                    consumed += 1
+                    if win.armed_stop:
+                        flush()
+                        router.offered += consumed
+                        router.fast_absorbed += consumed
+                        return consumed
+                else:
+                    best = cands[bm]
+                    flush()
+                    router.offered += consumed + 1
+                    if t > loop.now:
+                        loop.now = t
+                    best.routed += 1
+                    best.pending[rid] = t
+                    best.server.submit(Request(rid, t))
+                    consumed += 1
+                    router.fast_absorbed += consumed
+                    return consumed
+        flush()
+        router.offered += consumed
+        router.fast_absorbed += consumed
+        return consumed
+
+    loop.add_trace(times, arrive_one, absorber=absorber)
+    return n
+
+
 __all__ = ["ClusterRouter", "FabricConfig", "FabricNode",
-           "FabricNodeServer", "FabricNodeSpec", "TokenBucket"]
+           "FabricNodeServer", "FabricNodeSpec", "TokenBucket",
+           "feed_fabric_trace"]

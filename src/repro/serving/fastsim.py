@@ -29,13 +29,29 @@ decision point byte-identical to the event-loop oracle:
   failure drops the affected flight back onto the inherited legacy
   per-id bookkeeping (watchdogs, redispatch, retirement), so the fault
   paths are literally the same code as the oracle.
+* :class:`FastContinuousDispatcher` / :class:`FastContinuousPolicy` —
+  the continuous-dispatch engine with its own absorption rule: an
+  arrival is passive when it routes to a *busy* worker's bounded queue
+  (a pure append), when an idle worker's coalesce timer is already
+  armed and the append stays under the fire threshold, or when every
+  bounded queue is full (the append stays central).  Timer arming is
+  replayed inline; an arrival that reaches the fire threshold on an
+  idle worker completes through the exact per-arrival code.
 * :class:`ResponseBlock` / :class:`ResponseLog` — completions delivered
   as one record per sub-batch instead of one object per request, with
   lazy materialization for consumers that want ``Response`` objects.
 * :class:`FastPlane` — a :class:`~repro.serving.plane.SimulatedPlane`
   over a :class:`FastLoop` whose ``make_dispatcher`` hook picks the
-  fast engine for batch-synchronous tenants (everything else gets the
-  legacy dispatcher and stays exact by construction).
+  fast engine for batch-synchronous *and* continuous-dispatch tenants
+  (custom policy subclasses get the legacy dispatcher and stay exact
+  by construction).
+
+Trace feeds cover every serving topology: single-model
+(:func:`feed_single_model_trace`), multi-tenant
+(:func:`feed_multi_model_trace`, per-tenant absorption windows over a
+merged columnar trace) and the cluster fabric
+(:func:`~repro.serving.fabric.feed_fabric_trace`, which replays the
+router's P2C/admission/degrade pipeline inline).
 
 Equivalence is enforced by tests/test_fast_plane.py: every registered
 scenario × dispatch policy × node count replays through both cores and
@@ -54,7 +70,7 @@ import numpy as np
 
 from .dispatcher import Dispatcher, DispatcherConfig
 from .plane import SimulatedPlane
-from .policy import BatchSyncPolicy
+from .policy import BatchSyncPolicy, ContinuousPolicy
 from .simulator import DEFAULT_MODEL, EventLoop, Request, Response
 
 
@@ -77,6 +93,9 @@ class ResponseBlock:
     instance_id: int
     redispatched: bool = False
     model_id: str = DEFAULT_MODEL
+    # set by the cluster fabric when the block crossed a router (mirrors
+    # Response.node_id); None on single-node paths
+    node_id: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self.ids)
@@ -88,10 +107,10 @@ class ResponseBlock:
         """Materialize the per-request objects (value-identical to what
         the legacy dispatcher would have delivered)."""
         comp, bs, wid = self.completion, self.batch_size, self.instance_id
-        rd, mid = self.redispatched, self.model_id
+        rd, mid, nid = self.redispatched, self.model_id, self.node_id
         return [Response(request=Request(rid, arr, model_id=mid),
                          completion=comp, batch_size=bs, instance_id=wid,
-                         redispatched=rd, model_id=mid)
+                         redispatched=rd, model_id=mid, node_id=nid)
                 for rid, arr in zip(self.ids.tolist(), self.arrivals.tolist())]
 
     @classmethod
@@ -101,7 +120,8 @@ class ResponseBlock:
                                      dtype=np.float64),
                    completion=resp.completion, batch_size=resp.batch_size,
                    instance_id=resp.instance_id,
-                   redispatched=resp.redispatched, model_id=resp.model_id)
+                   redispatched=resp.redispatched, model_id=resp.model_id,
+                   node_id=resp.node_id)
 
 
 class ResponseLog:
@@ -199,6 +219,15 @@ class ColumnQueue:
             self._make_room(1)
         self._ids[self._tail] = req.id
         self._arr[self._tail] = req.arrival
+        self._tail += 1
+
+    def push(self, rid: int, arrival: float) -> None:
+        """Scalar append without materializing a :class:`Request` —
+        the per-arrival absorption paths' enqueue."""
+        if self._tail == self._cap:
+            self._make_room(1)
+        self._ids[self._tail] = rid
+        self._arr[self._tail] = arrival
         self._tail += 1
 
     def extend(self, reqs) -> None:
@@ -342,7 +371,12 @@ class FastLoop(EventLoop):
     def _consume_arrivals(self, tr: _Trace, bound: float, side: str) -> None:
         k_bound = int(np.searchsorted(tr.times, bound, side=side))
         heap = self._heap
+        head = heap[0][:2] if heap else None
         while tr.cursor < k_bound:
+            if heap and (head is None or heap[0][:2] != head):
+                # an absorber armed a timer ahead of the old bound: the
+                # window is stale — re-merge against the new heap head
+                return
             k = 0
             if tr.absorber is not None:
                 k = tr.absorber(tr.times, tr.cursor, k_bound)
@@ -442,9 +476,9 @@ class FastBatchSyncPolicy(BatchSyncPolicy):
             cursor = end
 
 
-class FastSyncDispatcher(Dispatcher):
-    """The :class:`~repro.serving.dispatcher.Dispatcher` with columnar
-    queueing, flight-based execution and block delivery.
+class _FastBlockDispatcher(Dispatcher):
+    """Shared core of the vectorized dispatchers: columnar central
+    queue, flight-based execution and block delivery.
 
     The external surface (``on_request``/``set_config``/``take_signal``
     /``queue_depth``/``reclaim_undispatched``/counters) is inherited, so
@@ -455,6 +489,8 @@ class FastSyncDispatcher(Dispatcher):
     """
 
     supports_blocks = True
+    engine_name = "fast"
+    _policy_cls: type = None        # set by subclasses
 
     def __init__(self, loop, config, instances,
                  on_response: Callable[[Response], None],
@@ -463,11 +499,11 @@ class FastSyncDispatcher(Dispatcher):
                  peer_live=None) -> None:
         self.on_response_block = None
         if policy is None:
-            policy = FastBatchSyncPolicy()
-        if not isinstance(policy, FastBatchSyncPolicy):
-            raise TypeError("FastSyncDispatcher requires a "
-                            "FastBatchSyncPolicy (other policies use the "
-                            "legacy Dispatcher)")
+            policy = self._policy_cls()
+        if not isinstance(policy, self._policy_cls):
+            raise TypeError(f"{type(self).__name__} requires a "
+                            f"{self._policy_cls.__name__} (other policies "
+                            f"use the legacy Dispatcher)")
         super().__init__(loop, config, instances, on_response, dcfg,
                          policy=policy, model_id=model_id,
                          peer_live=peer_live)
@@ -581,6 +617,13 @@ class FastSyncDispatcher(Dispatcher):
             prev = ra.get(rid, 0.0)
             ra[rid] = deadline if deadline > prev else prev
 
+
+class FastSyncDispatcher(_FastBlockDispatcher):
+    """The batch-synchronous vectorized dispatcher (PR 6): columnar
+    queueing plus the sync-policy absorption rule below."""
+
+    _policy_cls = FastBatchSyncPolicy
+
     # ------------------------------------------------------------------ #
     # bulk-arrival absorption
     # ------------------------------------------------------------------ #
@@ -625,6 +668,524 @@ class FastSyncDispatcher(Dispatcher):
         return int(np.searchsorted(times[cur:k_bound], max_busy,
                                    side="left"))
 
+    # ------------------------------------------------------------------ #
+    def arm_and_absorb_one(self, times: np.ndarray, cur: int) -> int:
+        """When :meth:`absorption_capacity` declines only because a
+        timer is unarmed, arm it exactly as the policy would (identical
+        event time and callback, one heap push) and absorb the arming
+        arrival.  The caller's window may now be bounded by the new
+        timer — :meth:`FastLoop._consume_arrivals` re-merges when the
+        heap head changes, and the per-arrival windows set
+        ``armed_stop`` so multi-tenant feeds stop theirs.  Returns 1 if
+        the arrival was armed-and-absorbed, else 0 (a genuine dispatch:
+        the arrival must run exact)."""
+        pol = self.policy
+        t0 = float(times[cur])
+        if len(self.queue) + 1 < self.batch_size:
+            if pol._timeout_armed:
+                return 0
+            pol._timeout_armed = True
+            self.loop.at(t0 + self.dcfg.batch_timeout, pol._on_timeout)
+            return 1
+        if pol._wakeup_armed:
+            return 0            # an idle instance set: dispatch fires
+        live = self._live()
+        if not live:
+            pol._wakeup_at(t0 + self.dcfg.batch_timeout)
+            return 1
+        busy = [w.busy_until for w in live if w.busy_until > t0]
+        if len(busy) < len(live):
+            return 0            # an idle worker: dispatch fires
+        pol._wakeup_at(min(busy))
+        return 1
+
+    def trace_absorber(self, ids: np.ndarray):
+        """The bulk absorber closure for a single-tenant trace feed
+        (``ids`` are this dispatcher's request ids in trace order)."""
+        def absorber(ts, cur, k_bound, _self=self, _ids=ids):
+            k = _self.absorption_capacity(ts, cur, k_bound)
+            if k == 0:
+                k = _self.arm_and_absorb_one(ts, cur)
+            if k:
+                _self.queue.extend_arrays(_ids[cur:cur + k],
+                                          ts[cur:cur + k])
+                _self.fast_absorbed += k
+            return k
+        return absorber
+
+    def begin_absorb_window(self):
+        """A per-arrival absorption view valid until the next heap
+        event (the multi-tenant/fabric feeds interleave arrivals across
+        dispatchers, so they absorb one arrival at a time)."""
+        return _SyncAbsorbWindow(self)
+
+
+class _SyncAbsorbWindow:
+    """Per-arrival form of :meth:`FastSyncDispatcher.absorption_capacity`
+    over a window in which worker/timer state is frozen (both only
+    change inside heap events, which bound every window).
+
+    An arrival that would only *arm* a timer (the partial-batch timeout,
+    or the all-busy wake-up) is absorbed too: the arming is a single
+    deterministic heap push at a time derived from the arrival and the
+    frozen worker state, so the window replays it exactly and flags
+    ``armed_stop`` — the feed must stop this window (its bound may now
+    be stale) and let the merge loop re-establish ordering."""
+
+    __slots__ = ("d", "pol", "queue", "qlen", "B", "timeout_armed",
+                 "wakeup_armed", "has_live", "max_busy", "busys",
+                 "armed_stop")
+
+    def __init__(self, d: FastSyncDispatcher) -> None:
+        pol = d.policy
+        self.d = d
+        self.pol = pol
+        self.queue = d.queue
+        self.qlen = len(d.queue)
+        self.B = d.batch_size
+        self.timeout_armed = pol._timeout_armed
+        self.wakeup_armed = pol._wakeup_armed
+        live = d._live()
+        self.has_live = bool(live)
+        self.busys = [w.busy_until for w in live]
+        self.max_busy = max(self.busys) if live else 0.0
+        self.armed_stop = False
+
+    def peek_one(self, t: float) -> bool:
+        """Would an arrival at ``t`` be absorbable (no mutation; an
+        arm-only arrival counts — :meth:`absorb_one` replays the arm)?"""
+        if self.qlen + 1 < self.B:
+            return True
+        return (not self.has_live) or t < self.max_busy
+
+    def absorb_one(self, rid: int, t: float) -> bool:
+        if self.qlen + 1 < self.B:
+            if not self.timeout_armed:
+                # on_arrival's arming branch, with now == t
+                self.pol._timeout_armed = True
+                self.d.loop.at(t + self.d.dcfg.batch_timeout,
+                               self.pol._on_timeout)
+                self.timeout_armed = True
+                self.armed_stop = True
+        elif (not self.has_live) or t < self.max_busy:
+            if not self.wakeup_armed:
+                # _try_dispatch's wake-up branch, with now == t
+                if not self.has_live:
+                    self.pol._wakeup_at(t + self.d.dcfg.batch_timeout)
+                else:
+                    self.pol._wakeup_at(min(b for b in self.busys
+                                            if b > t))
+                self.wakeup_armed = True
+                self.armed_stop = True
+        else:
+            return False
+        self.queue.push(rid, t)
+        self.qlen += 1
+        self.d.fast_absorbed += 1
+        return True
+
+
+# --------------------------------------------------------------------- #
+# the fast continuous engine
+# --------------------------------------------------------------------- #
+class FastContinuousPolicy(ContinuousPolicy):
+    """:class:`~repro.serving.policy.ContinuousPolicy` moving requests
+    as array slices.
+
+    Decision logic (candidate choice by expected wait, per-instance
+    bounds, coalescing, reclaim, the Little's-law signal) is inherited
+    unchanged; per-instance queues become :class:`ColumnQueue`s (adopted
+    at every config change), the central→instance move is a slice copy,
+    and firing goes through ``_execute_block``."""
+
+    def _adopt_queues(self) -> None:
+        for w in self.d.instances:
+            if not isinstance(w.queue, ColumnQueue):
+                cq = ColumnQueue(self.model_id)
+                if w.queue:
+                    cq.extend(w.queue)
+                w.queue = cq
+
+    def on_config_change(self, old_instances) -> None:
+        self._adopt_queues()
+        super().on_config_change(old_instances)
+
+    def _route(self) -> None:
+        d = self.d
+        failed = [w for w in d.instances if w.failed and w.queue]
+        if failed:
+            self._reclaim(failed)
+        live = d._live()
+        if not live:
+            if d.queue and not self._wakeup_armed:
+                self._wakeup_armed = True
+
+                def wake():
+                    self._wakeup_armed = False
+                    self._route()
+
+                d.loop.at(d.loop.now + d.dcfg.batch_timeout, wake)
+            return
+        touched = {}
+        now = d.loop.now
+        queue = d.queue
+        while queue:
+            cands = [w for w in live if self._capacity(w) > 0]
+            if not cands:
+                break   # backpressure: all bounded queues are full
+            w = min(cands, key=lambda w: (self._expected_wait(w, now), w.id))
+            take = min(len(queue), self._capacity(w), max(1, w.batch))
+            ids, arrs = queue.pop_slice(take)
+            w.queue.extend_arrays(ids, arrs)
+            touched[w.id] = w
+        for wid in sorted(touched):
+            self._feed(touched[wid])
+
+    def _fire(self, worker, n: int) -> None:
+        d = self.d
+        wq = worker.queue
+        ids, arrs = wq.pop_slice(min(n, len(wq)))
+        d.batches_dispatched += 1
+        d._execute_block(worker, ids, arrs, worker.threads, 0)
+
+    # ------------------------------------------------------------------ #
+    def _absorb_signal(self, times: np.ndarray, cur: int,
+                       k_bound: int) -> None:
+        """Replay the per-arrival rate/outstanding bookkeeping for a
+        bulk-absorbed slice — the identical scalar recurrence
+        :meth:`~repro.core.estimator.ArrivalRateSignal.observe` runs, so
+        the EWMA state is bit-equal to the oracle's."""
+        rate = self.rate
+        alpha = rate.alpha
+        one_minus = 1.0 - alpha
+        last = rate._last
+        mg = rate._mean_gap
+        for t in times[cur:k_bound].tolist():
+            if last is not None:
+                gap = t - last
+                if gap < 1e-9:
+                    gap = 1e-9
+                mg = gap if mg is None else alpha * gap + one_minus * mg
+            last = t
+        rate._last = last
+        rate._mean_gap = mg
+        self._outstanding += k_bound - cur
+        if self._outstanding > self._outstanding_hw:
+            self._outstanding_hw = self._outstanding
+
+
+class _ContinuousAbsorbWindow:
+    """Per-arrival absorption view of a continuous-dispatch tenant.
+
+    The continuous rule (tentpole invariant): an arrival is passive only
+    when **no worker is idle** — an idle worker would fire or arm a
+    coalesce timer the moment the arrival routes to it — and, for the
+    backpressured tail, when **no bounded per-worker queue can accept
+    it** (then the append stays in the central queue and ``_route``
+    breaks without touching a worker).  Everything else (idle worker
+    chosen, reclaimable failed-worker work, a central queue that
+    contradicts the all-full invariant) declines and runs the exact
+    per-arrival code.
+
+    Candidate choice replays ``_route`` exactly: first live worker with
+    spare capacity minimizing ``(expected_wait, id)`` with strict-``<``
+    first-wins tie-breaking, expected wait computed with the same float
+    expression over worker state frozen inside the window.
+    """
+
+    __slots__ = ("d", "pol", "queue", "central", "has_live",
+                 "wakeup_armed", "wids", "busys", "batches", "pbls",
+                 "qlens", "caps", "wqs", "n_live", "usable",
+                 "armed_stop")
+
+    def __init__(self, d: "FastContinuousDispatcher") -> None:
+        self.d = d
+        self.pol = pol = d.policy
+        self.queue = d.queue
+        self.usable = False
+        self.armed_stop = False     # continuous absorption never arms
+        for w in d.instances:
+            if w.failed and w.queue:
+                return      # reclaim pending: exact path only
+        live = d._live()
+        self.has_live = bool(live)
+        self.wakeup_armed = pol._wakeup_armed
+        qf = pol.queue_factor
+        lat = d.config.latency
+        self.wids = [w.id for w in live]
+        self.busys = [w.busy_until for w in live]
+        self.batches = [max(1, w.batch) for w in live]
+        self.pbls = [(w.stats.busy_time / w.stats.batches)
+                     if w.stats.batches else lat for w in live]
+        self.qlens = [len(w.queue) for w in live]
+        self.caps = [qf * b - q
+                     for b, q in zip(self.batches, self.qlens)]
+        self.wqs = [w.queue for w in live]
+        self.n_live = len(live)
+        self.central = bool(d.queue)
+        if self.central and any(c > 0 for c in self.caps):
+            return          # violates the post-event invariant: stay exact
+        self.usable = True
+
+    def _best(self, t: float) -> int:
+        """Index of the candidate ``_route`` would pick for an arrival
+        at ``t`` (−1: no capacity anywhere — the arrival stays central)."""
+        best = -1
+        bw = 0.0
+        bid = 0
+        busys, caps, qlens = self.busys, self.caps, self.qlens
+        batches, pbls, wids = self.batches, self.pbls, self.wids
+        for m in range(self.n_live):
+            if caps[m] <= 0:
+                continue
+            wait = busys[m] - t
+            if wait < 0.0:
+                wait = 0.0
+            wait = wait + (qlens[m] / batches[m]) * pbls[m]
+            if best < 0 or wait < bw or (wait == bw and wids[m] < bid):
+                best = m
+                bw = wait
+                bid = wids[m]
+        return best
+
+    def _signal(self, t: float) -> None:
+        pol = self.pol
+        pol.rate.observe(t)
+        pol._outstanding += 1
+        if pol._outstanding > pol._outstanding_hw:
+            pol._outstanding_hw = pol._outstanding
+
+    def peek_one(self, t: float) -> bool:
+        """Would an arrival at ``t`` be absorbable (no mutation)?"""
+        if self.central:
+            return True
+        if not self.has_live:
+            return self.wakeup_armed
+        best = self._best(t)
+        if best < 0:
+            return True
+        return self.busys[best] > t
+
+    def absorb_one(self, rid: int, t: float) -> bool:
+        if self.central:
+            self.queue.push(rid, t)
+        elif not self.has_live:
+            if not self.wakeup_armed:
+                return False
+            self.queue.push(rid, t)
+        else:
+            best = self._best(t)
+            if best < 0:
+                # backpressure: every bounded queue is full, the append
+                # stays central — and stays there for the whole window
+                self.central = True
+                self.queue.push(rid, t)
+            elif self.busys[best] <= t:
+                return False    # idle worker: would fire/arm a coalesce
+            else:
+                self.wqs[best].push(rid, t)
+                self.qlens[best] += 1
+                self.caps[best] -= 1
+        self._signal(t)
+        self.d.fast_absorbed += 1
+        return True
+
+
+class FastContinuousDispatcher(_FastBlockDispatcher):
+    """The continuous-dispatch vectorized dispatcher: the shared block
+    core plus the continuous absorption rule (see
+    :class:`_ContinuousAbsorbWindow`)."""
+
+    _policy_cls = FastContinuousPolicy
+
+    # ------------------------------------------------------------------ #
+    def _absorb_run(self, ids: np.ndarray, times: np.ndarray, cur: int,
+                    k_bound: int) -> int:
+        """Absorb leading arrivals of ``times[cur:k_bound]``; two tiers:
+
+        * whole-window bulk when no worker can receive work at all (no
+          live worker with a wake-up armed, or every bounded queue full
+          — arrivals are then pure central appends);
+        * otherwise a tight per-arrival loop replaying the routing
+          decision over local parallel lists: the exact ``_best``
+          expected-wait expression, the exact EWMA/outstanding
+          recurrence replayed on locals, and per-worker pushes buffered
+          into plain lists.  Locals flush back to the real policy/queue
+          state at every exit, so heap events and the exact path always
+          see oracle state.
+
+        An arrival an idle worker would serve — the event the window
+        must not paper over — is completed *inline* through the exact
+        per-arrival machinery (``on_request`` with the merge loop's
+        clock advance), ending the window; the merge loop then re-orders
+        against whatever the dispatch scheduled.
+        """
+        pol = self.policy
+        queue = self.queue
+        for w in self.instances:
+            if w.failed and w.queue:
+                return 0        # reclaim pending: exact path only
+        live = self._live()
+        has_live = bool(live)
+        central = bool(queue)
+        qf = pol.queue_factor
+        batches = [max(1, w.batch) for w in live]
+        qlens = [len(w.queue) for w in live]
+        caps = [qf * b - q for b, q in zip(batches, qlens)]
+        any_cap = False
+        for c in caps:
+            if c > 0:
+                any_cap = True
+                break
+        if central and any_cap:
+            return 0            # violates the post-event invariant
+        if central or (not has_live and pol._wakeup_armed) \
+                or (has_live and not any_cap):
+            k = k_bound - cur
+            queue.extend_arrays(ids[cur:k_bound], times[cur:k_bound])
+            pol._absorb_signal(times, cur, k_bound)
+            self.fast_absorbed += k
+            return k
+        if not has_live:
+            return 0            # first arrival must arm the wake-up
+        n_live = len(live)
+        lat = self.config.latency
+        wids = [w.id for w in live]
+        busys = [w.busy_until for w in live]
+        pbls = [(w.stats.busy_time / w.stats.batches)
+                if w.stats.batches else lat for w in live]
+        wqs = [w.queue for w in live]
+        coal = [w.coalesce_armed for w in live]
+        timeout = self.dcfg.batch_timeout
+        buf_i: List[list] = [[] for _ in range(n_live)]
+        buf_t: List[list] = [[] for _ in range(n_live)]
+        # the exact EWMA / outstanding recurrences, replayed on locals
+        rate = pol.rate
+        alpha = rate.alpha
+        one_minus = 1.0 - alpha
+        r_last = rate._last
+        r_mg = rate._mean_gap
+        outstanding = pol._outstanding
+        hw = pol._outstanding_hw
+
+        def flush():
+            rate._last = r_last
+            rate._mean_gap = r_mg
+            pol._outstanding = outstanding
+            pol._outstanding_hw = hw
+            for m in range(n_live):
+                bi = buf_i[m]
+                if bi:
+                    wqs[m].extend_arrays(
+                        np.array(bi, dtype=np.int64),
+                        np.array(buf_t[m], dtype=np.float64))
+
+        ts = times[cur:k_bound].tolist()
+        rl = ids[cur:k_bound].tolist()
+        consumed = 0
+        for j in range(len(ts)):
+            t = ts[j]
+            # inline _ContinuousAbsorbWindow._best: first live worker
+            # with spare capacity minimizing (expected_wait, id)
+            best = -1
+            bw = 0.0
+            bid = 0
+            for m in range(n_live):
+                if caps[m] <= 0:
+                    continue
+                wait = busys[m] - t
+                if wait < 0.0:
+                    wait = 0.0
+                wait = wait + (qlens[m] / batches[m]) * pbls[m]
+                if best < 0 or wait < bw or (wait == bw and wids[m] < bid):
+                    best = m
+                    bw = wait
+                    bid = wids[m]
+            if best < 0:
+                # backpressure: every bounded queue is full — the rest
+                # of the window is pure central appends, finish in bulk
+                flush()
+                rem = k_bound - (cur + j)
+                queue.extend_arrays(ids[cur + j:k_bound],
+                                    times[cur + j:k_bound])
+                pol._absorb_signal(times, cur + j, k_bound)
+                self.fast_absorbed += consumed + rem
+                return consumed + rem
+            if busys[best] <= t:
+                # idle worker — three exact outcomes:
+                if coal[best] and qlens[best] + 1 < batches[best]:
+                    # coalesce timer already armed and the append stays
+                    # below the fire threshold: _feed is a no-op, the
+                    # arrival is a pure worker-queue append — absorbable
+                    pass
+                elif qlens[best] + 1 < batches[best]:
+                    # the append would arm the coalesce timer: arm it
+                    # exactly (same fire time, same callback), absorb
+                    # the arrival, and end the window so the merge loop
+                    # re-orders against the new timer
+                    w = live[best]
+                    w.coalesce_armed = True
+                    self.loop.at(t + timeout,
+                                 lambda w=w: pol._coalesce_fire(w))
+                    bi = buf_i[best]
+                    bi.append(rl[j])
+                    buf_t[best].append(t)
+                    if r_last is not None:
+                        gap = t - r_last
+                        if gap < 1e-9:
+                            gap = 1e-9
+                        r_mg = (gap if r_mg is None
+                                else alpha * gap + one_minus * r_mg)
+                    r_last = t
+                    outstanding += 1
+                    if outstanding > hw:
+                        hw = outstanding
+                    consumed += 1
+                    flush()
+                    self.fast_absorbed += consumed
+                    return consumed
+                else:
+                    # the append reaches the fire threshold: complete
+                    # the arrival inline through the exact per-arrival
+                    # code with the merge loop's clock advance, then
+                    # end the window (the dispatch schedules events
+                    # that re-order against later arrivals)
+                    flush()
+                    self.fast_absorbed += consumed
+                    self.fast_one_by_one += 1
+                    loop = self.plane.loop
+                    if t > loop.now:
+                        loop.now = t
+                    self.on_request(Request(rl[j], t))
+                    return consumed + 1
+            bi = buf_i[best]
+            bi.append(rl[j])
+            buf_t[best].append(t)
+            qlens[best] += 1
+            caps[best] -= 1
+            if r_last is not None:
+                gap = t - r_last
+                if gap < 1e-9:
+                    gap = 1e-9
+                r_mg = gap if r_mg is None else alpha * gap + one_minus * r_mg
+            r_last = t
+            outstanding += 1
+            if outstanding > hw:
+                hw = outstanding
+            consumed += 1
+        flush()
+        self.fast_absorbed += consumed
+        return consumed
+
+    def trace_absorber(self, ids: np.ndarray):
+        def absorber(ts, cur, k_bound, _self=self, _ids=ids):
+            return _self._absorb_run(_ids, ts, cur, k_bound)
+        return absorber
+
+    def begin_absorb_window(self) -> Optional[_ContinuousAbsorbWindow]:
+        win = _ContinuousAbsorbWindow(self)
+        return win if win.usable else None
+
 
 # --------------------------------------------------------------------- #
 # the plane
@@ -632,8 +1193,9 @@ class FastSyncDispatcher(Dispatcher):
 class FastPlane(SimulatedPlane):
     """A :class:`~repro.serving.plane.SimulatedPlane` over a
     :class:`FastLoop` whose dispatcher factory selects the vectorized
-    engine for batch-synchronous tenants.  Continuous-dispatch tenants
-    get the legacy dispatcher (exact by construction, unaccelerated)."""
+    engine for batch-synchronous *and* continuous-dispatch tenants.
+    Custom policy subclasses get the legacy dispatcher (exact by
+    construction, unaccelerated)."""
 
     name = "fast"
 
@@ -652,6 +1214,14 @@ class FastPlane(SimulatedPlane):
                 self, config, instances, on_response, dcfg,
                 policy=FastBatchSyncPolicy(), model_id=model_id,
                 peer_live=peer_live)
+        if type(policy) is ContinuousPolicy:
+            # mirror the caller-supplied tuning knobs onto the fast twin
+            return FastContinuousDispatcher(
+                self, config, instances, on_response, dcfg,
+                policy=FastContinuousPolicy(
+                    queue_factor=policy.queue_factor,
+                    rate_alpha=policy.rate.alpha),
+                model_id=model_id, peer_live=peer_live)
         return Dispatcher(self, config, instances, on_response, dcfg,
                           policy=policy, model_id=model_id,
                           peer_live=peer_live)
@@ -679,24 +1249,212 @@ def feed_single_model_trace(server, arrivals: Sequence[float], *,
     ids = np.arange(id_offset, id_offset + n, dtype=np.int64)
     disp = server.dispatcher
 
-    absorber = None
-    if isinstance(disp, FastSyncDispatcher):
-        def absorber(ts, cur, k_bound, _disp=disp, _ids=ids):
-            k = _disp.absorption_capacity(ts, cur, k_bound)
-            if k:
-                _disp.queue.extend_arrays(_ids[cur:cur + k],
-                                          ts[cur:cur + k])
-            return k
+    make_absorber = getattr(disp, "trace_absorber", None)
+    absorber = make_absorber(ids) if make_absorber is not None else None
 
-    def arrive_one(i, t, _submit=server.submit):
+    def arrive_one(i, t, _submit=server.submit, _disp=disp):
+        _disp.fast_one_by_one += 1
         _submit(Request(id_offset + i, t))
 
     loop.add_trace(times, arrive_one, absorber=absorber)
     return n
 
 
+def feed_multi_model_trace(server, traces) -> int:
+    """Attach merged per-model arrival arrays to a
+    :class:`~repro.serving.tenancy.MultiModelServer` on a
+    :class:`FastLoop`.
+
+    ``traces`` maps tenant id → sorted arrival times.  The per-model
+    arrays merge into one ``(time, seq, model)`` columnar trace — ids
+    are assigned in merged ``(time, tenant-index)`` order, exactly the
+    enumeration the legacy driver produced with ``sorted()`` +
+    ``enumerate`` — and passive arrivals absorb straight into the
+    owning tenant's :class:`ColumnQueue` (per-tenant absorption windows
+    re-open after every heap event).  Every declined arrival goes
+    through ``server.submit`` one-at-a-time, identical to the oracle.
+    Returns the number of arrivals fed.
+    """
+    loop = server.plane.loop
+    if not isinstance(loop, FastLoop):
+        raise TypeError("feed_multi_model_trace needs a FastLoop server")
+    order = [tid for tid in server._order if tid in traces]
+    unknown = set(traces) - set(order)
+    if unknown:
+        raise KeyError(f"unknown tenant ids in traces: {sorted(unknown)}")
+    parts_t = [np.ascontiguousarray(traces[tid], dtype=np.float64)
+               for tid in order]
+    parts_c = [np.full(p.size, k, dtype=np.int64)
+               for k, p in enumerate(parts_t)]
+    if parts_t:
+        times = np.concatenate(parts_t)
+        codes = np.concatenate(parts_c)
+    else:
+        times = np.empty(0, dtype=np.float64)
+        codes = np.empty(0, dtype=np.int64)
+    # stable (time, tenant-index) merge == sorted((t, k, tid) ...)
+    idx = np.lexsort((codes, times))
+    times = np.ascontiguousarray(times[idx])
+    codes = codes[idx]
+    n = int(times.size)
+    times_l = times.tolist()
+    codes_l = codes.tolist()
+    disps = [server.tenants[tid].dispatcher for tid in order]
+    rates = [server.rates[tid] for tid in order]
+    counts = server._counts
+    submit = server.submit
+
+    def arrive_one(i, t):
+        c = codes_l[i]
+        disps[c].fast_one_by_one += 1
+        submit(Request(i, t, model_id=order[c]))
+
+    K = len(order)
+    _SW = _SyncAbsorbWindow
+
+    def absorber(ts, cur, k_bound):
+        # Per-tenant absorption state, opened lazily on first arrival.
+        # Sync-window tenants (kind 1) run inline over locals: queue
+        # pushes buffered into plain lists, the tenant rate EWMA and
+        # admission count replayed on locals, the exact arming calls
+        # issued in place.  Other window types (kind 2) go through the
+        # generic absorb_one; an absorption-incapable tenant (kind 3)
+        # ends the window.  Locals flush back before every return.
+        kind = [0] * K
+        wins = [None] * K
+        w_qlen = [0] * K
+        w_B = [0] * K
+        w_ta = [False] * K
+        w_wa = [False] * K
+        w_live = [False] * K
+        w_maxb = [0.0] * K
+        w_busys = [None] * K
+        w_pol = [None] * K
+        w_to = [0.0] * K
+        buf_i = [None] * K
+        buf_t = [None] * K
+        r_alpha = [0.0] * K
+        r_om = [0.0] * K
+        r_last: list = [None] * K
+        r_mg: list = [None] * K
+        c_add = [0] * K
+        touched = [False] * K
+        consumed = 0
+
+        def flush():
+            for c in range(K):
+                if not touched[c]:
+                    continue
+                sig = rates[c]
+                sig._last = r_last[c]
+                sig._mean_gap = r_mg[c]
+                if c_add[c]:
+                    counts[order[c]] += c_add[c]
+                bi = buf_i[c]
+                if bi:
+                    d = disps[c]
+                    d.queue.extend_arrays(
+                        np.array(bi, dtype=np.int64),
+                        np.array(buf_t[c], dtype=np.float64))
+                    d.fast_absorbed += len(bi)
+
+        i = cur
+        while i < k_bound:
+            c = codes_l[i]
+            k = kind[c]
+            if k == 0:
+                d = disps[c]
+                begin = getattr(d, "begin_absorb_window", None)
+                win = begin() if begin is not None else None
+                if win is None:
+                    kind[c] = k = 3
+                elif type(win) is _SW:
+                    kind[c] = k = 1
+                    w_qlen[c] = win.qlen
+                    w_B[c] = win.B
+                    w_ta[c] = win.timeout_armed
+                    w_wa[c] = win.wakeup_armed
+                    w_live[c] = win.has_live
+                    w_maxb[c] = win.max_busy
+                    w_busys[c] = win.busys
+                    w_pol[c] = win.pol
+                    w_to[c] = d.dcfg.batch_timeout
+                    buf_i[c] = []
+                    buf_t[c] = []
+                    sig = rates[c]
+                    r_alpha[c] = sig.alpha
+                    r_om[c] = 1.0 - sig.alpha
+                    r_last[c] = sig._last
+                    r_mg[c] = sig._mean_gap
+                    touched[c] = True
+                else:
+                    kind[c] = k = 2
+                    wins[c] = win
+            if k == 3:
+                break
+            t = times_l[i]
+            if k == 1:
+                armed = False
+                if w_qlen[c] + 1 < w_B[c]:
+                    if not w_ta[c]:
+                        # on_arrival's arming branch, with now == t
+                        pol = w_pol[c]
+                        pol._timeout_armed = True
+                        disps[c].loop.at(t + w_to[c], pol._on_timeout)
+                        w_ta[c] = True
+                        armed = True
+                elif (not w_live[c]) or t < w_maxb[c]:
+                    if not w_wa[c]:
+                        # _try_dispatch's wake-up branch, with now == t
+                        pol = w_pol[c]
+                        if not w_live[c]:
+                            pol._wakeup_at(t + w_to[c])
+                        else:
+                            pol._wakeup_at(min(b for b in w_busys[c]
+                                               if b > t))
+                        w_wa[c] = True
+                        armed = True
+                else:
+                    break   # arrival must be observed: exact path
+                buf_i[c].append(i)
+                buf_t[c].append(t)
+                w_qlen[c] += 1
+                # MultiModelServer.submit's accounting, on locals
+                last = r_last[c]
+                if last is not None:
+                    gap = t - last
+                    if gap < 1e-9:
+                        gap = 1e-9
+                    mg = r_mg[c]
+                    r_mg[c] = (gap if mg is None
+                               else r_alpha[c] * gap + r_om[c] * mg)
+                r_last[c] = t
+                c_add[c] += 1
+                consumed += 1
+                i += 1
+                if armed:
+                    break   # the tenant armed a timer: bound stale
+            else:
+                win = wins[c]
+                if not win.absorb_one(i, t):
+                    break
+                # replay MultiModelServer.submit's per-arrival accounting
+                rates[c].observe(t)
+                counts[order[c]] += 1
+                consumed += 1
+                i += 1
+                if win.armed_stop:
+                    break   # the tenant armed a timer: bound stale
+        flush()
+        return consumed
+
+    loop.add_trace(times, arrive_one, absorber=absorber)
+    return n
+
+
 __all__ = [
-    "ColumnQueue", "FastBatchSyncPolicy", "FastLoop", "FastPlane",
-    "FastSyncDispatcher", "ResponseBlock", "ResponseLog",
+    "ColumnQueue", "FastBatchSyncPolicy", "FastContinuousDispatcher",
+    "FastContinuousPolicy", "FastLoop", "FastPlane", "FastSyncDispatcher",
+    "ResponseBlock", "ResponseLog", "feed_multi_model_trace",
     "feed_single_model_trace",
 ]

@@ -129,7 +129,9 @@ def log2_ms_histogram(values_s: Sequence[float]) -> List[LatencyBucket]:
 
 
 def instance_report(workers, now: float, *,
-                    model_id: Optional[str] = None) -> List[Dict[str, object]]:
+                    model_id: Optional[str] = None,
+                    engine: Optional[str] = None
+                    ) -> List[Dict[str, object]]:
     """Per-instance utilization + idle-gap summary (JSON-serializable).
 
     ``workers`` is any iterable of :class:`WorkerInstance` — e.g. a
@@ -141,6 +143,10 @@ def instance_report(workers, now: float, *,
 
     Rows carry the worker's ``model_id`` (instance ids are only unique
     *within* a tenant); ``model_id=`` filters to one tenant's workers.
+    ``engine`` (the owning dispatcher's ``engine_name``, ``"fast"`` or
+    ``"event"``) tags every row so operators can see which simulation
+    core produced the numbers — benchmark comparisons strip the tag
+    before diffing reports across engines.
     """
     out = []
     if model_id is not None:
@@ -149,6 +155,7 @@ def instance_report(workers, now: float, *,
         out.append({
             "id": w.id,
             "model_id": w.model_id,
+            **({"engine": engine} if engine is not None else {}),
             "threads": w.threads,
             "batch": w.batch,
             "batches": w.stats.batches,
@@ -237,14 +244,18 @@ class MetricsCollector:
         The latency column is ``completion - arrivals`` in float64 —
         bit-identical to the per-object ``resp.latency`` subtraction —
         so every derived quantity matches the per-record path exactly.
-        Blocks only occur on single-node fast paths, which never carry a
-        ``node_id``.
+        A block that crossed the cluster fabric carries the router's
+        ``node_id`` tag and lands in the per-node breakdown, same as a
+        tagged per-object response.
         """
         lats = (block.completion - block.arrivals).tolist()
         n = len(lats)
         self.latencies.extend(lats)
         self._batch_sizes.extend([block.batch_size] * n)
         self.latencies_by_model.setdefault(block.model_id, []).extend(lats)
+        if block.node_id is not None:
+            self.latencies_by_node.setdefault(block.node_id,
+                                              []).extend(lats)
         if block.redispatched:
             self.redispatched += n
 
@@ -311,7 +322,12 @@ class MetricsCollector:
                       until: Optional[float] = None) -> None:
         """Hook a live :class:`~repro.serving.fabric.ClusterRouter`:
         chains its ``on_response``/``on_shed`` callbacks and samples the
-        fleet-aggregate ``queue_depth`` on the shared clock."""
+        fleet-aggregate ``queue_depth`` on the shared clock.  A
+        block-delivering router (fast plane) additionally gets its
+        ``on_response_block`` chained — non-duplicate blocks bypass the
+        per-response hook, while the duplicate-suppression fallback
+        still delivers per response, so both chains together see each
+        delivery exactly once."""
         prev_resp = router.on_response
 
         def chained_resp(resp: Response) -> None:
@@ -320,6 +336,15 @@ class MetricsCollector:
             self.on_response(resp)
 
         router.on_response = chained_resp
+        if hasattr(router, "on_response_block"):
+            prev_block = router.on_response_block
+
+            def chained_block(block) -> None:
+                if prev_block is not None:
+                    prev_block(block)
+                self.on_response_block(block)
+
+            router.on_response_block = chained_block
         prev_shed = router.on_shed
 
         def chained_shed(shed: Shed) -> None:

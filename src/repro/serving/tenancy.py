@@ -156,8 +156,9 @@ class MultiModelServer:
                 optimizer=self._opts[spec.model_id], backend=spec.backend,
                 initial_batch=batch, allocator=lease.allocator,
                 config=self.ccfg, model_id=spec.model_id,
-                on_response=self.responses.append,
+                on_response=self._record_response,
                 peer_live=self._peer_live_fn(spec.model_id))
+        self._adopt_block_sinks()
         self.plan_log.append((self.plane.now, dict(shares), {
             m: self.tenants[m].estimator.current_batch for m in self._order}))
         self._schedule_tick()
@@ -196,6 +197,29 @@ class MultiModelServer:
 
         return peer_live
 
+    def _record_response(self, resp: Response) -> None:
+        """Per-response aggregation sink (legacy engine).  Indirect so
+        block adoption can replace ``self.responses`` wholesale without
+        stranding a bound method on the old list."""
+        self.responses.append(resp)
+
+    def _adopt_block_sinks(self) -> None:
+        """When every tenant's dispatcher is block-capable (fast plane),
+        switch the aggregate response stream to block granularity: each
+        tenant adopts its own block log and chains every block into one
+        shared :class:`~repro.serving.fastsim.ResponseLog`.  Blocks land
+        at the same completion events, in the same order, as the legacy
+        per-response appends — the aggregate materializes byte-identical
+        ``Response`` sequences across both engines."""
+        if not all(getattr(t.dispatcher, "supports_blocks", False)
+                   for t in self.tenants.values()):
+            return
+        from .fastsim import ResponseLog   # deferred: fastsim is optional
+        agg = ResponseLog()
+        for m in self._order:
+            self.tenants[m].adopt_block_sink(agg.append_block)
+        self.responses = agg
+
     # ------------------------------------------------------------------ #
     # request path
     # ------------------------------------------------------------------ #
@@ -222,6 +246,20 @@ class MultiModelServer:
 
     def shares(self) -> Dict[str, int]:
         return {m: self.pool.lease_of(m).n_units for m in self._order}
+
+    def fastpath_report(self) -> Dict[str, object]:
+        """Per-tenant fast-engine coverage (see
+        :meth:`~repro.serving.dispatcher.Dispatcher.fastpath_report`):
+        a silent legacy fallback on any tenant shows up here."""
+        per_model = {m: self.tenants[m].dispatcher.fastpath_report()
+                     for m in self._order}
+        fast = all(r["engine"] == "fast" for r in per_model.values())
+        return {"engine": "fast" if fast else "event",
+                "accelerated": fast,
+                "absorbed": sum(r["absorbed"] for r in per_model.values()),
+                "one_by_one": sum(r["one_by_one"]
+                                  for r in per_model.values()),
+                "per_model": per_model}
 
     # ------------------------------------------------------------------ #
     # control loop

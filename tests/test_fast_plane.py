@@ -19,10 +19,13 @@ from repro.serving import (ControllerConfig, EventLoop, MultiModelServer,
                            PackratServer, Request, TabulatedBackend,
                            TenantSpec)
 from repro.serving.dispatcher import DispatcherConfig
-from repro.serving.fabric import ClusterRouter, FabricConfig, FabricNodeSpec
-from repro.serving.fastsim import (ColumnQueue, FastLoop, FastPlane,
-                                   FastSyncDispatcher, ResponseBlock,
-                                   ResponseLog, feed_single_model_trace)
+from repro.serving.fabric import (ClusterRouter, FabricConfig,
+                                  FabricNodeSpec, feed_fabric_trace)
+from repro.serving.fastsim import (ColumnQueue, FastContinuousDispatcher,
+                                   FastLoop, FastPlane, FastSyncDispatcher,
+                                   ResponseBlock, ResponseLog,
+                                   feed_multi_model_trace,
+                                   feed_single_model_trace)
 from repro.serving.metrics import MetricsCollector
 from repro.serving.scenarios import (MultiModelScenarioContext,
                                      ScenarioContext, fabric_events,
@@ -124,14 +127,21 @@ def _run_fabric(arrivals, dispatch, engine, events):
                            initial_batch=8, slo_deadline=SLO, config=fcfg)
     sheds = []
     router.on_shed = sheds.append
-    for i, t in enumerate(arrivals):
-        loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
+    if engine == "fast":
+        feed_fabric_trace(router, arrivals)
+    else:
+        for i, t in enumerate(arrivals):
+            loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
     for ev in events:
         action = {"fail": router.fail_node,
                   "drain": router.drain_node}[ev.action]
         loop.at(ev.at_frac * DURATION,
                 (lambda action=action, ev=ev: action(ev.node)))
     loop.run_until(DURATION + DRAIN)
+    if engine == "fast":
+        # the trace machinery must have accounted for every arrival
+        assert (router.fast_absorbed + router.fast_one_by_one
+                == len(arrivals))
     shed_tl = [(s.request.id, round(s.time, 9), s.node_id, s.reason)
                for s in sheds]
     return response_tuples(router.responses), shed_tl
@@ -177,12 +187,21 @@ def _run_mm(name, engine):
     loop = _loop(engine)
     server = MultiModelServer(loop, total_units=units, tenants=specs,
                               config=ccfg, adaptive=True, plan_interval=2.0)
-    merged = sorted((t, k, m) for k, m in enumerate(models)
-                    for t in traces[m])
-    for i, (t, _, m) in enumerate(merged):
-        req = Request(i, t, model_id=m)
-        loop.at(t, (lambda req=req: server.submit(req)))
+    if engine == "fast":
+        n_fed = feed_multi_model_trace(server, traces)
+    else:
+        merged = sorted((t, k, m) for k, m in enumerate(models)
+                        for t in traces[m])
+        for i, (t, _, m) in enumerate(merged):
+            req = Request(i, t, model_id=m)
+            loop.at(t, (lambda req=req: server.submit(req)))
     loop.run_until(DURATION + DRAIN)
+    if engine == "fast":
+        # the trace machinery must have accounted for every arrival
+        fed = sum(server.tenants[m].dispatcher.fast_absorbed
+                  + server.tenants[m].dispatcher.fast_one_by_one
+                  for m in models)
+        assert fed == n_fed == sum(len(tr) for tr in traces.values())
     return response_tuples(server.responses)
 
 
@@ -219,11 +238,12 @@ def test_fast_plane_reproduces_golden_per_event_feed():
 
 
 def test_fast_plane_continuous_matches_event_engine():
-    """Continuous dispatch falls back to the legacy dispatcher on the
-    fast plane and stays exact."""
+    """Continuous dispatch runs the vectorized continuous engine on the
+    fast plane — bulk trace feed included — and stays exact."""
     event_server, _ = golden_run("continuous", EventLoop)
-    fast_server, _ = golden_run("continuous", FastLoop)
-    assert not isinstance(fast_server.dispatcher, FastSyncDispatcher)
+    fast_server, _ = golden_run("continuous", FastLoop, fast_feed=True)
+    assert isinstance(fast_server.dispatcher, FastContinuousDispatcher)
+    assert fast_server.dispatcher.fast_absorbed > 0
     assert (response_tuples(fast_server.responses)
             == response_tuples(event_server.responses))
 
@@ -239,7 +259,7 @@ def test_fast_plane_reproduces_multimodel_golden(make_driver):
 # --------------------------------------------------------------------- #
 # property: random traces, bulk feed vs event engine
 # --------------------------------------------------------------------- #
-def _check_fast_feed(seed, rate, fail_at):
+def _check_fast_feed(seed, rate, fail_at, dispatch="sync"):
     arrivals = PoissonWorkload(rate_rps=rate).arrivals(5.0, seed=seed)
 
     def run(engine):
@@ -247,7 +267,7 @@ def _check_fast_feed(seed, rate, fail_at):
         server = PackratServer(
             loop, total_units=UNITS, optimizer=OPT8,
             backend=TabulatedBackend(PROFILE8), initial_batch=8,
-            config=ControllerConfig(dispatch_policy="sync"))
+            config=ControllerConfig(dispatch_policy=dispatch))
         if engine == "fast":
             feed_single_model_trace(server, arrivals)
         else:
@@ -262,12 +282,13 @@ def _check_fast_feed(seed, rate, fail_at):
     assert run("fast") == run("event")
 
 
+@pytest.mark.parametrize("dispatch", DISPATCHES)
 @pytest.mark.parametrize("seed,rate,fail_at",
                          [(0, 30.0, None), (1, 120.0, None),
                           (2, 200.0, 1.5), (3, 60.0, 0.5),
                           (4, 180.0, 3.9), (5, 25.0, 2.0)])
-def test_fast_feed_matches_event_engine_seeded(seed, rate, fail_at):
-    _check_fast_feed(seed, rate, fail_at)
+def test_fast_feed_matches_event_engine_seeded(seed, rate, fail_at, dispatch):
+    _check_fast_feed(seed, rate, fail_at, dispatch)
 
 
 def test_fast_feed_matches_event_engine_property():
@@ -277,9 +298,10 @@ def test_fast_feed_matches_event_engine_property():
     @settings(max_examples=8, deadline=None)
     @given(seed=st.integers(0, 10_000),
            rate=st.floats(min_value=20.0, max_value=200.0),
-           fail_at=st.one_of(st.none(), st.floats(0.5, 4.0)))
-    def check(seed, rate, fail_at):
-        _check_fast_feed(seed, rate, fail_at)
+           fail_at=st.one_of(st.none(), st.floats(0.5, 4.0)),
+           dispatch=st.sampled_from(DISPATCHES))
+    def check(seed, rate, fail_at, dispatch):
+        _check_fast_feed(seed, rate, fail_at, dispatch)
 
     check()
 
