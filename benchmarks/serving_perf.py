@@ -47,7 +47,10 @@ import sys
 import time
 from typing import Dict, List, Optional
 
-from repro.core.knapsack import PackratOptimizer
+from repro.core.knapsack import (PackratOptimizer, planning_report,
+                                 powers_of_two)
+from repro.core.multimodel import (ModelWorkload, MultiModelAllocator,
+                                   solve_with_slo)
 from repro.core.paper_profiles import PAPER_MODELS, ProfileModel
 from repro.launch.bench_serving import (run_fabric_policy,
                                         run_multimodel_policy, run_policy)
@@ -59,7 +62,11 @@ from repro.serving.workloads import PoissonWorkload
 # v2: per-row "fastpath" coverage, the edge-continuous/edge-multimodel/
 #     edge-fabric-3n rows, and full-profile bursty/diurnal stretched
 #     past the regression gate's request floor.
-BENCH_SCHEMA_VERSION = 2
+# v3: top-level "planning" row — the control-plane solver workload
+#     (solve_with_slo sweeps + multi-model λ-search replans +
+#     calibration epochs) timed per planning engine, with solver
+#     counters and its own machine-normalized regression gate.
+BENCH_SCHEMA_VERSION = 3
 
 UNITS = 16
 MAX_BATCH = 256
@@ -96,12 +103,13 @@ MIN_GATE_REQUESTS = 50_000
 
 def _strip(obj):
     """Drop the intentional report differences between the two engines:
-    the per-run/per-instance ``engine`` tags and the ``fastpath``
-    coverage report (absorption counters are engine-internal; every
-    observable metric must still match byte-for-byte)."""
+    the per-run/per-instance ``engine`` tags, the ``fastpath`` coverage
+    report, and the ``planning`` solver counters (absorption/solve
+    counters are engine-internal; every observable metric must still
+    match byte-for-byte)."""
     if isinstance(obj, dict):
         return {k: _strip(v) for k, v in obj.items()
-                if k not in ("engine", "fastpath")}
+                if k not in ("engine", "fastpath", "planning")}
     if isinstance(obj, list):
         return [_strip(v) for v in obj]
     return obj
@@ -213,6 +221,107 @@ def bench_edge_fabric(n_target: int) -> Dict[str, object]:
         reconfigure_timeout=5.0, dispatch="sync", engine=engine))
 
 
+# control-plane planning workload: SLO deadlines swept across unit
+# counts, replan rounds with drifting per-model batches and shrinking
+# pods, calibration epochs re-solving the full ⟨t,b⟩ grid.  The grid
+# passes are the live control plane's distinct-query pattern (fabric
+# degrade planning probes doubling batches per node size, tenancy
+# rate-matching across share sizes) — each distinct ⟨T,B⟩ costs the
+# reference engine a full DP build but the shared table one backtrack.
+PLANNING_SLOS_MS = (20.0, 50.0, 100.0, 200.0, 400.0)
+PLANNING_SLO_UNITS = (2, 4, 6, 8, 10, 12, 14, 16)
+PLANNING_REPLANS = 8
+# one epoch ≈ one calibration refresh; live controllers refresh every
+# few seconds, so a session of refreshes is the representative load
+PLANNING_EPOCHS = 6
+PLANNING_MM_MODELS = ("resnet50", "bert")
+
+
+def _planning_grid_pass(opt: PackratOptimizer, plans: List[object],
+                        tag) -> None:
+    """Re-solve the full ⟨t ≤ UNITS, b ≤ MAX_BATCH⟩ planning grid —
+    every distinct share size × power-of-two batch the live planners
+    probe."""
+    for t in range(1, UNITS + 1):
+        for b in powers_of_two(MAX_BATCH):
+            cfg = opt.try_solve(t, b)
+            plans.append(("grid", tag, t, b,
+                          None if cfg is None
+                          else (cfg.groups, cfg.latency)))
+
+
+def _planning_workload(engine: str):
+    """The control-plane query sequence, answered by one planning
+    engine: ``solve_with_slo`` sweeps across unit counts,
+    ``MultiModelAllocator`` λ-binary-search replans under drifting
+    batches and pod sizes, full planning-grid passes, and calibration
+    epochs (``update_profile`` + a grid re-solve).  Returns the exact
+    plans produced (groups + full-precision latencies — the
+    bit-identity record), the shared-table counters, and the query
+    count."""
+    profile = MODEL.profile(UNITS, MAX_BATCH)
+    opt = PackratOptimizer(profile, engine=engine)
+    plans: List[object] = []
+    _planning_grid_pass(opt, plans, "cold")
+    for units in PLANNING_SLO_UNITS:
+        for slo_ms in PLANNING_SLOS_MS:
+            got = solve_with_slo(opt, units, slo_ms * 1e-3)
+            plans.append(("slo", units, slo_ms,
+                          None if got is None
+                          else (got[0], got[1].groups, got[1].latency)))
+    mm_profiles = {name: PAPER_MODELS[name].profile(UNITS, MAX_BATCH)
+                   for name in PLANNING_MM_MODELS}
+    mm_opts = {name: PackratOptimizer(prof, allow_unused_threads=True,
+                                      engine=engine)
+               for name, prof in mm_profiles.items()}
+    for it in range(PLANNING_REPLANS):
+        workloads = [ModelWorkload(name, mm_profiles[name],
+                                   batch=1 << (2 + (it + k) % 5))
+                     for k, name in enumerate(mm_profiles)]
+        mma = MultiModelAllocator(workloads, optimizers=mm_opts)
+        placements = mma.allocate(UNITS - (it % 4))
+        plans.append(("replan", it, tuple(
+            (p.name, p.units, p.config.groups, p.config.latency)
+            for p in placements)))
+    for epoch in range(1, PLANNING_EPOCHS + 1):
+        scale = 1.0 + 0.05 * epoch
+        opt.update_profile({k: lat * scale for k, lat in profile.items()})
+        _planning_grid_pass(opt, plans, epoch)
+    counters = planning_report([opt] + list(mm_opts.values()))
+    queries = counters["solves"] + counters["solve_cache_hits"]
+    return plans, counters, queries
+
+
+def bench_planning() -> Dict[str, object]:
+    """Time the identical control-plane query sequence through the
+    reference per-query DP and the shared-table engine.  The plans must
+    match exactly (groups, full-precision latencies, tie-breaks) —
+    ``reports_identical`` is the row's correctness bit."""
+    engines: Dict[str, Dict[str, float]] = {}
+    plans: Dict[str, object] = {}
+    counters: Optional[Dict[str, object]] = None
+    queries = 0
+    for engine in ("reference", "shared"):
+        gc.collect()
+        t0 = time.perf_counter()
+        res, cnt, q = _planning_workload(engine)
+        wall = time.perf_counter() - t0
+        engines[engine] = {"wall_s": round(wall, 4),
+                           "solves_per_s": round(q / wall, 1)}
+        plans[engine] = res
+        if engine == "shared":
+            counters = cnt
+            queries = q
+    return {
+        "queries": queries,
+        "engines": engines,
+        "speedup": round(engines["reference"]["wall_s"]
+                         / engines["shared"]["wall_s"], 2),
+        "reports_identical": plans["reference"] == plans["shared"],
+        "counters": counters,
+    }
+
+
 def _profile_rows(names, duration: float, edge_requests: int,
                   label: str) -> Dict[str, object]:
     out: Dict[str, object] = {"scenarios": {}}
@@ -245,6 +354,8 @@ def build_report(*, quick: bool) -> Dict[str, object]:
         "units": UNITS,
         "profiles": {},
     }
+    report["planning"] = bench_planning()
+    _log_planning(report["planning"])
     report["profiles"]["quick"] = _profile_rows(
         SCENARIOS_QUICK, SCENARIO_DURATION_QUICK, EDGE_REQUESTS_QUICK,
         "quick")
@@ -253,6 +364,20 @@ def build_report(*, quick: bool) -> Dict[str, object]:
             SCENARIOS_FULL, SCENARIO_DURATION_FULL, EDGE_REQUESTS_FULL,
             "full")
     return report
+
+
+def _log_planning(row: Dict[str, object]) -> None:
+    eng = row["engines"]
+    cnt = row["counters"]
+    print(f"[bench] planning          queries={row['queries']:8d}  "
+          f"reference={eng['reference']['wall_s']:.2f}s "
+          f"({eng['reference']['solves_per_s']:,.0f}/s)  "
+          f"shared={eng['shared']['wall_s']:.2f}s "
+          f"({eng['shared']['solves_per_s']:,.0f}/s)  "
+          f"speedup={row['speedup']:.1f}x  "
+          f"builds={cnt['table_builds']} "
+          f"plan-hit-rate={cnt['plan_cache_hit_rate']:.0%}  "
+          f"identical={row['reports_identical']}", file=sys.stderr)
 
 
 def _log(label: str, name: str, row: Dict[str, object]) -> None:
@@ -272,13 +397,34 @@ def check_regression(fresh: Dict[str, object], baseline: Dict[str, object]
     ``quick`` profile, the fast engine's machine-normalized sim-rps
     must stay within ``REGRESSION_TOLERANCE`` of the committed
     baseline, and both engines must still produce identical metric
-    reports."""
+    reports.  The ``planning`` row is gated the same way with the
+    reference engine's solves/sec as the machine factor."""
     failures = []
     if baseline.get("schema_version") != BENCH_SCHEMA_VERSION:
         failures.append(
             f"baseline schema_version {baseline.get('schema_version')} != "
             f"{BENCH_SCHEMA_VERSION}; regenerate the baseline")
         return failures
+    f_plan = fresh.get("planning")
+    b_plan = baseline.get("planning")
+    if not (f_plan and b_plan):
+        failures.append("planning row missing from fresh run or baseline")
+    else:
+        if not f_plan["reports_identical"]:
+            failures.append("planning: shared-table plans diverged from "
+                            "the reference solver")
+        machine = (f_plan["engines"]["reference"]["solves_per_s"]
+                   / b_plan["engines"]["reference"]["solves_per_s"])
+        floor = ((1.0 - REGRESSION_TOLERANCE) * machine
+                 * b_plan["engines"]["shared"]["solves_per_s"])
+        got = f_plan["engines"]["shared"]["solves_per_s"]
+        if got < floor:
+            failures.append(
+                f"planning: shared engine {got:,.0f} solves/s < floor "
+                f"{floor:,.0f} (baseline "
+                f"{b_plan['engines']['shared']['solves_per_s']:,.0f} × "
+                f"machine factor {machine:.2f} × "
+                f"{1.0 - REGRESSION_TOLERANCE:.2f})")
     f_prof = fresh["profiles"].get("quick", {}).get("scenarios", {})
     b_prof = baseline["profiles"].get("quick", {}).get("scenarios", {})
     shared = set(f_prof) & set(b_prof)
@@ -326,7 +472,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="compare against a committed BENCH_serving.json "
                          "and exit non-zero on a machine-normalized "
                          "fast-engine regression > "
-                         f"{REGRESSION_TOLERANCE:.0%}")
+                         f"{REGRESSION_TOLERANCE * 100:.0f}%%")
     args = ap.parse_args(argv)
 
     report = build_report(quick=args.quick)
@@ -338,6 +484,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     else:
         print(text)
 
+    if not report["planning"]["reports_identical"]:
+        print("[bench] FAIL: planning row diverged — shared-table plans "
+              "are not bit-identical to the reference solver",
+              file=sys.stderr)
+        return 1
     for label, prof in report["profiles"].items():
         for name, row in prof["scenarios"].items():
             if not row["reports_identical"]:

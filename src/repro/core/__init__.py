@@ -14,9 +14,11 @@ from .estimator import (ArrivalRateSignal, BatchSizeEstimator,
 from .interference import (CPUInterferenceModel, TPUInterferenceModel,
                            apply_constant_penalty)
 from .knapsack import (InstanceGroup, PackratConfig, PackratOptimizer,
-                       brute_force_solve, fat_config, next_power_of_two,
-                       one_thread_per_core_config, powers_of_two,
-                       profile_grid)
+                       PlanTable, PlanTableRegistry, brute_force_solve,
+                       default_engine, fat_config, next_power_of_two,
+                       one_thread_per_core_config, plan_fingerprint,
+                       planning_report, powers_of_two, profile_grid,
+                       set_default_engine)
 from .multimodel import (ModelPlacement, ModelWorkload, MultiModelAllocator,
                          solve_with_slo)
 from .profiler import (AnalyticProfiler, MeasuredProfiler,
@@ -42,6 +44,8 @@ __all__ = [
     "PackratConfig",
     "PackratOptimizer",
     "Phase",
+    "PlanTable",
+    "PlanTableRegistry",
     "ProfileCalibrator",
     "ProfileSpec",
     "RooflineTerms",
@@ -50,6 +54,7 @@ __all__ = [
     "TabulatedProfiler",
     "apply_constant_penalty",
     "brute_force_solve",
+    "default_engine",
     "fat_config",
     "floor_power_of_two",
     "measure_latency",
@@ -57,8 +62,11 @@ __all__ = [
     "needs_active_passive",
     "next_power_of_two",
     "one_thread_per_core_config",
+    "plan_fingerprint",
+    "planning_report",
     "powers_of_two",
     "profile_grid",
     "profiling_cost_summary",
+    "set_default_engine",
     "solve_with_slo",
 ]

@@ -27,7 +27,8 @@ import dataclasses
 import math
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from .knapsack import PackratConfig, PackratOptimizer, powers_of_two
+from .knapsack import (PackratConfig, PackratOptimizer, PlanTableRegistry,
+                       powers_of_two)
 
 Profile = Mapping[Tuple[int, int], float]
 
@@ -42,16 +43,29 @@ def solve_with_slo(optimizer: PackratOptimizer, threads: int,
 
     Returns (B, config) maximizing throughput subject to
     ``config.latency ≤ latency_slo``, or None if even B=1 misses it.
+
+    When the profile is latency-monotone in b (real profiles are: larger
+    batches never take less absolute time), the sweep early-exits at the
+    first probe whose provable makespan floor
+    (:meth:`PackratOptimizer.slo_latency_floor`) already exceeds the
+    SLO — the floor is nondecreasing in b, so no later probe can be both
+    feasible and within the deadline.  Skipped probes are tallied on
+    ``optimizer.slo_probes_saved``.
     """
     best: Optional[Tuple[int, PackratConfig]] = None
-    for b in powers_of_two(max_batch):
-        try:
-            cfg = optimizer.solve(threads, b)
-        except ValueError:
+    probes = powers_of_two(max_batch)
+    monotone = optimizer.latency_monotone_in_b
+    for idx, b in enumerate(probes):
+        if monotone and optimizer.slo_latency_floor(threads, b) > latency_slo:
+            optimizer.slo_probes_saved += len(probes) - idx
+            break
+        cfg = optimizer.try_solve(threads, b)
+        if cfg is None:
             continue
         if cfg.latency <= latency_slo:
             if best is None or cfg.throughput > best[1].throughput:
                 best = (b, cfg)
+    optimizer.slo_sweeps += 1
     return best
 
 
@@ -83,12 +97,14 @@ class MultiModelAllocator:
     """Minimize the worst per-model batch latency across shared units."""
 
     def __init__(self, workloads: Sequence[ModelWorkload], *,
-                 optimizers: Optional[Mapping[str, PackratOptimizer]] = None
-                 ) -> None:
+                 optimizers: Optional[Mapping[str, PackratOptimizer]] = None,
+                 registry: Optional[PlanTableRegistry] = None) -> None:
         """``optimizers`` optionally supplies pre-built per-model solvers
         (must use the ≤-units relaxation) so a caller re-planning every
         few seconds — the live multi-model controller — keeps the DP's
-        memoised ⟨T,B⟩ caches across plans instead of rebuilding them."""
+        memoised ⟨T,B⟩ caches across plans instead of rebuilding them.
+        ``registry`` shares DP tables across the models' optimizers, so
+        tenants serving the same profile plan off one table."""
         if not workloads:
             raise ValueError("no workloads")
         self.workloads = list(workloads)
@@ -102,6 +118,9 @@ class MultiModelAllocator:
             self._opts = {w.name: PackratOptimizer(w.profile,
                                                    allow_unused_threads=True)
                           for w in workloads}
+        if registry is not None:
+            for opt in self._opts.values():
+                opt.adopt_registry(registry)
 
     def _min_units_for(self, w: ModelWorkload, lam: float, total: int
                        ) -> Optional[int]:
@@ -117,10 +136,8 @@ class MultiModelAllocator:
             bound = min(bound, w.batch / w.min_rate)
 
         def latency(units: int) -> float:
-            try:
-                return opt.solve(units, w.batch).latency
-            except ValueError:
-                return math.inf
+            cfg = opt.try_solve(units, w.batch)
+            return cfg.latency if cfg is not None else math.inf
 
         if latency(total) > bound:
             return None
@@ -190,11 +207,7 @@ class MultiModelAllocator:
         return placements
 
     def _feasible_latency(self, w: ModelWorkload, units: int) -> bool:
-        try:
-            self._opts[w.name].solve(units, w.batch)
-            return True
-        except ValueError:
-            return False
+        return self._opts[w.name].try_solve(units, w.batch) is not None
 
     def _try(self, lam: float, total: int) -> Optional[Dict[str, int]]:
         used = 0

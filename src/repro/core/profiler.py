@@ -288,6 +288,7 @@ class ProfileCalibrator:
         self._last_refresh: Optional[float] = None
         self.observations = 0
         self.refreshes = 0
+        self.refreshes_skipped = 0
         self._rows = profile_rows(self.base)
 
     # ------------------------------------------------------------------ #
@@ -375,10 +376,21 @@ class ProfileCalibrator:
             return False
         return self.drift() > self.rel_threshold
 
-    def mark_refreshed(self, now: float) -> None:
+    def mark_refreshed(self, now: float, *, applied: bool = True) -> None:
+        """Record that the controller acted on (or, with
+        ``applied=False``, deliberately skipped) this refresh window.
+
+        A skipped refresh — the calibrated profile matched what the
+        optimizer already plans against, so rebuilding the DP table
+        would change nothing — still arms the refresh-interval timer
+        and re-bases drift, but counts under ``refreshes_skipped``.
+        """
         self._applied = {k: self.correction(*k) for k in self.base}
         self._last_refresh = now
-        self.refreshes += 1
+        if applied:
+            self.refreshes += 1
+        else:
+            self.refreshes_skipped += 1
 
     # ------------------------------------------------------------------ #
     def report(self) -> Dict[str, object]:
@@ -396,6 +408,7 @@ class ProfileCalibrator:
         return {
             "observations": self.observations,
             "refreshes": self.refreshes,
+            "refreshes_skipped": self.refreshes_skipped,
             "global_ratio": self.global_ratio,
             "max_drift": self.drift(),
             "entries": entries,

@@ -105,7 +105,8 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 from ..core.interference import CPUInterferenceModel
-from ..core.knapsack import PackratOptimizer
+from ..core.knapsack import (PLANNER_ENGINES, PackratOptimizer,
+                             planning_report, set_default_engine)
 from ..core.multimodel import solve_with_slo
 from ..core.paper_profiles import PAPER_MODELS, ProfileModel
 from ..serving import (ClusterRouter, ControllerConfig, EventLoop,
@@ -139,7 +140,13 @@ FABRIC_POLICIES = ("single_fat", "single_packrat", "fabric")
 # v4: per-run "fastpath" coverage report, engine-tagged instance rows,
 #     and fast-engine acceleration of continuous dispatch, multi-model
 #     tenancy, and the --nodes fabric (still byte-identical).
-SCHEMA_VERSION = 4
+# v5: top-level "planner" key + per-run "planning" solver counters
+#     (solves, cache hits, table builds, SLO probes saved) for the
+#     shared-table planning engine; --planner selects shared|reference
+#     (plans bit-identical, only solve cost differs).  Real-execution
+#     calibration gains "refreshes_skipped"/"optimizer_refreshes_skipped"
+#     (identity corrections no longer rebuild and re-solve).
+SCHEMA_VERSION = 5
 
 # simulation engines for the virtual-clock paths: the event-at-a-time
 # oracle and the vectorized core (repro.serving.fastsim).  Reports are
@@ -253,6 +260,7 @@ def run_policy(policy: str, arrivals: List[float], *, model: ProfileModel,
     rep["interference"] = interference
     rep["engine"] = engine
     _controller_report_fields(rep, server, loop.now)
+    rep["planning"] = planning_report([server.optimizer])
     fallbacks = server.backend.fallback_report()
     if fallbacks["count"]:
         # off-grid thread-count lookups were interpolated/clamped — the
@@ -339,7 +347,10 @@ def run_real_policy(policy: str, arrivals: List[float], *, factory,
     _controller_report_fields(rep, server, plane.now)
     calibration = cal.report()
     calibration["optimizer_refreshes"] = server.calibration_refreshes
+    calibration["optimizer_refreshes_skipped"] = \
+        server.calibration_refreshes_skipped
     rep["calibration"] = calibration
+    rep["planning"] = planning_report([server.optimizer])
     return rep
 
 
@@ -521,6 +532,7 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
             engine=node.server.dispatcher.engine_name)
     rep["fleet"] = fleet
     rep["fastpath"] = router.fastpath_report()
+    rep["planning"] = router.planning_report()
     fallback_count = sum(spec.backend.fallback_report()["count"]
                          for spec in specs)
     if fallback_count:
@@ -683,6 +695,7 @@ def run_multimodel_policy(policy: str, traces: Dict[str, List[float]], *,
         for tid in tenant_ids
     }
     rep["fastpath"] = server.fastpath_report()
+    rep["planning"] = server.planning_report()
     rep["instances"] = instance_report(
         server.workers_ever, loop.now, engine=rep["fastpath"]["engine"])
     return rep
@@ -854,6 +867,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "traces finish orders of magnitude sooner), or "
                          "real wall-clock jitted JAX execution of a "
                          "micro model")
+    ap.add_argument("--planner", default="shared",
+                    choices=PLANNER_ENGINES,
+                    help="knapsack planning engine: the shared-DP-table "
+                         "amortized solver (default) or the per-query "
+                         "reference DP — plans are bit-identical, only "
+                         "control-plane solve cost differs")
     ap.add_argument("--real-model", default="mlp-tiny",
                     help="micro model for --execution real "
                          "(repro.models.micro registry)")
@@ -893,6 +912,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                   else (args.dispatch,))
     keys = [policy_key(p, d) for p in POLICIES for d in dispatches]
     engine = "fast" if args.execution == "fast" else "event"
+    set_default_engine(args.planner)
 
     if args.execution == "real":
         if args.models:
@@ -912,6 +932,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         scenarios = _select_scenarios(args, ap)
         report: Dict[str, object] = {
             "schema_version": SCHEMA_VERSION,
+            "planner": args.planner,
             "execution": "real",
             "real_model": args.real_model,
             "real_rate_cap_rps": args.real_rate_cap,
@@ -970,6 +991,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                 ap.error(e.args[0])
         report: Dict[str, object] = {
             "schema_version": SCHEMA_VERSION,
+            "planner": args.planner,
             "models": list(models),
             "units": args.units,
             "duration_s": args.duration,
@@ -1016,6 +1038,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                 for d in dispatches]
         report = {
             "schema_version": SCHEMA_VERSION,
+            "planner": args.planner,
             "model": model_name,
             "nodes": args.nodes,
             "units_per_node": args.units,
@@ -1058,6 +1081,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     report = {
         "schema_version": SCHEMA_VERSION,
+        "planner": args.planner,
         "model": model_name,
         "units": args.units,
         "duration_s": args.duration,

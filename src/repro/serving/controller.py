@@ -120,6 +120,7 @@ class ModelTenant:
             self.adopt_block_sink()
         self.calibrator = calibrator
         self.calibration_refreshes = 0
+        self.calibration_refreshes_skipped = 0
         if calibrator is not None:
             self.dispatcher.on_measure = calibrator.observe
         self.reconfig_log.append((self.plane.now, initial_batch, first))
@@ -246,16 +247,27 @@ class ModelTenant:
         return self.apc.phase is Phase.STABLE
 
     def _refresh_optimizer(self) -> None:
-        """Close the profile-refinement loop: rebuild the optimizer from
-        the calibrated ``L[t,b]`` table and re-solve at the current
-        batch.  If the calibrated costs pick the same ⟨i,t,b⟩ partition
-        the identical-configuration shortcut makes this free; when they
-        do not, the active-passive machinery swaps as usual."""
+        """Close the profile-refinement loop: apply the calibrated
+        ``L[t,b]`` table to the optimizer as a new planning epoch
+        (:meth:`PackratOptimizer.update_profile` — one table rebuild,
+        not a fresh optimizer) and re-solve at the current batch.  If
+        the calibrated costs pick the same ⟨i,t,b⟩ partition the
+        identical-configuration shortcut makes this free; when they do
+        not, the active-passive machinery swaps as usual.
+
+        Identity corrections are gated out entirely: when the calibrated
+        profile equals what the optimizer already plans against (the
+        drift the calibrator saw cancelled back out by refresh time),
+        rebuilding and re-solving would change nothing — skip the epoch,
+        re-arm the calibrator window, and count the skip.
+        """
         cal = self.calibrator
-        self.optimizer = PackratOptimizer(
-            cal.calibrated_profile(),
-            allow_unused_threads=self.optimizer.allow_unused_threads,
-            dispatch_overhead=self.optimizer.dispatch_overhead)
+        calibrated = cal.calibrated_profile()
+        if calibrated == self.optimizer.profile:
+            cal.mark_refreshed(self.loop.now, applied=False)
+            self.calibration_refreshes_skipped += 1
+            return
+        self.optimizer.update_profile(calibrated)
         cal.mark_refreshed(self.loop.now)
         self.calibration_refreshes += 1
         self.reconfigure(self.estimator.current_batch)

@@ -55,7 +55,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.estimator import ArrivalRateSignal
-from ..core.knapsack import PackratOptimizer
+from ..core.knapsack import (PackratOptimizer, PlanTableRegistry,
+                             planning_report)
 from ..core.multimodel import solve_with_slo
 from ..core.profiler import ProfileCalibrator
 from .controller import ControllerConfig, PackratServer
@@ -221,14 +222,19 @@ class ClusterRouter:
         self._delivered: set = set()
         self.degrade_log: List[Tuple[float, str, str]] = []
         # homogeneous fleets re-derive the same overload plan per node;
-        # memoise by planning inputs so N identical nodes solve once
+        # memoise by the optimizer's plan_key (table fingerprint +
+        # dispatch overhead) so N identical nodes solve once
         self._plan_memo: Dict[tuple, Tuple[int, float]] = {}
+        # ...and share one DP table + ⟨T,B⟩ plan cache across those
+        # nodes' optimizers, so even the single solve is amortized
+        self.plan_registry = PlanTableRegistry()
 
         self.nodes: List[FabricNode] = []
         for k, spec in enumerate(specs):
             node_id = spec.node_id or f"node{k}"
             if any(n.node_id == node_id for n in self.nodes):
                 raise ValueError(f"duplicate node_id {node_id!r}")
+            spec.optimizer.adopt_registry(self.plan_registry)
             ccfg = copy.deepcopy(self.fcfg.controller)
             server = FabricNodeServer(
                 self.plane, total_units=units_per_node,
@@ -273,8 +279,7 @@ class ClusterRouter:
         feasible batch and depths fall back to batch multiples."""
         fcfg = self.fcfg
         units = self.units_per_node
-        memo_key = (units, opt.allow_unused_threads, opt.dispatch_overhead,
-                    frozenset(opt.profile.items()))
+        memo_key = (units, opt.plan_key())
         memo = self._plan_memo.get(memo_key)
         if memo is not None:
             node.b_deg, node.thr_deg = memo
@@ -556,6 +561,12 @@ class ClusterRouter:
                 "absorbed": self.fast_absorbed,
                 "one_by_one": self.fast_one_by_one,
                 "per_node": per_node}
+
+    def planning_report(self) -> Dict[str, object]:
+        """Aggregated solver counters across all node optimizers —
+        homogeneous fleets show one shared table (bench ``planning``
+        section)."""
+        return planning_report(n.server.optimizer for n in self.nodes)
 
     def fleet_report(self, now: float) -> Dict[str, object]:
         """JSON-serializable fleet section: routing/overload counters

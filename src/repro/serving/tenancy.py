@@ -31,7 +31,8 @@ import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..core.estimator import ArrivalRateSignal
-from ..core.knapsack import PackratOptimizer, Profile
+from ..core.knapsack import (PackratOptimizer, PlanTableRegistry, Profile,
+                             planning_report)
 from ..core.multimodel import ModelWorkload, MultiModelAllocator
 from .allocator import ResourcePool
 from .controller import ControllerConfig, ModelTenant
@@ -121,6 +122,12 @@ class MultiModelServer:
         self._order: List[str] = list(ids)
         self._opts: Dict[str, PackratOptimizer] = {
             s.model_id: s.build_optimizer() for s in tenants}
+        # one plan-table registry per server: tenants serving the same
+        # profile (replicas of one model under different ids) share one
+        # DP table and its ⟨T,B⟩ plan cache across every re-plan
+        self.plan_registry = PlanTableRegistry()
+        for opt in self._opts.values():
+            opt.adopt_registry(self.plan_registry)
         self.rates: Dict[str, ArrivalRateSignal] = {
             m: ArrivalRateSignal(alpha=self.ccfg.estimator.alpha)
             for m in self._order}
@@ -246,6 +253,12 @@ class MultiModelServer:
 
     def shares(self) -> Dict[str, int]:
         return {m: self.pool.lease_of(m).n_units for m in self._order}
+
+    def planning_report(self) -> Dict[str, object]:
+        """Aggregated solver counters across all tenants' optimizers —
+        shared tables deduplicated, so same-profile tenants show one
+        table with a plan-cache hit rate (bench ``planning`` section)."""
+        return planning_report(self._opts.values())
 
     def fastpath_report(self) -> Dict[str, object]:
         """Per-tenant fast-engine coverage (see

@@ -1,0 +1,410 @@
+"""Tests for the shared-table planning engine (PR 8).
+
+The hard contract: the shared-DP-table engine must return **bit-identical**
+:class:`PackratConfig` objects — same groups, same tie-breaks, same float
+bits of latency — as the retained per-query reference DP, across profiles,
+⟨T,B⟩ grids, both ``allow_unused_threads`` modes, and calibration epochs.
+Plus the machinery around it: geometric table growth, registry sharing,
+plan-cache hits, the SLO sweep's monotone early-exit, and the controller's
+identity-correction skip gate.
+"""
+
+import random
+
+import pytest
+
+try:  # the property tests widen coverage when hypothesis is available
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (PackratOptimizer, PlanTableRegistry, default_engine,
+                        planning_report, powers_of_two, set_default_engine,
+                        solve_with_slo)
+from repro.core.paper_profiles import INCEPTION_V3
+from repro.core.profiler import ProfileCalibrator
+from repro.serving import (CalibratedBackend, ControllerConfig, EventLoop,
+                           PackratServer, TabulatedBackend)
+
+
+# --------------------------------------------------------------------- #
+# randomized inputs (seeded sweeps always run; hypothesis widens them)
+# --------------------------------------------------------------------- #
+def _random_profile(rng, max_t=4, bs=(1, 2, 4), sparse=False):
+    keys = [(t, b) for t in range(1, max_t + 1) for b in bs]
+    if sparse:  # drop cells so infeasible ⟨T,B⟩ corners get exercised
+        kept = [k for k in keys if rng.random() > 0.4]
+        keys = kept if kept else [rng.choice(keys)]
+    return {k: rng.uniform(1e-3, 10.0) for k in keys}
+
+
+if HAVE_HYPOTHESIS:
+    def profile_strategy(max_t=4, bs=(1, 2, 4)):
+        keys = [(t, b) for t in range(1, max_t + 1) for b in bs]
+        return st.lists(
+            st.floats(min_value=1e-3, max_value=10.0, allow_nan=False,
+                      allow_infinity=False),
+            min_size=len(keys), max_size=len(keys),
+        ).map(lambda vals: dict(zip(keys, vals)))
+
+
+def _solve_or_none(opt, T, B):
+    try:
+        return opt.solve(T, B)
+    except ValueError as e:
+        return ("raised", str(e))
+
+
+def _assert_identical(a, b):
+    """Bit-identity: same groups (order + counts), same float latency,
+    or the same ValueError message."""
+    if isinstance(a, tuple) and a and a[0] == "raised":
+        assert b == a
+        return
+    assert a.groups == b.groups
+    assert a.latency == b.latency          # exact float equality
+    assert str(a) == str(b)
+
+
+# --------------------------------------------------------------------- #
+# the hard contract: shared table ≡ reference DP, bit for bit
+# --------------------------------------------------------------------- #
+def _check_grid_identity(profile, allow, overhead):
+    shared = PackratOptimizer(profile, allow_unused_threads=allow,
+                              dispatch_overhead=overhead, engine="shared")
+    ref = PackratOptimizer(profile, allow_unused_threads=allow,
+                           dispatch_overhead=overhead, engine="reference")
+    for T in range(1, 7):
+        for B in (1, 2, 3, 5, 8, 11, 16):
+            _assert_identical(_solve_or_none(shared, T, B),
+                              _solve_or_none(ref, T, B))
+
+
+def _check_epoch_identity(profile, allow, scale):
+    """A calibration epoch (update_profile) must leave the shared engine
+    answering exactly like a reference solver built on the new costs."""
+    shared = PackratOptimizer(profile, allow_unused_threads=allow,
+                              engine="shared")
+    for B in (1, 2, 4):                       # warm the table + memo
+        _solve_or_none(shared, 4, B)
+    calibrated = {k: lat * scale for k, lat in profile.items()}
+    shared.update_profile(calibrated)
+    assert shared.epoch == 1
+    ref = PackratOptimizer(calibrated, allow_unused_threads=allow,
+                           engine="reference")
+    for T in range(1, 6):
+        for B in (1, 2, 4, 7, 12):
+            _assert_identical(_solve_or_none(shared, T, B),
+                              _solve_or_none(ref, T, B))
+
+
+def _check_slo_equivalence(profile, slo, T):
+    """The early-exiting sweep must pick exactly what the original
+    walk-every-probe loop picked (the naive sweep below is the pre-PR-8
+    implementation verbatim)."""
+    opt = PackratOptimizer(profile, engine="shared")
+    oracle = PackratOptimizer(profile, engine="reference")
+    naive = None
+    for b in powers_of_two(64):
+        try:
+            cfg = oracle.solve(T, b)
+        except ValueError:
+            continue
+        if cfg.latency <= slo:
+            if naive is None or cfg.throughput > naive[1].throughput:
+                naive = (b, cfg)
+    got = solve_with_slo(opt, T, slo, max_batch=64)
+    assert (got is None) == (naive is None)
+    if got is not None:
+        assert got[0] == naive[0]
+        assert got[1].groups == naive[1].groups
+        assert got[1].latency == naive[1].latency
+
+
+def test_shared_table_bit_identical_over_grid_seeded():
+    rng = random.Random(0)
+    for trial in range(40):
+        profile = _random_profile(rng, sparse=trial % 2 == 1)
+        _check_grid_identity(profile, allow=trial % 4 < 2,
+                             overhead=0.0 if trial % 3 else 1e-3)
+
+
+def test_shared_table_bit_identical_after_epoch_seeded():
+    rng = random.Random(1)
+    for trial in range(20):
+        profile = _random_profile(rng, sparse=trial % 2 == 1)
+        _check_epoch_identity(profile, allow=trial % 4 < 2,
+                              scale=rng.uniform(0.5, 2.0))
+
+
+def test_solve_with_slo_equivalent_to_naive_sweep_seeded():
+    rng = random.Random(2)
+    for trial in range(30):
+        profile = _random_profile(rng, bs=(1, 2, 4, 8),
+                                  sparse=trial % 2 == 1)
+        _check_slo_equivalence(profile, slo=rng.uniform(1e-3, 20.0),
+                               T=1 + trial % 6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(profile=profile_strategy(), allow=st.booleans(),
+           overhead=st.sampled_from([0.0, 1e-3]))
+    def test_shared_table_bit_identical_over_grid(profile, allow, overhead):
+        _check_grid_identity(profile, allow, overhead)
+
+    @settings(max_examples=30, deadline=None)
+    @given(profile=profile_strategy(), allow=st.booleans(),
+           scale=st.floats(min_value=0.5, max_value=2.0, allow_nan=False))
+    def test_shared_table_bit_identical_after_epoch(profile, allow, scale):
+        _check_epoch_identity(profile, allow, scale)
+
+    @settings(max_examples=30, deadline=None)
+    @given(profile=profile_strategy(max_t=4, bs=(1, 2, 4, 8)),
+           slo=st.floats(min_value=1e-3, max_value=20.0, allow_nan=False),
+           T=st.integers(1, 6))
+    def test_solve_with_slo_equivalent_to_naive_sweep(profile, slo, T):
+        _check_slo_equivalence(profile, slo, T)
+
+
+def test_paper_profile_bit_identical_including_slo_sweep():
+    """Full paper profile (inception_v3, 16×pow2 grid): grid solves and
+    the default 2^16 SLO sweep agree exactly across engines."""
+    profile = INCEPTION_V3.profile(16, 256)
+    shared = PackratOptimizer(profile, engine="shared")
+    ref = PackratOptimizer(profile, engine="reference")
+    for T in (1, 3, 8, 16):
+        for B in powers_of_two(256):
+            _assert_identical(shared.solve(T, B), ref.solve(T, B))
+    for slo_ms in (5.0, 50.0, 500.0):
+        a = solve_with_slo(shared, 16, slo_ms * 1e-3)
+        b = solve_with_slo(ref, 16, slo_ms * 1e-3)
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert a[0] == b[0] and a[1].groups == b[1].groups
+            assert a[1].latency == b[1].latency
+    # identical early-exits: the monotone floor saved probes on both
+    assert shared.slo_probes_saved == ref.slo_probes_saved
+    assert shared.slo_sweeps == ref.slo_sweeps == 3
+
+
+# --------------------------------------------------------------------- #
+# SLO sweep early exit
+# --------------------------------------------------------------------- #
+def test_slo_sweep_saves_probes_on_monotone_profile():
+    profile = {(t, b): 0.001 * b / t + 0.0005 * t
+               for t in range(1, 9) for b in powers_of_two(64)}
+    opt = PackratOptimizer(profile)
+    assert opt.latency_monotone_in_b
+    solve_with_slo(opt, 8, 0.004)
+    assert opt.slo_sweeps == 1
+    assert opt.slo_probes_saved > 0
+
+
+def test_slo_sweep_no_early_exit_on_non_monotone_profile():
+    """A profile where a bigger batch is *cheaper* (non-monotone row)
+    must disable the bound — the floor would not be valid."""
+    profile = {(1, 1): 10.0, (1, 4): 1.0}
+    opt = PackratOptimizer(profile)
+    assert not opt.latency_monotone_in_b
+    got = solve_with_slo(opt, 1, 5.0, max_batch=8)
+    assert opt.slo_probes_saved == 0
+    # B=1 is feasible (latency 10 > SLO) but B=4 meets the SLO: a naive
+    # "first feasible probe over SLO" exit would have missed it
+    assert got is not None and got[0] == 4
+
+
+def test_slo_floor_is_a_true_lower_bound():
+    profile = INCEPTION_V3.profile(8, 64)
+    opt = PackratOptimizer(profile)
+    assert opt.latency_monotone_in_b
+    for T in (2, 5, 8):
+        for B in powers_of_two(128):
+            floor = opt.slo_latency_floor(T, B)
+            cfg = opt.try_solve(T, B)
+            if cfg is not None:
+                assert cfg.latency >= floor - 1e-15
+
+
+# --------------------------------------------------------------------- #
+# table growth, floors, counters
+# --------------------------------------------------------------------- #
+def test_table_grows_geometrically_with_floor_at_profile_extent():
+    profile = {(t, b): 0.01 * b / t for t in (1, 2, 4) for b in (1, 2, 4, 8)}
+    opt = PackratOptimizer(profile, engine="shared")
+    opt.solve(1, 1)
+    table = opt._table
+    # first build floors at the profile's own extent (4, 8)
+    assert (table.T, table.B) == (4, 8)
+    assert table.builds == 1
+    # every in-bounds query afterwards is answered without a rebuild
+    for t in (1, 2, 3, 4):
+        for b in (1, 2, 4, 8):
+            opt.try_solve(t, b)
+    assert table.builds == 1
+    # beyond-bounds queries double the exceeded axis
+    opt.try_solve(4, 9)
+    assert table.builds == 2 and table.B == 16
+    opt.try_solve(4, 64)
+    assert table.builds == 3 and table.B == 64
+
+
+def test_optimizer_identity_memo_and_counters():
+    profile = INCEPTION_V3.profile(8, 32)
+    opt = PackratOptimizer(profile, engine="shared")
+    a = opt.solve(8, 16)
+    assert opt.solve(8, 16) is a           # per-optimizer ⟨T,B⟩ memo
+    assert opt.try_solve(8, 16) is a       # try_solve hits the same memo
+    assert opt.solves == 1 and opt.cache_hits == 2
+    rep = opt.planner_report()
+    assert rep["engine"] == "shared" and rep["table"]["builds"] >= 1
+
+
+def test_update_profile_rejects_garbage():
+    opt = PackratOptimizer({(1, 1): 1.0})
+    with pytest.raises(ValueError):
+        opt.update_profile({})
+    with pytest.raises(ValueError):
+        opt.update_profile({(0, 1): 1.0})
+    assert opt.epoch == 0                  # failed updates change nothing
+
+
+# --------------------------------------------------------------------- #
+# registry sharing (tenancy / fabric)
+# --------------------------------------------------------------------- #
+def test_registry_shares_table_and_plan_cache_across_optimizers():
+    reg = PlanTableRegistry()
+    profile = INCEPTION_V3.profile(8, 32)
+    a = PackratOptimizer(profile, allow_unused_threads=True, registry=reg)
+    b = PackratOptimizer(profile, allow_unused_threads=True, registry=reg)
+    assert a._table is b._table
+    a.solve(8, 32)
+    b.solve(8, 32)                          # plan served from the memo
+    assert a._table.backtracks == 1 and a._table.plan_hits == 1
+    rep = planning_report([a, b])
+    assert rep["tables"] == 1 and rep["plan_cache_hits"] == 1
+    # different relaxation → different fingerprint → different table
+    c = PackratOptimizer(profile, allow_unused_threads=False, registry=reg)
+    assert c._table is not a._table
+
+
+def test_adopt_registry_interns_existing_table():
+    profile = {(1, 1): 1.0, (2, 2): 0.6}
+    a = PackratOptimizer(profile)
+    a.solve(2, 2)                           # table already built
+    reg = PlanTableRegistry()
+    a.adopt_registry(reg)
+    b = PackratOptimizer(profile)
+    b.adopt_registry(reg)
+    assert b._table is a._table             # b discarded its empty table
+    assert len(reg) == 1
+
+
+def test_registry_eviction_is_bounded_and_safe():
+    reg = PlanTableRegistry(max_tables=2)
+    opts = []
+    for k in range(4):
+        opt = PackratOptimizer({(1, 1): 1.0 + k}, registry=reg)
+        opt.solve(1, 1)
+        opts.append(opt)
+    assert len(reg) == 2                    # oldest epochs evicted
+    # evicted tables stay alive through their optimizers
+    for k, opt in enumerate(opts):
+        assert opt.solve(1, 1).latency == 1.0 + k
+
+
+def test_epoch_rekeys_the_registry_entry():
+    reg = PlanTableRegistry()
+    profile = {(1, 1): 1.0}
+    a = PackratOptimizer(profile, registry=reg)
+    b = PackratOptimizer(profile, registry=reg)
+    assert a._table is b._table
+    a.update_profile({(1, 1): 2.0})
+    assert a._table is not b._table         # a re-keyed to the new epoch
+    assert b.solve(1, 1).latency == 1.0     # b undisturbed
+    assert a.solve(1, 1).latency == 2.0
+    # a peer calibrated to the same costs lands on a's new table
+    c = PackratOptimizer({(1, 1): 2.0}, registry=reg)
+    assert c._table is a._table
+
+
+# --------------------------------------------------------------------- #
+# default-engine switch
+# --------------------------------------------------------------------- #
+def test_default_engine_switch_round_trips():
+    assert default_engine() == "shared"
+    old = set_default_engine("reference")
+    try:
+        assert old == "shared"
+        assert PackratOptimizer({(1, 1): 1.0}).engine == "reference"
+    finally:
+        set_default_engine("shared")
+    assert PackratOptimizer({(1, 1): 1.0}).engine == "shared"
+    with pytest.raises(ValueError):
+        set_default_engine("nonsense")
+    with pytest.raises(ValueError):
+        PackratOptimizer({(1, 1): 1.0}, engine="nonsense")
+
+
+# --------------------------------------------------------------------- #
+# controller identity-skip gate (satellite: ReconfigController fix)
+# --------------------------------------------------------------------- #
+def _make_calibrated_server(cal):
+    profile = INCEPTION_V3.profile(4, 16)
+    loop = EventLoop()
+    server = PackratServer(
+        loop, total_units=4, optimizer=PackratOptimizer(profile),
+        backend=CalibratedBackend(TabulatedBackend(profile), cal),
+        initial_batch=4, config=ControllerConfig(), calibrator=cal)
+    return loop, server
+
+
+def test_identity_correction_skips_optimizer_rebuild():
+    """A refresh whose calibrated profile equals the optimizer's current
+    one must not rebuild or re-solve — it re-arms the window and counts
+    as skipped."""
+    profile = INCEPTION_V3.profile(4, 16)
+    cal = ProfileCalibrator(profile, rel_threshold=0.05,
+                            refresh_interval=1.0, min_samples=1)
+    loop, server = _make_calibrated_server(cal)
+    # drift up past the threshold, apply once (a real refresh) ...
+    for key in profile:
+        for _ in range(30):
+            cal.observe(key[0], key[1], profile[key] * 1.5)
+    assert cal.should_refresh(10.0)
+    server._refresh_optimizer()
+    assert server.calibration_refreshes == 1
+    assert server.calibration_refreshes_skipped == 0
+    epoch_after_real = server.optimizer.epoch
+    assert epoch_after_real == 1
+    # ... then a second window with corrections unchanged: the
+    # calibrated profile equals what the optimizer already holds
+    assert cal.calibrated_profile() == server.optimizer.profile
+    reconfigs_before = len(server.reconfig_log)
+    server._refresh_optimizer()
+    assert server.calibration_refreshes == 1            # no new apply
+    assert server.calibration_refreshes_skipped == 1
+    assert server.optimizer.epoch == epoch_after_real   # no epoch bump
+    assert len(server.reconfig_log) == reconfigs_before  # no re-solve
+    assert cal.refreshes == 1 and cal.refreshes_skipped == 1
+    assert cal.report()["refreshes_skipped"] == 1
+
+
+def test_refresh_applies_updates_in_place():
+    """A real (non-identity) refresh updates the optimizer in place —
+    same object, new epoch, calibrated costs — instead of replacing it."""
+    profile = INCEPTION_V3.profile(4, 16)
+    cal = ProfileCalibrator(profile, rel_threshold=0.05,
+                            refresh_interval=1.0, min_samples=1)
+    loop, server = _make_calibrated_server(cal)
+    opt_before = server.optimizer
+    for key in profile:
+        for _ in range(30):
+            cal.observe(key[0], key[1], profile[key] * 2.0)
+    server._refresh_optimizer()
+    assert server.optimizer is opt_before
+    assert server.optimizer.epoch == 1
+    key = next(iter(profile))
+    assert server.optimizer.profile[key] == pytest.approx(
+        2.0 * profile[key], rel=0.05)
