@@ -66,7 +66,12 @@ from repro.serving.workloads import PoissonWorkload
 #     (solve_with_slo sweeps + multi-model λ-search replans +
 #     calibration epochs) timed per planning engine, with solver
 #     counters and its own machine-normalized regression gate.
-BENCH_SCHEMA_VERSION = 3
+# v4: top-level "lm_serving" acceptance row (full profile only) —
+#     real-execution autoregressive serving of lm-tiny through the
+#     Pallas kernels, phase-split packrat vs single-fat baseline on one
+#     trace, with TTFT / decode-p95 win bits.  Wall-clock dependent, so
+#     it is an acceptance record, not a machine-normalized gate row.
+BENCH_SCHEMA_VERSION = 4
 
 UNITS = 16
 MAX_BATCH = 256
@@ -322,6 +327,66 @@ def bench_planning() -> Dict[str, object]:
     }
 
 
+# lm_serving acceptance row: small enough to finish in minutes on a
+# laptop, big enough that the phase-split's TTFT/TPOT advantage is a
+# measurement (a few hundred prompts × LM_DECODE_STEPS decode steps)
+LM_UNITS = 4
+LM_DURATION = 3.0
+LM_DECODE_STEPS = 6
+LM_BATCH = 4
+LM_SEED = 1
+
+
+def bench_lm_serving() -> Dict[str, object]:
+    """Real-execution acceptance row: serve ``lm-tiny`` through the
+    Pallas kernels under both policies on one prompt trace and record
+    whether the phase-split packrat plan beats the single fat instance
+    on TTFT p95 AND decode-step (TPOT) p95."""
+    from repro.launch.bench_serving import run_lm_scenario
+
+    sc = run_lm_scenario(
+        get_scenario("steady-poisson"), real_model="lm-tiny",
+        units=LM_UNITS, duration=LM_DURATION, seed=LM_SEED,
+        initial_batch=LM_BATCH, max_batch=LM_BATCH,
+        decode_steps=LM_DECODE_STEPS, slo_factor=4.0,
+        reconfigure_timeout=5.0)
+    rows = {}
+    for name in sc["policies"]:
+        run = sc[name]
+        rows[name] = {
+            "ttft_p95_ms": round(run["ttft_ms"]["p95"], 3),
+            "tpot_p95_ms": round(run["tpot_ms"]["p95"], 3),
+            "completed": run["completed"],
+            "unit_split": run["unit_split"],
+        }
+    static = rows["static+continuous"]
+    packrat = rows["packrat+continuous"]
+    return {
+        "real_model": "lm-tiny",
+        "units": LM_UNITS,
+        "decode_steps": LM_DECODE_STEPS,
+        "offered_prompts": sc["offered_prompts"],
+        "offered_rate_rps": round(sc["offered_rate_rps"], 2),
+        "policies": rows,
+        "acceptance": {
+            "wins_ttft_p95": packrat["ttft_p95_ms"] < static["ttft_p95_ms"],
+            "wins_decode_p95": packrat["tpot_p95_ms"] < static["tpot_p95_ms"],
+        },
+    }
+
+
+def _log_lm(row: Dict[str, object]) -> None:
+    acc = row["acceptance"]
+    pol = row["policies"]
+    print(f"[bench] lm_serving        prompts={row['offered_prompts']:8d}  "
+          f"static ttft95={pol['static+continuous']['ttft_p95_ms']:.1f}ms "
+          f"tpot95={pol['static+continuous']['tpot_p95_ms']:.1f}ms  "
+          f"packrat ttft95={pol['packrat+continuous']['ttft_p95_ms']:.1f}ms "
+          f"tpot95={pol['packrat+continuous']['tpot_p95_ms']:.1f}ms  "
+          f"wins_ttft={acc['wins_ttft_p95']} "
+          f"wins_decode={acc['wins_decode_p95']}", file=sys.stderr)
+
+
 def _profile_rows(names, duration: float, edge_requests: int,
                   label: str) -> Dict[str, object]:
     out: Dict[str, object] = {"scenarios": {}}
@@ -363,6 +428,8 @@ def build_report(*, quick: bool) -> Dict[str, object]:
         report["profiles"]["full"] = _profile_rows(
             SCENARIOS_FULL, SCENARIO_DURATION_FULL, EDGE_REQUESTS_FULL,
             "full")
+        report["lm_serving"] = bench_lm_serving()
+        _log_lm(report["lm_serving"])
     return report
 
 
@@ -495,6 +562,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                 print(f"[bench] FAIL: {label}/{name} reports diverged "
                       f"between engines", file=sys.stderr)
                 return 1
+    lm = report.get("lm_serving")
+    if lm and not all(lm["acceptance"].values()):
+        print("[bench] FAIL: lm_serving acceptance — the phase-split "
+              f"plan did not win both metrics: {lm['acceptance']}",
+              file=sys.stderr)
+        return 1
 
     if args.check:
         with open(args.check) as f:

@@ -190,3 +190,44 @@ class BatchSizeEstimator:
     def commit(self, new_batch: int) -> None:
         """Record that the system reconfigured to ``new_batch``."""
         self.current_batch = new_batch
+
+
+class PhaseEstimator:
+    """Per-phase batch-size estimation for autoregressive serving.
+
+    Prefill (compute-bound, demand ∝ arriving prompts) and decode
+    (memory-bound, demand ∝ resident in-flight sequences) see different
+    queue processes, so each phase gets its own
+    :class:`BatchSizeEstimator` fed from its own dispatcher's signal;
+    the joint estimate drives the phase-split planner
+    (``repro.core.knapsack.solve_phase_split``).
+    """
+
+    def __init__(self, phases=("prefill", "decode"),
+                 config: Optional[EstimatorConfig] = None,
+                 initial_batch: int = 1) -> None:
+        if not phases:
+            raise ValueError("need at least one phase")
+        self.estimators = {
+            p: BatchSizeEstimator(config, initial_batch=initial_batch)
+            for p in phases}
+
+    def observe(self, phase: str, queue_depth: float) -> int:
+        return self.estimators[phase].observe(queue_depth)
+
+    def smoothed_batches(self):
+        return {p: e.smoothed_batch() for p, e in self.estimators.items()}
+
+    def current_batches(self):
+        return {p: e.current_batch for p, e in self.estimators.items()}
+
+    def should_reconfigure(self, now: float):
+        """Phase → new batch for every phase whose B̃ ≠ B at this
+        (rate-limited) check; None when no phase wants a change."""
+        changed = {p: nb for p, e in self.estimators.items()
+                   if (nb := e.should_reconfigure(now)) is not None}
+        return changed or None
+
+    def commit(self, batches) -> None:
+        for p, b in batches.items():
+            self.estimators[p].commit(b)

@@ -741,6 +741,63 @@ def planning_report(optimizers: Iterable[PackratOptimizer]
     }
 
 
+def solve_phase_split(
+    phase_optimizers: Mapping[str, PackratOptimizer],
+    phase_batches: Mapping[str, int],
+    total_units: int,
+    *,
+    min_units: int = 1,
+) -> Optional[Dict[str, object]]:
+    """Phase-split unit allocation for autoregressive serving.
+
+    An LM server runs two pools with opposite resource profiles —
+    compute-bound **prefill** and memory-bound **decode** — against one
+    unit budget.  This enumerates every split ``u_a + u_b =
+    total_units`` (each ≥ ``min_units``), solves each phase's knapsack
+    against its *own* per-phase profile at its *own* estimated batch
+    (:class:`~repro.core.estimator.PhaseEstimator`), and returns the
+    split minimizing the worse phase makespan — the bottleneck phase
+    bounds both TTFT (prefill) and TPOT (decode), so minimizing the max
+    is minimizing whichever tail the user hits.
+
+    Each probe goes through :meth:`PackratOptimizer.try_solve`, so the
+    sweep rides the shared-table engine: one table build per phase, then
+    O(groups) backtracks.  Returns ``{"units": {phase: u}, "configs":
+    {phase: PackratConfig}, "objective": worst_latency}`` or ``None``
+    when no split is feasible.  Ties break toward giving the
+    first-listed phase fewer units (deterministic).
+    """
+    phases = list(phase_optimizers)
+    if len(phases) != 2:
+        raise ValueError(f"solve_phase_split plans exactly two phases, "
+                         f"got {phases}")
+    if set(phase_batches) != set(phases):
+        raise ValueError(f"phase_batches keys {sorted(phase_batches)} != "
+                         f"optimizer phases {sorted(phases)}")
+    if min_units < 1:
+        raise ValueError(f"min_units must be >= 1, got {min_units}")
+    if total_units < 2 * min_units:
+        return None
+    p0, p1 = phases
+    best: Optional[Dict[str, object]] = None
+    for u0 in range(min_units, total_units - min_units + 1):
+        u1 = total_units - u0
+        c0 = phase_optimizers[p0].try_solve(u0, phase_batches[p0])
+        if c0 is None:
+            continue
+        c1 = phase_optimizers[p1].try_solve(u1, phase_batches[p1])
+        if c1 is None:
+            continue
+        objective = max(c0.latency, c1.latency)
+        if best is None or objective < best["objective"]:
+            best = {
+                "units": {p0: u0, p1: u1},
+                "configs": {p0: c0, p1: c1},
+                "objective": objective,
+            }
+    return best
+
+
 def brute_force_solve(
     profile: Profile, threads: int, batch: int, *, allow_unused_threads: bool = False
 ) -> Optional[PackratConfig]:

@@ -415,6 +415,25 @@ class ProfileCalibrator:
         }
 
 
+PhaseProfiles = Dict[str, Profile]
+
+
+def phase_profiles(plane, spec: ProfileSpec, phases, *, warmup: int = 2,
+                   iters: int = 5) -> PhaseProfiles:
+    """One measured ``L[t,b]`` table per serving phase, through the
+    plane's phase-routed runner cells.
+
+    For an autoregressive model the two phases have opposite resource
+    profiles — prefill latency scales with prompt tokens × batch
+    (compute-bound), decode latency with the resident batch against the
+    KV cache (memory-bound) — so the knapsack must plan each phase
+    against its own table (``repro.core.knapsack.solve_phase_split``).
+    """
+    return {phase: plane.profile(spec, warmup=warmup, iters=iters,
+                                 phase=phase)
+            for phase in phases}
+
+
 def profiling_cost_summary(spec: ProfileSpec,
                            seconds_per_config: float = 60.0) -> Dict[str, float]:
     """The paper's §3.2 profiling-cost argument, parameterized.

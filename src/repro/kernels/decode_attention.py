@@ -79,18 +79,60 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _validate(q, k_cache, v_cache, lengths, block_kv: int) -> None:
+    """Shape/dtype checks with actionable errors (a bad call otherwise
+    surfaces as an opaque Pallas lowering failure deep in the grid)."""
+    if q.ndim != 4 or q.shape[1] != 1:
+        raise ValueError(
+            f"decode_attention: q must be (B, 1, H, D), got {q.shape}")
+    if k_cache.ndim != 4 or v_cache.ndim != 4:
+        raise ValueError(
+            "decode_attention: caches must be (B, S, Hkv, D), got "
+            f"k={k_cache.shape} v={v_cache.shape}")
+    if k_cache.shape != v_cache.shape:
+        raise ValueError(
+            f"decode_attention: k/v cache shapes differ: "
+            f"{k_cache.shape} vs {v_cache.shape}")
+    B, _, H, D = q.shape
+    Bk, S, Hkv, Dk = k_cache.shape
+    if Bk != B:
+        raise ValueError(
+            f"decode_attention: batch mismatch: q has B={B}, cache has "
+            f"B={Bk}")
+    if Dk != D:
+        raise ValueError(
+            f"decode_attention: head dim mismatch: q has D={D}, cache has "
+            f"D={Dk}")
+    if Hkv > H or H % Hkv != 0:
+        raise ValueError(
+            f"decode_attention: q heads H={H} must be a multiple of cache "
+            f"kv heads Hkv={Hkv} (GQA groups)")
+    if q.dtype != k_cache.dtype:
+        raise ValueError(
+            f"decode_attention: dtype mismatch: q is {q.dtype}, cache is "
+            f"{k_cache.dtype}")
+    bkv = min(block_kv, S)
+    if S % bkv != 0:
+        raise ValueError(
+            f"decode_attention: cache length S={S} must be a multiple of "
+            f"block_kv={bkv}; pad the cache (ops.decode_attention does "
+            "this automatically)")
+    if lengths.shape != (B,):
+        raise ValueError(
+            f"decode_attention: lengths must be ({B},), got {lengths.shape}")
+
+
 def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 512,
                      interpret: bool = False):
     """q: (B, 1, H, D); caches: (B, S, Hkv, D); lengths: (B,) int32.
 
     Returns (B, 1, H, D).  Cache positions >= lengths[b] are masked.
     """
+    _validate(q, k_cache, v_cache, lengths, block_kv)
     B, _, H, D = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
-    assert H % Hkv == 0
     rep = H // Hkv
     block_kv = min(block_kv, S)
-    assert S % block_kv == 0
     kv_tiles = S // block_kv
     scale = 1.0 / math.sqrt(D)
 

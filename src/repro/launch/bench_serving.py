@@ -56,6 +56,17 @@ are derived from the measured capacity and then capped
 (``--real-rate-cap``) so the Python-level event machinery is not the
 bottleneck being measured.
 
+``--execution real --real-model lm-tiny`` selects the **autoregressive
+LM path** (``repro.models.serve_lm``): a scaled-down gemma3-style
+decoder served through the Pallas flash/decode attention kernels, split
+into a prefill pool and a decode pool (two ``PackratServer``\\ s routing
+runner cells by phase) with a decode-step continuation chain
+(``--lm-decode-steps`` tokens per prompt).  ``static`` time-shares one
+fat machine between the phases; ``packrat`` splits the unit budget with
+``solve_phase_split`` against per-phase measured profiles.  Reports
+gain ``phases``/``ttft_ms``/``tpot_ms`` and per-cell ``runner_cache``
+compile accounting.
+
 ``--nodes N`` (N > 1) switches to the **cluster fabric**
 (``serving/fabric.py``): N Packrat nodes of ``--units`` each behind a
 :class:`~repro.serving.fabric.ClusterRouter` — power-of-two-choices
@@ -99,6 +110,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import math
 import sys
@@ -146,7 +158,14 @@ FABRIC_POLICIES = ("single_fat", "single_packrat", "fabric")
 #     (plans bit-identical, only solve cost differs).  Real-execution
 #     calibration gains "refreshes_skipped"/"optimizer_refreshes_skipped"
 #     (identity corrections no longer rebuild and re-solve).
-SCHEMA_VERSION = 5
+# v6: the autoregressive LM real-execution path (--real-model lm-tiny):
+#     phase-tagged requests add "phases"/"ttft_ms"/"tpot_ms" to
+#     phase-serving reports (absent from every one-shot report, which
+#     stays byte-identical), per-phase "measured_profile_ms", the
+#     "unit_split"/"planned_split" phase-plan keys, "decode_steps", and
+#     the "runner_cache" compile/eviction accounting (compile_ms is
+#     excluded from all latency percentiles).
+SCHEMA_VERSION = 6
 
 # simulation engines for the virtual-clock paths: the event-at-a-time
 # oracle and the vectorized core (repro.serving.fastsim).  Reports are
@@ -409,6 +428,259 @@ def run_real_scenario(sc: Scenario, *, real_model: str, units: int,
                 units=units, duration=duration,
                 initial_batch=initial_batch, max_batch=max_batch,
                 slo_deadline=slo, reconfigure_timeout=reconfigure_timeout,
+                dispatch=dispatch, real_model=real_model)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# autoregressive LM path (--execution real --real-model lm-tiny)
+# --------------------------------------------------------------------- #
+def run_lm_policy(policy: str, arrivals: List[float], *, factory,
+                  profiles: Dict[str, Dict[Tuple[int, int], float]],
+                  units: int, duration: float, initial_batch: int,
+                  max_batch: int, decode_steps: int,
+                  slo_by_phase: Dict[str, float],
+                  reconfigure_timeout: float, dispatch: str = "continuous",
+                  real_model: str = "") -> Dict[str, object]:
+    """One policy over one prompt trace on the real LM serving plane.
+
+    Both policies run **two** :class:`PackratServer` pools — one per
+    phase, named by ``model_id`` so the plane routes each pool's batches
+    to its phase's runner cells — over one :class:`RealPlane` whose unit
+    gate is the physical machine:
+
+    * ``static`` — each phase pool is one fat ⟨1,T,b⟩ instance sized to
+      the *whole* machine, so the gate time-shares the device between
+      phases: decode steps stall behind prefill batches (and behind
+      each other), the honest single-fat-server baseline;
+    * ``packrat`` — :func:`~repro.core.knapsack.solve_phase_split`
+      splits the unit budget across the phases against their own
+      measured profiles; each pool's knapsack then plans inside its
+      share, so prefill and decode execute concurrently.
+
+    Requests flow prompt → prefill pool → (continuation) decode pool →
+    ``decode_steps - 1`` same-pool re-enqueues: the prefill completion
+    hook submits the first decode step on the *other* dispatcher, and
+    the decode hook returns the next step's request for same-dispatcher
+    re-enqueue until EOS.  Prefill request latency is TTFT, decode-step
+    latency is TPOT (``phases``/``ttft_ms``/``tpot_ms`` report keys).
+    """
+    from ..core.knapsack import fat_config, solve_phase_split
+    from ..core.profiler import ProfileCalibrator
+    from ..serving import CalibratedBackend, RealPlane
+    from ..models.serve_lm import PHASES, PHASE_DECODE, PHASE_PREFILL
+    b0 = max(1, min(initial_batch, max_batch))
+    split_rep: Optional[Dict[str, object]] = None
+    if policy == "static":
+        unit_share = {p: units for p in PHASES}
+        phase_opts = {
+            p: PackratOptimizer({(t, b): lat
+                                 for (t, b), lat in profiles[p].items()
+                                 if t == units})
+            for p in PHASES}
+        timeout = 10.0 * duration + 1e6
+        refresh = math.inf
+    elif policy == "packrat":
+        phase_opts = {p: PackratOptimizer(profiles[p]) for p in PHASES}
+        # decode demand: every prompt batch in flight fans out into
+        # decode_steps sequential token steps, so the decode pool's
+        # steady-state batch is ~decode_steps × the prompt batch — plan
+        # it for the largest feasible such batch (halving until some
+        # unit split can host it exactly)
+        split = None
+        b_dec = min(b0 * decode_steps, units * max_batch)
+        while split is None and b_dec >= b0:
+            split = solve_phase_split(
+                phase_opts, {PHASE_PREFILL: b0, PHASE_DECODE: b_dec},
+                units)
+            if split is None:
+                b_dec //= 2
+        if split is None:
+            raise ValueError(
+                f"no feasible phase split of {units} units at batch {b0}")
+        unit_share = dict(split["units"])
+        split_rep = {
+            "units": dict(split["units"]),
+            "objective_ms": split["objective"] * 1e3,
+            "configs": {p: str(c) for p, c in split["configs"].items()},
+        }
+        timeout = reconfigure_timeout
+        refresh = reconfigure_timeout
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+
+    plane = RealPlane(factory, units)
+    metrics = MetricsCollector(slo_by_model=slo_by_phase)
+    drain = max(REAL_DRAIN_MIN_S, REAL_DRAIN_FACTOR * duration)
+    servers: Dict[str, PackratServer] = {}
+    cals: Dict[str, object] = {}
+    # partial-batch coalesce window: the default 50 ms dispatcher timer
+    # is sized for paper-scale (tens-of-ms) CNN batches; LM steps run in
+    # ~1 ms, so a lone request waiting a full window would swamp TTFT
+    # and TPOT tails under BOTH policies.  A few step-times of
+    # coalescing keeps batches forming without dominating the latency.
+    step_ms = {p: profiles[p][(units, 1)] for p in PHASES}
+    batch_timeout = max(0.002, 4.0 * max(step_ms.values()))
+    for p in PHASES:
+        ccfg = ControllerConfig()
+        ccfg.dispatch_policy = dispatch
+        ccfg.dispatcher.batch_timeout = batch_timeout
+        ccfg.estimator.reconfigure_timeout = timeout
+        ccfg.estimator.max_batch = max_batch
+        cal = ProfileCalibrator(phase_opts[p].profile,
+                                refresh_interval=refresh)
+        cals[p] = cal
+        servers[p] = PackratServer(
+            plane, total_units=unit_share[p], optimizer=phase_opts[p],
+            backend=CalibratedBackend(
+                TabulatedBackend(phase_opts[p].profile), cal),
+            initial_batch=b0, config=ccfg, calibrator=cal, model_id=p,
+            # compile-ahead: every plan application (initial spawn and
+            # each reconfiguration's passive spawn) warms the plan's
+            # ⟨t,b⟩ runner cells for this pool's phase
+            on_plan_apply=(lambda cfg, p=p: plane.warm(
+                [(g.t, g.b) for g in cfg.groups], p)))
+        metrics.attach(servers[p],
+                       sample_interval=min(0.25, duration / 100.0),
+                       until=duration + drain)
+
+    # decode-step continuation chain: ids disjoint from prompt ids
+    rid = itertools.count(1_000_000_000)
+
+    def _next_decode(steps_left: int) -> Request:
+        req = Request(next(rid), plane.now, model_id=PHASE_DECODE,
+                      phase=PHASE_DECODE, steps_left=steps_left)
+        metrics.on_request(req)
+        return req
+
+    def prefill_done(resp) -> Optional[Request]:
+        # cross-phase hand-off: submit on the decode dispatcher, return
+        # None so nothing re-enters the prefill queue
+        if decode_steps > 0:
+            servers[PHASE_DECODE].submit(_next_decode(decode_steps))
+        return None
+
+    def decode_done(resp) -> Optional[Request]:
+        # same-dispatcher re-enqueue until EOS/max-len
+        if resp.request.steps_left > 1:
+            return _next_decode(resp.request.steps_left - 1)
+        return None
+
+    servers[PHASE_PREFILL].dispatcher.continuation = prefill_done
+    servers[PHASE_DECODE].dispatcher.continuation = decode_done
+
+    for i, t in enumerate(arrivals):
+        req = Request(i, t, model_id=PHASE_PREFILL, phase=PHASE_PREFILL)
+        metrics.on_request(req)
+        plane.at(t, (lambda req=req: servers[PHASE_PREFILL].submit(req)))
+    plane.run_until(duration + drain)
+    plane.close()
+
+    rep = metrics.report(duration=duration)
+    rep["execution"] = "real"
+    rep["real_model"] = real_model
+    rep["dispatch"] = dispatch
+    rep["decode_steps"] = decode_steps
+    rep["unit_split"] = dict(unit_share)
+    if split_rep is not None:
+        rep["planned_split"] = split_rep
+    rep["expected_latency_ms"] = {
+        p: servers[p].reconfig_log[-1][2].latency * 1e3 for p in PHASES}
+    rep["servers"] = {}
+    for p in PHASES:
+        srep: Dict[str, object] = {"units": unit_share[p]}
+        _controller_report_fields(srep, servers[p], plane.now)
+        calibration = cals[p].report()
+        calibration["optimizer_refreshes"] = \
+            servers[p].calibration_refreshes
+        calibration["optimizer_refreshes_skipped"] = \
+            servers[p].calibration_refreshes_skipped
+        srep["calibration"] = calibration
+        rep["servers"][p] = srep
+    # first-touch compile accounting (excluded from every latency
+    # percentile: the factory compiles outside the timed path)
+    rep["runner_cache"] = plane.runner_report()
+    rep["planning"] = planning_report(
+        [servers[p].optimizer for p in PHASES])
+    return rep
+
+
+def run_lm_scenario(sc: Scenario, *, real_model: str, units: int,
+                    duration: float, seed: int, initial_batch: int,
+                    max_batch: int, decode_steps: int, slo_factor: float,
+                    reconfigure_timeout: float,
+                    policies: tuple = POLICIES,
+                    dispatches: Tuple[str, ...] = ("continuous",),
+                    rate_cap: Optional[float] = 300.0,
+                    slo_ms: Optional[float] = None) -> Dict[str, object]:
+    """Every policy × dispatch combo for one LM serving scenario:
+    shared per-phase measured profiles, one shared (capped) prompt
+    trace, single-fat baseline vs phase-split packrat."""
+    from ..core.knapsack import next_power_of_two, powers_of_two
+    from ..core.profiler import ProfileSpec, phase_profiles
+    from ..models.serve_lm import PHASES, PHASE_DECODE, PHASE_PREFILL, \
+        make_lm_engine
+    from ..serving import RealPlane
+    if units < 2:
+        raise ValueError("LM phase-split serving needs --units >= 2")
+    engine = make_lm_engine(real_model, seed=seed)
+    factory = engine.factory()
+    # per-phase ⟨t,b⟩ tables through the same plane runners the servers
+    # then execute (sparse pow2 thread axis, always including T); the
+    # engine caches compiled cells, so serving planes reuse them
+    thread_values = tuple(sorted(set(powers_of_two(units)) | {units}))
+    prof_plane = RealPlane(factory, units)
+    profiles = phase_profiles(
+        prof_plane, ProfileSpec(units, max_batch,
+                                thread_values=thread_values),
+        PHASES, warmup=1, iters=3)
+    prof_plane.close()
+    b0 = max(1, min(initial_batch, max_batch))
+    opt = PackratOptimizer(profiles[PHASE_PREFILL])
+    ctx = ScenarioContext(threads=units, optimizer=opt, duration=duration,
+                          seed=seed, max_total_batch=units * max_batch)
+    workload = sc.build(ctx)
+    arrivals = workload.arrivals(duration, seed=seed)
+    # cap offered prompts against the *serial* per-prompt cost (prefill
+    # + the whole decode chain on the fat machine): ~50% utilization of
+    # one time-shared device, enough queueing to separate the policies
+    # without overloading the Python reactor
+    serial = (profiles[PHASE_PREFILL][(units, 1)]
+              + decode_steps * profiles[PHASE_DECODE][(units, 1)])
+    auto_cap = 0.5 / max(serial, 1e-9)
+    cap = auto_cap if rate_cap is None or rate_cap <= 0 \
+        else min(rate_cap, auto_cap)
+    arrivals, capped = _cap_rate(arrivals, duration, cap)
+    bq = next_power_of_two(b0)
+    slo_by_phase = {
+        p: (slo_ms * 1e-3 if slo_ms is not None
+            else slo_factor * profiles[p][(units, bq)])
+        for p in PHASES}
+    out: Dict[str, object] = {
+        "scenario": sc.name,
+        "description": sc.description,
+        "workload": workload.name,
+        "execution": "real",
+        "real_model": real_model,
+        "decode_steps": decode_steps,
+        "offered_prompts": len(arrivals),
+        "offered_rate_rps": len(arrivals) / duration,
+        "rate_capped": capped,
+        "measured_profile_ms": {
+            p: {f"{t},{b}": lat * 1e3
+                for (t, b), lat in sorted(profiles[p].items())}
+            for p in PHASES},
+        "slo_deadline_ms": {p: s * 1e3 for p, s in slo_by_phase.items()},
+        "policies": [policy_key(p, d) for p in policies for d in dispatches],
+    }
+    for policy in policies:
+        for dispatch in dispatches:
+            out[policy_key(policy, dispatch)] = run_lm_policy(
+                policy, arrivals, factory=factory, profiles=profiles,
+                units=units, duration=duration, initial_batch=b0,
+                max_batch=max_batch, decode_steps=decode_steps,
+                slo_by_phase=slo_by_phase,
+                reconfigure_timeout=reconfigure_timeout,
                 dispatch=dispatch, real_model=real_model)
     return out
 
@@ -874,8 +1146,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "reference DP — plans are bit-identical, only "
                          "control-plane solve cost differs")
     ap.add_argument("--real-model", default="mlp-tiny",
-                    help="micro model for --execution real "
-                         "(repro.models.micro registry)")
+                    help="model for --execution real: a micro model "
+                         "(repro.models.micro registry) or an "
+                         "autoregressive LM (repro.models.serve_lm, "
+                         "e.g. lm-tiny — switches to phase-split "
+                         "prefill/decode serving)")
+    ap.add_argument("--lm-decode-steps", type=int, default=8,
+                    help="decode steps per prompt before EOS for LM "
+                         "real models (the decode continuation chain)")
     ap.add_argument("--real-rate-cap", type=float, default=300.0,
                     help="cap offered load (req/s) under --execution real "
                          "so Python event overhead is not the bottleneck; "
@@ -926,9 +1204,65 @@ def main(argv: Optional[List[str]] = None) -> int:
                      "execution measures interference instead of "
                      "modelling it")
         from ..models.micro import MICRO_MODELS
-        if args.real_model not in MICRO_MODELS:
+        from ..models.serve_lm import LM_MODELS
+        if args.real_model not in MICRO_MODELS + LM_MODELS:
             ap.error(f"unknown --real-model {args.real_model!r}; "
-                     f"choose from {sorted(MICRO_MODELS)}")
+                     f"choose from {sorted(MICRO_MODELS + LM_MODELS)}")
+        if args.real_model in LM_MODELS:
+            if args.lm_decode_steps < 1:
+                ap.error("--lm-decode-steps must be >= 1")
+            if args.units < 2:
+                ap.error("LM phase-split serving needs --units >= 2")
+            scenarios = _select_scenarios(args, ap)
+            # decode KV-cache cells are memory-bound; keep the profiled
+            # batch grid at serving scale rather than the one-shot 256
+            lm_max_batch = min(args.max_batch, 8)
+            report = {
+                "schema_version": SCHEMA_VERSION,
+                "planner": args.planner,
+                "execution": "real",
+                "real_model": args.real_model,
+                "decode_steps": args.lm_decode_steps,
+                "real_rate_cap_rps": args.real_rate_cap,
+                "units": args.units,
+                "duration_s": args.duration,
+                "seed": args.seed,
+                "initial_batch": args.initial_batch,
+                "max_batch": lm_max_batch,
+                "slo_factor": args.slo_factor,
+                "slo_ms": args.slo_ms,
+                "dispatches": list(dispatches),
+                "policies": keys,
+                "scenarios": {},
+            }
+            for sc in scenarios:
+                result = run_lm_scenario(
+                    sc, real_model=args.real_model, units=args.units,
+                    duration=args.duration, seed=args.seed,
+                    initial_batch=args.initial_batch,
+                    max_batch=lm_max_batch,
+                    decode_steps=args.lm_decode_steps,
+                    slo_factor=args.slo_factor,
+                    reconfigure_timeout=args.reconfigure_timeout,
+                    dispatches=dispatches, rate_cap=args.real_rate_cap,
+                    slo_ms=args.slo_ms)
+                report["scenarios"][sc.name] = result
+                parts = []
+                for key in keys:
+                    rep = result[key]
+                    ttft = rep.get("ttft_ms", {}).get("p95")
+                    tpot = rep.get("tpot_ms", {}).get("p95")
+                    parts.append(
+                        f"{key}: ttft95="
+                        f"{'n/a' if ttft is None else f'{ttft:.1f}ms'} "
+                        f"tpot95="
+                        f"{'n/a' if tpot is None else f'{tpot:.1f}ms'}")
+                print(f"[bench] {sc.name:16s} "
+                      f"prompts={result['offered_prompts']:5d} "
+                      f"[lm:{args.real_model}]  " + "  ".join(parts),
+                      file=sys.stderr)
+            _emit_report(report, args.out)
+            return 0
         scenarios = _select_scenarios(args, ap)
         report: Dict[str, object] = {
             "schema_version": SCHEMA_VERSION,

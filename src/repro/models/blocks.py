@@ -166,17 +166,41 @@ def apply_attn_block(params, x, cfg: ModelConfig, kind: str, *, mode: str,
         else:
             ck = _write_full_cache(cache["k"], k, pos)
             cv = _write_full_cache(cache["v"], v, pos)
-        attn = decode_attention(q, ck, cv, pos, window=window,
-                                seq_shard=cfg.decode_seq_shard and not window)
+        if cfg.use_pallas_kernels:
+            # Pallas flash-decode: position mask → per-batch valid length.
+            # Full cache: slots 0..pos hold tokens 0..pos.  Ring cache
+            # (window): the last min(pos+1, L) tokens occupy some
+            # permutation of the first min(pos+1, L) slots — softmax is
+            # permutation-invariant over KV, so a plain length mask is
+            # exact for both layouts.
+            from ..kernels import ops as kernel_ops
+            L = ck.shape[1]
+            lengths = jnp.broadcast_to(
+                jnp.minimum(jnp.asarray(pos, jnp.int32) + 1, L),
+                (q.shape[0],))
+            attn = kernel_ops.decode_attention(
+                q.astype(ck.dtype), ck, cv, lengths,
+                block_kv=cfg.attn_block_kv)
+        else:
+            attn = decode_attention(
+                q, ck, cv, pos, window=window,
+                seq_shard=cfg.decode_seq_shard and not window)
         cache = dict(cache, k=ck, v=cv)
     else:
         q, k, v = _qkv(params["attn"], h, cfg, kind, positions)
         if cfg.seq_sharding and cfg.sp_gather_heads:
             from .common import shard_heads
             q, k, v = shard_heads(q), shard_heads(k), shard_heads(v)
-        attn = blocked_attention(q, k, v, causal=causal, window=window,
-                                 block_q=cfg.attn_block_q,
-                                 block_kv=cfg.attn_block_kv)
+        if cfg.use_pallas_kernels and causal:
+            from ..kernels import ops as kernel_ops
+            attn = kernel_ops.flash_attention(
+                q.astype(v.dtype), k.astype(v.dtype), v, causal=True,
+                window=window, block_q=cfg.attn_block_q,
+                block_kv=cfg.attn_block_kv)
+        else:
+            attn = blocked_attention(q, k, v, causal=causal, window=window,
+                                     block_q=cfg.attn_block_q,
+                                     block_kv=cfg.attn_block_kv)
         if mode == "prefill":
             assert cache is not None
             if window:

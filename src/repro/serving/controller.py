@@ -72,14 +72,21 @@ class ModelTenant:
                  model_id: str = DEFAULT_MODEL,
                  on_response: Optional[Callable[[Response], None]] = None,
                  peer_live: Optional[Callable[[], int]] = None,
-                 calibrator: Optional[ProfileCalibrator] = None) -> None:
+                 calibrator: Optional[ProfileCalibrator] = None,
+                 on_plan_apply: Optional[Callable[[PackratConfig], None]]
+                 = None) -> None:
         """``loop`` may be a raw :class:`EventLoop` or any
         :class:`~repro.serving.plane.ExecutionPlane` — the tenant is
         plane-agnostic.  ``calibrator`` enables the closed profile-
         refinement loop: every completed batch's observed latency feeds
         it, and once the expected-vs-observed correction drifts past
         its threshold the optimizer is rebuilt from the calibrated
-        ``L[t,b]`` table and the knapsack re-solves (Fig. 9, closed)."""
+        ``L[t,b]`` table and the knapsack re-solves (Fig. 9, closed).
+        ``on_plan_apply`` is called with each newly spawned plan's
+        :class:`PackratConfig` (initial spawn and every reconfiguration,
+        at passive-spawn time for active-passive swaps) — the real
+        plane's compile-ahead warm-up hook, so the first request after a
+        replan never eats a jit compile stall."""
         self.plane: ExecutionPlane = as_plane(loop)
         self.loop = self.plane          # plane is EventLoop-compatible
         self.model_id = model_id
@@ -101,12 +108,14 @@ class ModelTenant:
         self._draining_cfg: Optional[PackratConfig] = None
         self.workers_ever: List[WorkerInstance] = []   # for metrics reports
 
+        self.on_plan_apply = on_plan_apply
         first = self.optimizer.solve(total_units, initial_batch)
         self.apc = ActivePassiveController(
             spawn_cost=self._spawn_cost, drain_cost=self._drain_cost,
             on_swap=self._on_swap)
         self.apc.start(first, now=self.plane.now)
         workers = self._spawn_workers(first)
+        self._plan_applied(first)
         self.dispatcher = self.plane.make_dispatcher(
             first, workers, self._on_response, self.ccfg.dispatcher,
             policy=make_policy(self.ccfg.dispatch_policy),
@@ -165,6 +174,11 @@ class ModelTenant:
         self._workers_by_cfg[id(config)] = workers
         self.workers_ever.extend(workers)
         return workers
+
+    def _plan_applied(self, config: PackratConfig) -> None:
+        """Notify the plan-apply hook (compile-ahead warm-up)."""
+        if self.on_plan_apply is not None:
+            self.on_plan_apply(config)
 
     def _release_workers(self, config: PackratConfig) -> None:
         entry = self._placements.pop(id(config), None)
@@ -314,6 +328,7 @@ class ModelTenant:
             # scaling, no active-passive transition needed.
             self._release_workers(old_cfg)
             workers = self._spawn_workers(new_cfg)
+            self._plan_applied(new_cfg)
             self.dispatcher.set_config(new_cfg, workers)
             self.apc.start(new_cfg, now=self.loop.now)
             self.reconfig_log.append((self.loop.now, new_batch, new_cfg))
@@ -322,6 +337,7 @@ class ModelTenant:
         # (resources oversubscribe transiently), swap when ready; the old
         # set is released when the APC finishes draining (see tick).
         new_workers = self._spawn_workers(new_cfg)
+        self._plan_applied(new_cfg)
         self.apc.request_reconfig(new_cfg, self.loop.now)
         self.reconfig_log.append((self.loop.now, new_batch, new_cfg))
         self._pending_workers = new_workers
@@ -403,16 +419,22 @@ class PackratServer(ModelTenant):
                  initial_batch: int, config: Optional[ControllerConfig] = None,
                  domain_size: Optional[int] = None,
                  calibrator: Optional[ProfileCalibrator] = None,
-                 on_response: Optional[Callable[[Response], None]] = None
-                 ) -> None:
+                 on_response: Optional[Callable[[Response], None]] = None,
+                 model_id: str = DEFAULT_MODEL,
+                 on_plan_apply: Optional[Callable[[PackratConfig], None]]
+                 = None) -> None:
         """``on_response`` (optional) is invoked for every delivered
         response in addition to the ``responses`` log — the cluster
-        fabric chains its exactly-once delivery handler here."""
+        fabric chains its exactly-once delivery handler here.
+        ``model_id`` names the pool (the LM serving path runs one server
+        per phase, "prefill"/"decode", and the real plane routes runner
+        cells by the workers' model_id)."""
         super().__init__(loop, total_units=total_units, optimizer=optimizer,
                          backend=backend, initial_batch=initial_batch,
                          allocator=ResourceAllocator(total_units, domain_size),
                          config=config, calibrator=calibrator,
-                         on_response=on_response)
+                         on_response=on_response, model_id=model_id,
+                         on_plan_apply=on_plan_apply)
         self._schedule_tick()
 
     def _schedule_tick(self) -> None:
@@ -444,6 +466,7 @@ class PackratServer(ModelTenant):
                               if self.apc.active else None):
                 old_cfg = self.apc.active
                 new_workers = self._spawn_workers(cfg)
+                self._plan_applied(cfg)
                 self._pending_workers = new_workers
                 self.apc.request_reconfig(cfg, self.loop.now)
                 self.reconfig_log.append(

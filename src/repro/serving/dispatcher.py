@@ -107,6 +107,16 @@ class Dispatcher:
         # observed per-batch latencies for the calibration loop:
         # on_measure(threads, n_items, observed_latency_s)
         self.on_measure: Optional[Callable[[int, int, float], None]] = None
+        # decode-step continuation (autoregressive serving): called once
+        # per delivered response; a returned Request is re-enqueued on
+        # *this* dispatcher (a completed decode step re-enters the queue
+        # until EOS/max-len, so continuous dispatch coalesces decode
+        # batches across in-flight sequences).  Cross-phase hand-off
+        # (prefill → decode pool) is done by the hook itself enqueueing
+        # on the other dispatcher and returning None.  Default None:
+        # classic one-shot serving is untouched.
+        self.continuation: Optional[Callable[[Response],
+                                             Optional[Request]]] = None
         self.queue: Deque[Request] = collections.deque()
         self.batch_size = 0
         self.instances: List[WorkerInstance] = []
@@ -251,16 +261,22 @@ class Dispatcher:
             if self.on_measure is not None:
                 self.on_measure(worker.threads, len(sub), observed)
             delivered = 0
+            followups: List[Request] = []
             for r in sub:
                 if r.id in self._done_requests:
                     continue
                 self._done_requests.add(r.id)
                 delivered += 1
-                self.on_response(Response(
+                resp = Response(
                     request=r, completion=self.loop.now,
                     batch_size=len(sub), instance_id=worker.id,
                     redispatched=redispatch > 0,
-                    model_id=worker.model_id))
+                    model_id=worker.model_id)
+                self.on_response(resp)
+                if self.continuation is not None:
+                    nxt = self.continuation(resp)
+                    if nxt is not None:
+                        followups.append(nxt)
             # real-plane late completion: the watchdog deadline may have
             # passed while the batch was still executing (its retire pass
             # skipped the in-flight ids) — retire here, the last event
@@ -271,6 +287,11 @@ class Dispatcher:
                     if self._retire_at.get(r.id, _INF) < self.loop.now]
             if late:
                 self._retire(late)
+            # re-enqueue continuations before on_batch_done so the worker
+            # this batch just freed can immediately coalesce the next
+            # decode sub-batch across the in-flight sequences
+            for nxt in followups:
+                self.on_request(nxt)
             self.policy.on_batch_done(worker, delivered)
 
         for r in sub:

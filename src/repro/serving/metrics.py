@@ -205,6 +205,10 @@ class MetricsCollector:
         self.shed_by_model: Dict[str, int] = {}
         self.shed_by_node: Dict[str, int] = {}
         self.latencies_by_node: Dict[str, List[float]] = {}
+        # autoregressive runs tag requests with a phase ("prefill" /
+        # "decode"); one-shot requests carry "" and land in no phase
+        # bucket, keeping their report schema byte-identical
+        self.latencies_by_phase: Dict[str, List[float]] = {}
 
     def slo_for(self, model_id: str) -> Optional[float]:
         return self.slo_by_model.get(model_id, self.slo_deadline)
@@ -235,6 +239,9 @@ class MetricsCollector:
         node = getattr(resp, "node_id", None)
         if node is not None:
             self.latencies_by_node.setdefault(node, []).append(resp.latency)
+        phase = getattr(resp.request, "phase", "")
+        if phase:
+            self.latencies_by_phase.setdefault(phase, []).append(resp.latency)
         if resp.redispatched:
             self.redispatched += 1
 
@@ -480,6 +487,30 @@ class MetricsCollector:
             }
         return out
 
+    def phases_report(self) -> Dict[str, Dict[str, object]]:
+        """Per-phase latency breakdown for autoregressive runs.
+
+        The prefill bucket's request latency is **TTFT** (arrival →
+        first token); the decode bucket's is **TPOT** (decode-step
+        re-enqueue → token delivery).  Empty for one-shot runs — no
+        request carries a phase tag — so non-LM reports keep their
+        schema unchanged."""
+        out: Dict[str, Dict[str, object]] = {}
+        for phase in sorted(self.latencies_by_phase):
+            lats = sorted(self.latencies_by_phase[phase])
+            n = len(lats)
+            out[phase] = {
+                "completed": n,
+                "latency_ms": {
+                    "mean": (sum(lats) / n * 1e3) if n else None,
+                    "p50": nearest_rank(lats, 50) * 1e3 if n else None,
+                    "p95": nearest_rank(lats, 95) * 1e3 if n else None,
+                    "p99": nearest_rank(lats, 99) * 1e3 if n else None,
+                    "max": lats[-1] * 1e3 if n else None,
+                },
+            }
+        return out
+
     def worst_model_p95(self) -> float:
         """max over models of p95 latency — the multi-model makespan
         analogue the planner minimizes (NaN with no completions)."""
@@ -528,6 +559,17 @@ class MetricsCollector:
             # only fabric runs produce node-tagged samples; single-node
             # reports keep their schema unchanged
             rep["nodes"] = nodes
+        phases = self.phases_report()
+        if phases:
+            # only autoregressive runs produce phase-tagged samples;
+            # one-shot reports keep their schema unchanged.  TTFT/TPOT
+            # are aliases of the prefill/decode latency summaries — the
+            # headline numbers an LLM-serving comparison reads.
+            rep["phases"] = phases
+            if "prefill" in phases:
+                rep["ttft_ms"] = phases["prefill"]["latency_ms"]
+            if "decode" in phases:
+                rep["tpot_ms"] = phases["decode"]["latency_ms"]
         return rep
 
 

@@ -35,13 +35,14 @@ precondition for the closed expected-vs-observed calibration loop
 
 from __future__ import annotations
 
+import collections
 import heapq
 import itertools
 import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from ..core.knapsack import next_power_of_two
 from ..core.profiler import MeasuredProfiler, Profile, ProfileSpec
@@ -186,17 +187,35 @@ class RealPlane(ExecutionPlane):
     name = "real"
 
     def __init__(self, make_runner: RunnerFactory, total_units: int, *,
-                 clock: Callable[[], float] = time.perf_counter) -> None:
+                 clock: Callable[[], float] = time.perf_counter,
+                 max_runners: int = 32) -> None:
         if total_units < 1:
             raise ValueError(f"total_units must be >= 1, got {total_units}")
+        if max_runners < 1:
+            raise ValueError(f"max_runners must be >= 1, got {max_runners}")
         self._make = make_runner
+        # factories marked ``phase_aware`` (repro.models.serve_lm) take a
+        # third argument selecting the runner phase; the plane routes a
+        # worker's batches by its model_id ("prefill" / "decode" pools)
+        self._phase_aware = bool(getattr(make_runner, "phase_aware", False))
         self.total_units = total_units
         self._clock = clock
         self._epoch: Optional[float] = None
         self._timers: List[Tuple[float, int, Callable[[], None]]] = []
         self._seq = itertools.count()
         self._completions: "queue.Queue[Callable[[], None]]" = queue.Queue()
-        self._runners: Dict[Tuple[int, int], BatchRunner] = {}
+        # LRU-bounded compiled-runner cache: long sweeps over batch sizes
+        # (or phase × seq-bucket cells) must not accumulate executables
+        # unboundedly.  Evicting an in-flight runner is safe — the
+        # executing batch holds its own reference.
+        self._runners: "collections.OrderedDict[Tuple[str, int, int], BatchRunner]" \
+            = collections.OrderedDict()
+        self._max_runners = max_runners
+        self.runner_evictions = 0
+        # first-touch build/compile wall time per cell, in ms — excluded
+        # from every latency percentile (the factory compiles outside the
+        # timed path), reported so drains aren't silently inflated
+        self.compile_ms: Dict[str, float] = {}
         self._executors: Dict[int, ThreadPoolExecutor] = {}
         self._units_cv = threading.Condition()
         self._units_free = total_units
@@ -262,13 +281,59 @@ class RealPlane(ExecutionPlane):
     # ------------------------------------------------------------------ #
     # execution
     # ------------------------------------------------------------------ #
-    def runner(self, t: int, b: int) -> BatchRunner:
-        """The cached jitted runner for a ⟨t, b⟩ cell (b rounds up to
-        the next power of two — compiled bucket sizes)."""
-        key = (t, next_power_of_two(max(1, b)))
-        if key not in self._runners:
-            self._runners[key] = self._make(*key)
-        return self._runners[key]
+    def runner(self, t: int, b: int, phase: str = "") -> BatchRunner:
+        """The cached jitted runner for a ⟨phase, t, b⟩ cell (b rounds up
+        to the next power of two — compiled bucket sizes).  Cache hits
+        refresh LRU order; misses build the runner (timing the first-touch
+        compile into :attr:`compile_ms`) and may evict the least recently
+        used cell."""
+        key = (phase, t, next_power_of_two(max(1, b)))
+        run = self._runners.get(key)
+        if run is None:
+            t0 = self._clock()
+            if self._phase_aware:
+                run = self._make(key[1], key[2], phase)
+            else:
+                run = self._make(key[1], key[2])
+            elapsed_ms = (self._clock() - t0) * 1e3
+            label = f"{phase}:{key[1]},{key[2]}" if phase \
+                else f"{key[1]},{key[2]}"
+            self.compile_ms[label] = self.compile_ms.get(label, 0.0) \
+                + elapsed_ms
+            self._runners[key] = run
+            while len(self._runners) > self._max_runners:
+                self._runners.popitem(last=False)
+                self.runner_evictions += 1
+        else:
+            self._runners.move_to_end(key)
+        return run
+
+    def _worker_phase(self, worker: WorkerInstance) -> str:
+        """Phase-aware factories route by the worker's pool identity."""
+        return worker.model_id if self._phase_aware else ""
+
+    def warm(self, cells: Iterable[Tuple[int, int]], phase: str = "") -> int:
+        """Compile-ahead: instantiate the runner for each ⟨t, b⟩ cell now
+        (triggered from the controller's plan-apply hook during a
+        reconfiguration) so the first request after a replan never eats a
+        jit compile stall.  Returns the number of cells newly compiled."""
+        n = 0
+        for t, b in cells:
+            key = (phase, t, next_power_of_two(max(1, b)))
+            n += key not in self._runners
+            self.runner(t, b, phase)
+        return n
+
+    def runner_report(self) -> Dict[str, object]:
+        """Runner-cache accounting for bench reports: per-cell first-touch
+        compile ms (excluded from latency percentiles), LRU evictions and
+        current cache occupancy."""
+        return {
+            "cached": len(self._runners),
+            "evictions": self.runner_evictions,
+            "compile_ms": {k: round(v, 3)
+                           for k, v in sorted(self.compile_ms.items())},
+        }
 
     def _acquire_units(self, n: int) -> None:
         with self._units_cv:
@@ -311,7 +376,8 @@ class RealPlane(ExecutionPlane):
         busy_before = worker.busy_until
         worker.begin_batch(n_items, now, expected)
         expected_done = max(now, busy_before) + expected - now
-        run = self.runner(worker.threads, n_items)
+        run = self.runner(worker.threads, n_items,
+                          phase=self._worker_phase(worker))
         claim = min(worker.threads, self.total_units)
         self.inflight += 1
 
@@ -350,19 +416,21 @@ class RealPlane(ExecutionPlane):
     # ------------------------------------------------------------------ #
     # profiling through the plane (one code path with serving)
     # ------------------------------------------------------------------ #
-    def profiler(self, *, warmup: int = 2, iters: int = 5
+    def profiler(self, *, warmup: int = 2, iters: int = 5, phase: str = ""
                  ) -> MeasuredProfiler:
         """A :class:`MeasuredProfiler` over this plane's own runner
         cache: profile-time execution is the same jitted callable the
         serving path fires, measured with the shared helper
-        (median-of-N — robust to scheduler noise)."""
-        return MeasuredProfiler(lambda t, b: self.runner(t, b)(),
+        (median-of-N — robust to scheduler noise).  ``phase`` selects
+        the runner pool for phase-aware factories (per-phase profiles)."""
+        return MeasuredProfiler(lambda t, b: self.runner(t, b, phase)(),
                                 warmup=warmup, iters=iters,
                                 clock=self._clock, median=True)
 
     def profile(self, spec: ProfileSpec, *, warmup: int = 2,
-                iters: int = 5) -> Profile:
-        return self.profiler(warmup=warmup, iters=iters).profile(spec)
+                iters: int = 5, phase: str = "") -> Profile:
+        return self.profiler(warmup=warmup, iters=iters,
+                             phase=phase).profile(spec)
 
     # ------------------------------------------------------------------ #
     def close(self, wait: bool = True) -> None:

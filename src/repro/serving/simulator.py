@@ -78,6 +78,14 @@ class Request:
     id: int
     arrival: float
     model_id: str = DEFAULT_MODEL
+    # autoregressive serving (repro.models.serve_lm): which phase this
+    # request's next batch runs ("prefill" | "decode"; "" = phaseless
+    # one-shot inference — every pre-LM path), the pow2 prompt bucket,
+    # and how many decode steps remain before EOS/max-len.  Defaults
+    # keep the classic one-shot request representation unchanged.
+    phase: str = ""
+    seq_bucket: int = 0
+    steps_left: int = 0
 
 
 @dataclasses.dataclass

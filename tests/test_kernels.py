@@ -174,3 +174,48 @@ def test_rglru_assoc_scan_matches_sequential():
     _, h_assoc = jax.lax.associative_scan(combine, (a, b), axis=1)
     h_seq, _ = ref.rglru_scan_ref(a, b)
     _assert_close(h_assoc, h_seq, jnp.float32)
+
+# --------------------------------------------------------------------- #
+# decode attention: argument validation (PR 9 satellite)
+# --------------------------------------------------------------------- #
+def test_decode_attention_validates_arguments():
+    B, S, H, Hkv, D = 2, 64, 4, 2, 32
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(keys[0], (B, 1, H, D))
+    kc = jax.random.normal(keys[1], (B, S, Hkv, D))
+    vc = jax.random.normal(keys[2], (B, S, Hkv, D))
+    lengths = jnp.full((B,), S)
+    cases = [
+        (dict(q=q[:, 0]), "must be \\(B, 1, H, D\\)"),            # 3-D q
+        (dict(q=jnp.repeat(q, 2, axis=1)), "must be \\(B, 1, H, D\\)"),
+        (dict(vc=vc[:, : S // 2]), "shapes differ"),
+        (dict(q=q[:1]), "batch mismatch"),
+        (dict(q=q[..., : D // 2]), "head dim mismatch"),
+        (dict(kc=kc[:, :, :1], vc=vc[:, :, :1]),                  # Hkv=1 ok;
+         None),                                                   # MQA valid
+        (dict(kc=kc[:, :, :, :].repeat(3, axis=2),
+              vc=vc[:, :, :, :].repeat(3, axis=2)), "multiple"),  # Hkv=6 > H? no, 6 not divisor of 4
+        (dict(q=q.astype(jnp.bfloat16)), "dtype mismatch"),
+        (dict(lengths=jnp.full((B, 1), S)), "lengths must be"),
+    ]
+    for override, match in cases:
+        kw = dict(q=q, kc=kc, vc=vc, lengths=lengths)
+        kw.update(override)
+        if match is None:
+            ops.decode_attention(kw["q"], kw["kc"], kw["vc"], kw["lengths"],
+                                 block_kv=32)
+            continue
+        with pytest.raises(ValueError, match=match):
+            ops.decode_attention(kw["q"], kw["kc"], kw["vc"], kw["lengths"],
+                                 block_kv=32)
+
+
+def test_decode_attention_rejects_unpadded_cache_length():
+    from repro.kernels.decode_attention import decode_attention as raw
+    B, S, H, Hkv, D = 1, 48, 2, 1, 16
+    keys = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(keys[0], (B, 1, H, D))
+    kc = jax.random.normal(keys[1], (B, S, Hkv, D))
+    vc = jax.random.normal(keys[2], (B, S, Hkv, D))
+    with pytest.raises(ValueError, match="multiple of\\s+block_kv"):
+        raw(q, kc, vc, jnp.full((B,), S), block_kv=32, interpret=True)

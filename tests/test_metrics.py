@@ -324,3 +324,39 @@ def test_single_node_report_has_no_nodes_section():
     rep = m.report(duration=10.0)
     assert "nodes" not in rep
     assert rep["shed"] == 0 and rep["admitted"] == rep["offered"]
+
+
+# --------------------------------------------------------------------- #
+# per-phase latency accounting: TTFT / TPOT (PR 9)
+# --------------------------------------------------------------------- #
+def phase_resp(i, latency, phase):
+    return Response(request=Request(i, 0.0, phase=phase),
+                    completion=latency, batch_size=2, instance_id=0)
+
+
+def test_phase_breakdown_surfaces_ttft_and_tpot():
+    m = MetricsCollector()
+    for i in range(20):
+        m.on_request(Request(i, 0.0, phase="prefill"))
+        m.on_response(phase_resp(i, (i + 1) * 1e-3, "prefill"))
+    for i in range(20, 120):
+        m.on_request(Request(i, 0.0, phase="decode"))
+        m.on_response(phase_resp(i, (i - 19) * 1e-4, "decode"))
+    rep = m.report(duration=1.0)
+    assert set(rep["phases"]) == {"prefill", "decode"}
+    assert rep["phases"]["prefill"]["completed"] == 20
+    assert rep["phases"]["decode"]["completed"] == 100
+    # ttft_ms mirrors the prefill row, tpot_ms the decode row
+    assert rep["ttft_ms"] == rep["phases"]["prefill"]["latency_ms"]
+    assert rep["tpot_ms"] == rep["phases"]["decode"]["latency_ms"]
+    assert rep["ttft_ms"]["p95"] == pytest.approx(19.0)
+    assert rep["tpot_ms"]["p95"] == pytest.approx(9.5)
+
+
+def test_phaseless_runs_report_no_phase_keys():
+    """One-shot serving reports stay byte-identical: no phases/ttft/tpot
+    keys unless some response carried a phase tag."""
+    m = hand_built_collector()
+    rep = m.report(duration=1.0)
+    assert "phases" not in rep
+    assert "ttft_ms" not in rep and "tpot_ms" not in rep
