@@ -54,7 +54,8 @@ from repro.core.multimodel import (ModelWorkload, MultiModelAllocator,
 from repro.core.paper_profiles import PAPER_MODELS, ProfileModel
 from repro.launch.bench_serving import (run_fabric_policy,
                                         run_multimodel_policy, run_policy)
-from repro.serving.scenarios import ScenarioContext, get_scenario
+from repro.serving.scenarios import (ScenarioContext, fleet_overload_trace,
+                                     get_scenario)
 from repro.serving.workloads import PoissonWorkload
 
 # bumped whenever a key in this file's report is added/renamed/removed
@@ -71,7 +72,12 @@ from repro.serving.workloads import PoissonWorkload
 #     Pallas kernels, phase-split packrat vs single-fat baseline on one
 #     trace, with TTFT / decode-p95 win bits.  Wall-clock dependent, so
 #     it is an acceptance record, not a machine-normalized gate row.
-BENCH_SCHEMA_VERSION = 4
+# v5: top-level "fidelity_overload" acceptance row — the flash-overload
+#     degrade-ladder comparison: shed-only fabric vs the fidelity-ladder
+#     fabric on one identical trace (simulated, so fully deterministic),
+#     with strict win bits (admitted rate higher, goodput-at-fidelity
+#     higher, mean delivered quality above the ladder floor).
+BENCH_SCHEMA_VERSION = 5
 
 UNITS = 16
 MAX_BATCH = 256
@@ -375,6 +381,105 @@ def bench_lm_serving() -> Dict[str, object]:
     }
 
 
+# fidelity_overload acceptance row: the flash-overload trace that made
+# the degrade ladder necessary, replayed through the 3-node fabric with
+# shedding as the only overload control and again with the fidelity
+# ladder in front of it.  Fully simulated (deterministic), so the win
+# bits are exact properties of the run, not wall-clock measurements.
+FID_NODES = 3
+FID_UNITS = 8
+FID_MAX_BATCH = 64
+FID_INITIAL_BATCH = 4
+FID_DURATION = 15.0
+FID_SEED = 0
+FID_MODEL_NAME = "resnet50"
+# the ladder's bottom rung quality: mean delivered quality can never
+# fall below it, and the acceptance bit records that bound held
+FID_QUALITY_FLOOR = 0.80
+
+
+def bench_fidelity_overload() -> Dict[str, object]:
+    """Shed-only vs fidelity-ladder fabric on one identical flash-
+    overload trace; strict acceptance: the ladder must admit strictly
+    more requests, deliver strictly higher goodput-at-fidelity than the
+    shed-only fabric's plain goodput, and keep mean delivered quality
+    at or above the ladder floor."""
+    model = PAPER_MODELS[FID_MODEL_NAME]
+    total = FID_NODES * FID_UNITS
+    arrivals = fleet_overload_trace(
+        optimizer=PackratOptimizer(model.profile(total, FID_MAX_BATCH)),
+        total_units=total, duration=FID_DURATION, seed=FID_SEED,
+        max_total_batch=total * FID_MAX_BATCH)
+    node_opt = PackratOptimizer(model.profile(FID_UNITS, FID_MAX_BATCH))
+    slo = 4.0 * node_opt.solve(FID_UNITS, FID_INITIAL_BATCH).latency
+    rows: Dict[str, Dict[str, object]] = {}
+    for key, ladder in (("shed_only", False), ("fidelity_ladder", True)):
+        rep = run_fabric_policy(
+            arrivals, model=model, nodes=FID_NODES,
+            units_per_node=FID_UNITS, duration=FID_DURATION, seed=FID_SEED,
+            initial_batch=FID_INITIAL_BATCH, max_batch=FID_MAX_BATCH,
+            slo_deadline=slo, reconfigure_timeout=5.0, dispatch="sync",
+            engine="fast", fidelity_ladder=ladder)
+        row: Dict[str, object] = {
+            "offered": rep["offered"],
+            "admitted": rep["admitted"],
+            "admitted_rate": rep["admitted"] / rep["offered"],
+            "shed": rep["shed"],
+            "shed_rate": rep["shed_rate"],
+            "completed": rep["completed"],
+            "goodput_rps": rep["goodput_rps"],
+            "slo_attainment": rep["slo_attainment"],
+        }
+        if ladder:
+            fid = rep["fidelity_report"]
+            completed = sum(r["completed"] for r in fid.values())
+            quality_sum = sum(r["completed"] * r["quality"]
+                              for r in fid.values())
+            row["goodput_at_fidelity"] = rep["goodput_at_fidelity"]
+            row["fidelity_weighted_attainment"] = \
+                rep["fidelity_weighted_attainment"]
+            row["mean_delivered_quality"] = (
+                quality_sum / completed if completed else 1.0)
+            row["per_rung_completed"] = {
+                rung: r["completed"] for rung, r in sorted(fid.items())}
+        rows[key] = row
+    shed_only, with_ladder = rows["shed_only"], rows["fidelity_ladder"]
+    return {
+        "model": FID_MODEL_NAME,
+        "nodes": FID_NODES,
+        "units_per_node": FID_UNITS,
+        "duration_s": FID_DURATION,
+        "offered": shed_only["offered"],
+        "slo_deadline_ms": slo * 1e3,
+        "policies": rows,
+        "acceptance": {
+            "wins_admitted":
+                with_ladder["admitted"] > shed_only["admitted"],
+            "wins_goodput_at_fidelity":
+                with_ladder["goodput_at_fidelity"]
+                > shed_only["goodput_rps"],
+            "bounded_fidelity_loss":
+                with_ladder["mean_delivered_quality"]
+                >= FID_QUALITY_FLOOR,
+        },
+    }
+
+
+def _log_fidelity(row: Dict[str, object]) -> None:
+    acc = row["acceptance"]
+    shed = row["policies"]["shed_only"]
+    lad = row["policies"]["fidelity_ladder"]
+    print(f"[bench] fidelity_overload offered={row['offered']:8d}  "
+          f"shed-only admitted={shed['admitted']} "
+          f"(shed {shed['shed_rate']:.0%})  "
+          f"ladder admitted={lad['admitted']} "
+          f"(shed {lad['shed_rate']:.0%}, "
+          f"quality {lad['mean_delivered_quality']:.3f})  "
+          f"wins_admitted={acc['wins_admitted']} "
+          f"wins_goodput={acc['wins_goodput_at_fidelity']} "
+          f"bounded_loss={acc['bounded_fidelity_loss']}", file=sys.stderr)
+
+
 def _log_lm(row: Dict[str, object]) -> None:
     acc = row["acceptance"]
     pol = row["policies"]
@@ -421,6 +526,8 @@ def build_report(*, quick: bool) -> Dict[str, object]:
     }
     report["planning"] = bench_planning()
     _log_planning(report["planning"])
+    report["fidelity_overload"] = bench_fidelity_overload()
+    _log_fidelity(report["fidelity_overload"])
     report["profiles"]["quick"] = _profile_rows(
         SCENARIOS_QUICK, SCENARIO_DURATION_QUICK, EDGE_REQUESTS_QUICK,
         "quick")
@@ -566,6 +673,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     if lm and not all(lm["acceptance"].values()):
         print("[bench] FAIL: lm_serving acceptance — the phase-split "
               f"plan did not win both metrics: {lm['acceptance']}",
+              file=sys.stderr)
+        return 1
+    fid = report["fidelity_overload"]
+    if not all(fid["acceptance"].values()):
+        print("[bench] FAIL: fidelity_overload acceptance — the degrade "
+              f"ladder did not beat shed-only: {fid['acceptance']}",
               file=sys.stderr)
         return 1
 

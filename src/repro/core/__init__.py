@@ -9,12 +9,13 @@
 """
 
 from .estimator import (ArrivalRateSignal, BatchSizeEstimator,
-                        EstimatorConfig, LatencyCorrectionSignal,
-                        floor_power_of_two)
+                        EstimatorConfig, HysteresisGate,
+                        LatencyCorrectionSignal, floor_power_of_two)
 from .interference import (CPUInterferenceModel, TPUInterferenceModel,
                            apply_constant_penalty)
-from .knapsack import (InstanceGroup, PackratConfig, PackratOptimizer,
-                       PlanTable, PlanTableRegistry, brute_force_solve,
+from .knapsack import (FidelityLadder, FidelityRung, InstanceGroup,
+                       PackratConfig, PackratOptimizer, PlanTable,
+                       PlanTableRegistry, brute_force_solve,
                        default_engine, fat_config, next_power_of_two,
                        one_thread_per_core_config, plan_fingerprint,
                        planning_report, powers_of_two, profile_grid,
@@ -34,7 +35,10 @@ __all__ = [
     "BatchSizeEstimator",
     "CPUInterferenceModel",
     "EstimatorConfig",
+    "FidelityLadder",
+    "FidelityRung",
     "HardwareSpec",
+    "HysteresisGate",
     "InstanceGroup",
     "LatencyCorrectionSignal",
     "MeasuredProfiler",

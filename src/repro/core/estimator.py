@@ -51,6 +51,44 @@ class EstimatorConfig:
     headroom: float = 0.25
 
 
+class HysteresisGate:
+    """Consecutive-calm-streak counter for reverse-order recovery.
+
+    Overload entry is instantaneous (one hot observation engages the
+    next degrade rung) but recovery must not be: a single calm tick
+    after a flash crowd would re-enter the rung immediately and thrash.
+    The gate opens only after ``required`` *consecutive* calm
+    observations; any hot observation resets the streak.
+    """
+
+    def __init__(self, required: int = 3) -> None:
+        if required < 1:
+            raise ValueError(f"required calm streak must be >= 1, "
+                             f"got {required}")
+        self.required = required
+        self.streak = 0
+        self.opens = 0           # times the gate opened (recovery steps)
+        self.resets = 0          # hot observations that reset a streak
+
+    def observe(self, calm: bool) -> bool:
+        """Feed one observation; returns True when the streak reaches
+        ``required`` (and restarts the count for the next step up)."""
+        if not calm:
+            if self.streak:
+                self.resets += 1
+            self.streak = 0
+            return False
+        self.streak += 1
+        if self.streak >= self.required:
+            self.streak = 0
+            self.opens += 1
+            return True
+        return False
+
+    def reset(self) -> None:
+        self.streak = 0
+
+
 class ArrivalRateSignal:
     """EWMA arrival-rate tracker: the estimator signal source for
     continuous dispatch policies.

@@ -741,6 +741,131 @@ def planning_report(optimizers: Iterable[PackratOptimizer]
     }
 
 
+@dataclasses.dataclass(frozen=True)
+class FidelityRung:
+    """One rung of a model's fidelity ladder.
+
+    ``rung`` 0 is the full-fidelity model; higher rungs are cheaper
+    variants (fewer layers / narrower widths) of the same architecture.
+    ``quality`` is the rung's relative output quality in ``(0, 1]``
+    (1.0 at the top) — the weight used by goodput-at-fidelity metrics.
+    ``profile`` is the rung's own measured ⟨t,b⟩ → latency table.
+    """
+
+    rung: int
+    name: str
+    quality: float
+    profile: Dict[Tuple[int, int], float]
+
+
+class FidelityLadder:
+    """An ordered ladder of per-rung planners over one shared registry.
+
+    This is the PlanTable's fidelity axis: each rung owns a
+    :class:`PackratOptimizer` built on the rung's profile, and all rungs
+    intern their DP tables into **one** :class:`PlanTableRegistry`, so a
+    fleet of nodes degrading independently still shares one table per
+    ⟨rung profile, relaxation⟩ fingerprint.  The top rung's optimizer is
+    constructed from exactly the same inputs as a ladder-free planner —
+    same profile dict, engine, overhead, registry protocol — so
+    reference-engine solves at rung 0 stay bit-identical to today's
+    plans (pinned by tests/test_planning.py).
+    """
+
+    def __init__(
+        self,
+        rungs: Sequence[FidelityRung],
+        *,
+        allow_unused_threads: bool = False,
+        dispatch_overhead: float = 0.0,
+        engine: Optional[str] = None,
+        registry: Optional[PlanTableRegistry] = None,
+    ) -> None:
+        if not rungs:
+            raise ValueError("empty fidelity ladder")
+        for i, r in enumerate(rungs):
+            if r.rung != i:
+                raise ValueError(f"rung {i} carries index {r.rung}; ladders "
+                                 f"are listed top (full fidelity) first")
+            if not (0.0 < r.quality <= 1.0):
+                raise ValueError(f"rung {r.name!r} quality {r.quality!r} "
+                                 f"outside (0, 1]")
+        if rungs[0].quality != 1.0:
+            raise ValueError("top rung must have quality 1.0")
+        for a, b in zip(rungs, rungs[1:]):
+            if b.quality > a.quality:
+                raise ValueError(f"quality must not increase down the "
+                                 f"ladder ({a.name!r} -> {b.name!r})")
+        self.rungs: Tuple[FidelityRung, ...] = tuple(rungs)
+        self.registry = registry if registry is not None else PlanTableRegistry()
+        self.optimizers: List[PackratOptimizer] = [
+            PackratOptimizer(r.profile,
+                             allow_unused_threads=allow_unused_threads,
+                             dispatch_overhead=dispatch_overhead,
+                             engine=engine, registry=self.registry)
+            for r in self.rungs
+        ]
+
+    def __len__(self) -> int:
+        return len(self.rungs)
+
+    def optimizer(self, rung: int) -> PackratOptimizer:
+        return self.optimizers[rung]
+
+    def quality(self, rung: int) -> float:
+        return self.rungs[rung].quality
+
+    def name(self, rung: int) -> str:
+        return self.rungs[rung].name
+
+    def update_profile(self, rung: int, new_profile: Profile) -> None:
+        """A calibration epoch for one rung (measured costs drifted);
+        other rungs' tables and memos are untouched."""
+        self.optimizers[rung].update_profile(new_profile)
+
+    def adopt_registry(self, registry: PlanTableRegistry) -> None:
+        """Re-intern every rung's table into ``registry`` (the fabric
+        adopts node ladders into its fleet-wide registry)."""
+        self.registry = registry
+        for opt in self.optimizers:
+            opt.adopt_registry(registry)
+
+    def plan_key(self) -> tuple:
+        """Hashable identity of the whole ladder's planning inputs —
+        equal keys guarantee equal per-rung solve results."""
+        return tuple(opt.plan_key() for opt in self.optimizers)
+
+    def solve_with_fidelity(
+        self, threads: int, latency_slo: float, *, max_batch: int = 1 << 16,
+    ) -> Optional[Tuple[int, int, PackratConfig]]:
+        """Highest-fidelity rung whose makespan fits the SLO.
+
+        Scans rungs top-down; each probe is the SLO-constrained
+        power-of-two sweep (:func:`~repro.core.multimodel.solve_with_slo`)
+        over that rung's shared table.  Returns ``(rung, batch, config)``
+        for the first feasible rung — i.e. the *cheapest acceptable
+        degradation is none at all* when rung 0 fits — or ``None`` when
+        even the bottom rung cannot meet the SLO (the caller falls back
+        to batch-floor degradation and shedding).
+        """
+        from .multimodel import solve_with_slo  # deferred: core↔core cycle
+        for rung, opt in enumerate(self.optimizers):
+            got = solve_with_slo(opt, threads, latency_slo,
+                                 max_batch=max_batch)
+            if got is not None:
+                return (rung, got[0], got[1])
+        return None
+
+    def report(self) -> Dict[str, object]:
+        return {
+            "rungs": [
+                {"rung": r.rung, "name": r.name, "quality": r.quality,
+                 "epoch": opt.epoch, "solves": opt.solves}
+                for r, opt in zip(self.rungs, self.optimizers)
+            ],
+        }
+
+
 def solve_phase_split(
     phase_optimizers: Mapping[str, PackratOptimizer],
     phase_batches: Mapping[str, int],

@@ -30,7 +30,7 @@ import dataclasses
 import math
 from typing import Dict, List, Sequence, Tuple
 
-from .knapsack import powers_of_two
+from .knapsack import FidelityLadder, FidelityRung, powers_of_two
 
 Profile = Dict[Tuple[int, int], float]
 
@@ -60,6 +60,48 @@ class ProfileModel:
         ts = list(thread_values) if thread_values is not None else range(1, threads + 1)
         return {(t, b): self.latency_s(t, b)
                 for t in ts for b in powers_of_two(max_batch)}
+
+    def reduced_variant(self, name: str, *, c0_scale: float,
+                        c1_scale: float) -> "ProfileModel":
+        """A cheaper variant of the same model (fewer layers scale the
+        fixed cost ``c0``; narrower widths scale the per-item cost
+        ``c1``); the thread-scaling curve is an architectural property
+        and carries over unchanged."""
+        return dataclasses.replace(self, name=name,
+                                   c0=self.c0 * c0_scale,
+                                   c1=self.c1 * c1_scale)
+
+
+# Default rung scales for the analytic paper models.  The scales are
+# deliberately non-uniform (layer removal cuts the fixed cost c0 harder
+# than it cuts the per-item cost c1 at rung 1; width reduction does the
+# reverse at rung 2) so that per-rung knapsack plans genuinely differ —
+# a uniform scale would shift every latency by a constant factor and
+# make every rung pick the same groups.
+FIDELITY_RUNG_SCALES: List[Tuple[str, float, float, float]] = [
+    # (suffix, quality, c0_scale, c1_scale)
+    ("full", 1.00, 1.00, 1.00),
+    ("r1", 0.92, 0.72, 0.55),
+    ("r2", 0.80, 0.50, 0.32),
+]
+
+
+def fidelity_ladder(model: "ProfileModel", threads: int, max_batch: int,
+                    *, thread_values: Sequence[int] | None = None,
+                    **ladder_kw) -> FidelityLadder:
+    """Build the default three-rung :class:`FidelityLadder` for an
+    analytic paper model: full fidelity plus two reduced variants, each
+    profiled on the same ⟨t,b⟩ grid.  Rung 0 uses ``model.profile(...)``
+    verbatim, so top-rung plans are bit-identical to ladder-free ones."""
+    rungs = []
+    for i, (suffix, quality, c0s, c1s) in enumerate(FIDELITY_RUNG_SCALES):
+        variant = (model if i == 0 else model.reduced_variant(
+            f"{model.name}-{suffix}", c0_scale=c0s, c1_scale=c1s))
+        rungs.append(FidelityRung(
+            rung=i, name=f"{model.name}:{suffix}", quality=quality,
+            profile=variant.profile(threads, max_batch,
+                                    thread_values=thread_values)))
+    return FidelityLadder(rungs, **ladder_kw)
 
 
 # Coefficients fitted numerically so that the DP's mean/max speedup over

@@ -434,6 +434,26 @@ def phase_profiles(plane, spec: ProfileSpec, phases, *, warmup: int = 2,
             for phase in phases}
 
 
+FidelityProfiles = Dict[int, Profile]
+
+
+def fidelity_profiles(plane, spec: ProfileSpec, n_rungs: int, *,
+                      phase: str = "", warmup: int = 2,
+                      iters: int = 5) -> FidelityProfiles:
+    """One measured ``L[t,b]`` table per fidelity rung, through the
+    plane's ⟨fidelity, phase, t, b⟩-keyed runner cells.
+
+    Each rung of a model's degrade ladder is a genuinely different
+    compiled program (fewer layers / narrower widths), so the ladder
+    planner (:class:`~repro.core.knapsack.FidelityLadder`) needs a
+    measured table per rung — profiled through the same runner cache
+    the serving path executes, like every other profile here.
+    """
+    return {rung: plane.profile(spec, warmup=warmup, iters=iters,
+                                phase=phase, fidelity=rung)
+            for rung in range(n_rungs)}
+
+
 def profiling_cost_summary(spec: ProfileSpec,
                            seconds_per_config: float = 60.0) -> Dict[str, float]:
     """The paper's §3.2 profiling-cost argument, parameterized.

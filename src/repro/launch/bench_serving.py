@@ -80,6 +80,12 @@ latency percentiles are admitted-only) and a per-node ``fleet``
 section.  Scenarios may carry *fabric events* (``node-failure`` kills
 node 1 mid-run) exercising failover with exactly-once delivery.
 ``--nodes 1`` is the unchanged single-node path, byte-for-byte.
+``--fidelity-ladder`` additionally equips every node with the model's
+reduced-rung ladder: overload first steps fidelity down (cheaper model
+variants, re-planned per rung) before the batch-floor/shed ladder
+engages, recovery climbs back rung by rung under hysteresis, and the
+report gains ``fidelity_report``/``goodput_at_fidelity`` plus a
+per-node ``fidelity`` fleet breakdown (schema v7).
 
 Everything *simulated* is seeded and runs on the deterministic event
 loop, so two invocations with the same flags produce byte-identical
@@ -165,7 +171,14 @@ FABRIC_POLICIES = ("single_fat", "single_packrat", "fabric")
 #     "unit_split"/"planned_split" phase-plan keys, "decode_steps", and
 #     the "runner_cache" compile/eviction accounting (compile_ms is
 #     excluded from all latency percentiles).
-SCHEMA_VERSION = 6
+# v7: the --fidelity-ladder overload axis (--nodes > 1): rung-tagged
+#     responses add "fidelity_report"/"goodput_at_fidelity"/
+#     "fidelity_weighted_attainment" to the fabric run report, the
+#     fleet section gains a per-node "fidelity" breakdown (rung,
+#     transitions, recovery counters), and the scenario row records
+#     "fidelity_ladder"/"fidelity_rungs".  All of it absent with the
+#     ladder off — ladder-off reports keep the v6 shape byte-for-byte.
+SCHEMA_VERSION = 7
 
 # simulation engines for the virtual-clock paths: the event-at-a-time
 # oracle and the vectorized core (repro.serving.fastsim).  Reports are
@@ -750,10 +763,18 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
                       seed: int, initial_batch: int, max_batch: int,
                       slo_deadline: float, reconfigure_timeout: float,
                       dispatch: str = "sync", interference: bool = False,
-                      events=(), engine: str = "event") -> Dict[str, object]:
+                      events=(), engine: str = "event",
+                      fidelity_ladder: bool = False) -> Dict[str, object]:
     """One fabric run: N Packrat nodes behind a :class:`ClusterRouter`
     on one shared simulated plane, with per-node admission control and
-    the scenario's fabric events (node failures/drains) applied."""
+    the scenario's fabric events (node failures/drains) applied.
+
+    ``fidelity_ladder`` equips every node with the model's reduced-rung
+    ladder (``core.paper_profiles.fidelity_ladder``): overload steps
+    down the fidelity rungs before the batch-floor/shed ladder engages,
+    and the report gains the rung-tagged fidelity keys (schema v7).
+    """
+    from ..core.paper_profiles import fidelity_ladder as build_ladder
     ccfg = ControllerConfig()
     ccfg.estimator.reconfigure_timeout = reconfigure_timeout
     ccfg.estimator.max_batch = max_batch
@@ -763,7 +784,9 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
     specs = [FabricNodeSpec(
         optimizer=PackratOptimizer(profile),
         backend=_make_backend(profile, interference=interference,
-                              units=units_per_node))
+                              units=units_per_node),
+        ladder=(build_ladder(model, units_per_node, max_batch)
+                if fidelity_ladder else None))
         for _ in range(nodes)]
     loop = _sim_loop(engine)
     router = ClusterRouter(
@@ -772,6 +795,10 @@ def run_fabric_policy(arrivals: List[float], *, model: ProfileModel,
                                  units_per_node * max_batch)),
         slo_deadline=slo_deadline, config=fcfg)
     metrics = MetricsCollector(slo_deadline=slo_deadline)
+    if fidelity_ladder:
+        ladder = specs[0].ladder
+        metrics.set_rung_qualities(
+            [ladder.quality(r) for r in range(len(ladder))])
     drain = max(DRAIN_MIN_S, DRAIN_FACTOR * duration)
     metrics.attach_fabric(router, sample_interval=min(0.25, duration / 100.0),
                           until=duration + drain)
@@ -819,7 +846,8 @@ def run_fabric_scenario(sc: Scenario, *, model: ProfileModel, nodes: int,
                         dispatches: Tuple[str, ...] = ("sync",),
                         interference: bool = False,
                         slo_ms: Optional[float] = None,
-                        engine: str = "event") -> Dict[str, object]:
+                        engine: str = "event",
+                        fidelity_ladder: bool = False) -> Dict[str, object]:
     """The --nodes comparison on one identical seeded trace: a single
     fat server with the fleet's total units (``single_fat`` — static
     one-instance baseline; ``single_packrat`` — the adaptive policy,
@@ -859,6 +887,12 @@ def run_fabric_scenario(sc: Scenario, *, model: ProfileModel, nodes: int,
         "policies": [policy_key(p, d)
                      for p in FABRIC_POLICIES for d in dispatches],
     }
+    if fidelity_ladder:
+        from ..core.paper_profiles import FIDELITY_RUNG_SCALES
+        out["fidelity_ladder"] = True
+        out["fidelity_rungs"] = [
+            {"rung": r, "name": name, "quality": q}
+            for r, (name, q, _, _) in enumerate(FIDELITY_RUNG_SCALES)]
     for dispatch in dispatches:
         out[policy_key("single_fat", dispatch)] = run_policy(
             "static", arrivals, model=model, units=total,
@@ -878,7 +912,7 @@ def run_fabric_scenario(sc: Scenario, *, model: ProfileModel, nodes: int,
             initial_batch=initial_batch, max_batch=max_batch,
             slo_deadline=slo, reconfigure_timeout=reconfigure_timeout,
             dispatch=dispatch, interference=interference, events=events,
-            engine=engine)
+            engine=engine, fidelity_ladder=fidelity_ladder)
     return out
 
 
@@ -1154,6 +1188,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--lm-decode-steps", type=int, default=8,
                     help="decode steps per prompt before EOS for LM "
                          "real models (the decode continuation chain)")
+    ap.add_argument("--fidelity-ladder", action="store_true",
+                    help="equip every fabric node (--nodes > 1) with the "
+                         "model's reduced-rung fidelity ladder: overload "
+                         "steps fidelity down before the batch-floor/shed "
+                         "ladder engages; adds the rung-tagged fidelity "
+                         "keys to the report (schema v7)")
     ap.add_argument("--real-rate-cap", type=float, default=300.0,
                     help="cap offered load (req/s) under --execution real "
                          "so Python event overhead is not the bottleneck; "
@@ -1185,6 +1225,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.nodes > 1 and args.execution == "real":
         ap.error("--nodes > 1 runs on the simulated plane; "
                  "drop --execution real")
+    if args.fidelity_ladder and args.nodes < 2:
+        ap.error("--fidelity-ladder is a cluster-fabric overload axis; "
+                 "it needs --nodes > 1")
 
     dispatches = (DISPATCHES if args.dispatch == "both"
                   else (args.dispatch,))
@@ -1397,7 +1440,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                 max_batch=args.max_batch, slo_factor=args.slo_factor,
                 reconfigure_timeout=args.reconfigure_timeout,
                 dispatches=dispatches, interference=args.interference,
-                slo_ms=args.slo_ms, engine=engine)
+                slo_ms=args.slo_ms, engine=engine,
+                fidelity_ladder=args.fidelity_ladder)
             report["scenarios"][sc.name] = result
             parts = []
             for key in keys:

@@ -105,4 +105,47 @@ def make_micro_runner(name: str = "mlp-tiny", *, seed: int = 0):
     return _BUILDERS[name](seed)
 
 
-__all__ = ["MICRO_MODELS", "make_micro_runner"]
+# per-rung architecture variants for the fidelity ladder (rung 0 first):
+# the MLPs shrink their hidden width, the attention model its sequence
+# length — cheaper genuine jitted execution, not a simulated discount
+_FIDELITY_BUILDERS: Dict[str, tuple] = {
+    "mlp-tiny": tuple(lambda seed, d=d: _mlp_factory(dim=d, depth=2, seed=seed)
+                      for d in (32, 16, 8)),
+    "mlp": tuple(lambda seed, d=d: _mlp_factory(dim=d, depth=4, seed=seed)
+                 for d in (128, 64, 32)),
+    "attn-tiny": tuple(
+        lambda seed, s=s: _attn_factory(seq=s, heads=2, head_dim=16, seed=seed)
+        for s in (16, 8, 4)),
+}
+
+
+def make_fidelity_micro_runner(name: str = "mlp-tiny", *, seed: int = 0,
+                               n_rungs: int = 3):
+    """Fidelity-aware runner factory for one registered micro model.
+
+    Returns ``make_runner(t, b, *, fidelity=0)``: rung 0 is the exact
+    model :func:`make_micro_runner` builds (so ladder-off execution is
+    unchanged), higher rungs dispatch progressively cheaper variants
+    (narrower MLPs / shorter attention).  The factory carries the
+    ``fidelity_aware`` marker RealPlane keys its runner cache on.
+    """
+    if name not in _FIDELITY_BUILDERS:
+        raise ValueError(f"unknown micro model {name!r}; "
+                         f"choose from {sorted(_FIDELITY_BUILDERS)}")
+    builders = _FIDELITY_BUILDERS[name]
+    if not (1 <= n_rungs <= len(builders)):
+        raise ValueError(f"n_rungs must be in [1, {len(builders)}], "
+                         f"got {n_rungs}")
+    rungs = [build(seed) for build in builders[:n_rungs]]
+
+    def make_runner(t: int, b: int, *, fidelity: int = 0):
+        if not (0 <= fidelity < len(rungs)):
+            raise ValueError(f"fidelity rung {fidelity} out of range "
+                             f"[0, {len(rungs)})")
+        return rungs[fidelity](t, b)
+
+    make_runner.fidelity_aware = True
+    return make_runner
+
+
+__all__ = ["MICRO_MODELS", "make_fidelity_micro_runner", "make_micro_runner"]

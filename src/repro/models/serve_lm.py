@@ -209,5 +209,71 @@ def make_lm_engine(name: str = "lm-tiny", *, seed: int = 0, **kw) -> LmEngine:
     return LmEngine(lm_tiny_config(), seed=seed, **kw)
 
 
+# --------------------------------------------------------------------- #
+# fidelity ladder: per-rung reduced decoders
+# --------------------------------------------------------------------- #
+def lm_tiny_rung_configs(n_rungs: int = 3):
+    """Rung configs for the ``lm-tiny`` fidelity ladder (rung 0 first).
+
+    Rung 0 is :func:`lm_tiny_config` verbatim — ladder-off serving is
+    unchanged.  Higher rungs shrink width and FFN via the same
+    ``GEMMA3_1B.reduced`` machinery: genuinely cheaper Pallas-kernel
+    decoders, not discounted latency tables.
+    """
+    reductions = [
+        dict(n_repeats=1, d_model=32, n_heads=2, d_ff=64, vocab_size=256),
+        dict(n_repeats=1, d_model=16, n_heads=2, d_ff=32, vocab_size=256),
+        dict(n_repeats=1, d_model=8, n_heads=1, d_ff=16, vocab_size=256),
+    ]
+    if not (1 <= n_rungs <= len(reductions)):
+        raise ValueError(f"n_rungs must be in [1, {len(reductions)}], "
+                         f"got {n_rungs}")
+    cfgs = [lm_tiny_config()]
+    for r, red in enumerate(reductions[1:n_rungs], start=1):
+        cfgs.append(GEMMA3_1B.reduced(
+            name=f"lm-tiny:r{r}", dtype="float32",
+            use_pallas_kernels=True, **red))
+    return cfgs
+
+
+def make_fidelity_lm_factory(name: str = "lm-tiny", *, seed: int = 0,
+                             n_rungs: int = 3, seq_bucket: int = 16, **kw):
+    """Fidelity- and phase-aware runner factory for an LM ladder.
+
+    Builds one :class:`LmEngine` per rung (rung 0 identical to
+    :func:`make_lm_engine`'s engine, so ladder-off execution is
+    unchanged); higher rungs pair their narrower decoder with a halved
+    seq bucket — degraded prompts are truncated harder, which is where
+    the prefill savings come from.  Returns ``make(t, b, phase, *,
+    fidelity=0)`` carrying both the ``phase_aware`` and
+    ``fidelity_aware`` markers RealPlane keys its runner cache on.
+    """
+    if name not in LM_MODELS:
+        raise ValueError(f"unknown LM serving model {name!r}; "
+                         f"choose from {sorted(LM_MODELS)}")
+    engines = []
+    buckets = []
+    for rung, cfg in enumerate(lm_tiny_rung_configs(n_rungs)):
+        s = max(2, seq_bucket >> rung)
+        engines.append(LmEngine(cfg, seed=seed,
+                                default_seq_bucket=s, **kw))
+        buckets.append(s)
+    factories = [eng.factory(seq_bucket=s)
+                 for eng, s in zip(engines, buckets)]
+
+    def make(t: int, b: int, phase: str = PHASE_DECODE, *,
+             fidelity: int = 0) -> Callable[[], None]:
+        if not (0 <= fidelity < len(factories)):
+            raise ValueError(f"fidelity rung {fidelity} out of range "
+                             f"[0, {len(factories)})")
+        return factories[fidelity](t, b, phase)
+
+    make.phase_aware = True
+    make.fidelity_aware = True
+    make.engines = tuple(engines)
+    return make
+
+
 __all__ = ["LM_MODELS", "LmEngine", "PHASES", "PHASE_DECODE",
-           "PHASE_PREFILL", "lm_tiny_config", "make_lm_engine"]
+           "PHASE_PREFILL", "lm_tiny_config", "lm_tiny_rung_configs",
+           "make_fidelity_lm_factory", "make_lm_engine"]

@@ -24,12 +24,18 @@ the fabric separates three concerns:
   percentiles stay honest under overload.
 
 * **Overload degradation** — before dropping anything for queue depth,
-  the router *degrades batch-size floors*: an overloaded node's
-  estimator is pinned to the largest SLO-feasible batch (maximum
-  throughput that still honours the deadline), and only once the node
-  is degraded **and** its queue would blow the remaining SLO budget do
-  queue-depth sheds start.  Exit is hysteretic so bursts do not flap
-  the mode.
+  the router walks a *degrade ladder*: with a
+  :class:`~repro.core.knapsack.FidelityLadder` attached, an overloaded
+  node first steps down fidelity rungs (cheaper model variants, each
+  replanned against its own profile — quality of the *model* degrades
+  before quality of *delivery*); then it *degrades batch-size floors* —
+  the estimator is pinned to the largest SLO-feasible batch (maximum
+  throughput that still honours the deadline); and only once the node
+  is fully degraded **and** its queue would blow the remaining SLO
+  budget do queue-depth sheds start.  Recovery runs the ladder in
+  reverse — floors released first, then one rung up per
+  consecutive-calm-tick streak (:class:`~repro.core.estimator
+  .HysteresisGate`) — so bursts neither flap the mode nor thrash rungs.
 
 Fault handling preserves exactly-once delivery: the router keeps a
 per-node map of undelivered routed requests and a fleet-wide delivered
@@ -54,9 +60,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.estimator import ArrivalRateSignal
-from ..core.knapsack import (PackratOptimizer, PlanTableRegistry,
-                             planning_report)
+from ..core.estimator import ArrivalRateSignal, HysteresisGate
+from ..core.knapsack import (FidelityLadder, PackratOptimizer,
+                             PlanTableRegistry, planning_report)
 from ..core.multimodel import solve_with_slo
 from ..core.profiler import ProfileCalibrator
 from .controller import ControllerConfig, PackratServer
@@ -114,6 +120,13 @@ class FabricConfig:
     slo_wait_share: float = 0.45
     router_tick_interval: float = 0.1      # degrade enter/exit checks
     p2c_seed: int = 0                      # power-of-two-choices sampling
+    # fidelity-ladder recovery hysteresis: a node steps one rung back up
+    # only after `fidelity_recovery_ticks` *consecutive* calm router
+    # ticks whose λ̂ also fits under `fidelity_recovery_margin` × the
+    # next-higher rung's sustainable throughput (raise the tick count /
+    # lower the margin if rungs thrash under oscillating load)
+    fidelity_recovery_ticks: int = 3
+    fidelity_recovery_margin: float = 0.9
 
 
 @dataclasses.dataclass
@@ -124,6 +137,10 @@ class FabricNodeSpec:
     backend: LatencyBackend
     node_id: str = ""                      # default: "node<k>"
     calibrator: Optional[ProfileCalibrator] = None
+    # optional fidelity ladder: cheaper model variants the router may
+    # degrade to before touching batch floors or shedding; rung 0 must
+    # carry exactly the optimizer's own profile
+    ladder: Optional[FidelityLadder] = None
 
 
 class FabricNodeServer(PackratServer):
@@ -160,6 +177,12 @@ class FabricNode:
         self.dead = False
         self.degraded = False
         self.degrade_engagements = 0
+        # fidelity-ladder state (router-managed; ladder None = disabled)
+        self.ladder: Optional[FidelityLadder] = None
+        self.backend: Optional[LatencyBackend] = None
+        self.rung = 0                   # current fidelity rung (0 = full)
+        self.fidelity_transitions = 0
+        self.recovery_gate = HysteresisGate()
         # filled by the router's planning pass
         self.b_deg = 1                  # degrade-mode batch floor/ceiling
         self.thr_deg = 0.0              # its sustainable throughput
@@ -235,6 +258,12 @@ class ClusterRouter:
             if any(n.node_id == node_id for n in self.nodes):
                 raise ValueError(f"duplicate node_id {node_id!r}")
             spec.optimizer.adopt_registry(self.plan_registry)
+            if spec.ladder is not None:
+                if dict(spec.ladder.rungs[0].profile) != spec.optimizer.profile:
+                    raise ValueError(
+                        f"{node_id}: ladder rung 0 must carry the "
+                        f"optimizer's own profile (full fidelity)")
+                spec.ladder.adopt_registry(self.plan_registry)
             ccfg = copy.deepcopy(self.fcfg.controller)
             server = FabricNodeServer(
                 self.plane, total_units=units_per_node,
@@ -244,6 +273,10 @@ class ClusterRouter:
                 on_response=(lambda resp, k=k:
                              self._on_node_response(self.nodes[k], resp)))
             node = FabricNode(k, node_id, server)
+            node.ladder = spec.ladder
+            node.backend = spec.backend
+            node.recovery_gate = HysteresisGate(
+                self.fcfg.fidelity_recovery_ticks)
             self._plan_node(node, spec.optimizer)
             self.nodes.append(node)
         self._adopt_block_sinks()
@@ -270,49 +303,60 @@ class ClusterRouter:
     # ------------------------------------------------------------------ #
     # per-node overload plan (computed once, from the planning profile)
     # ------------------------------------------------------------------ #
-    def _plan_node(self, node: FabricNode, opt: PackratOptimizer) -> None:
-        """Derive the node's degrade batch, admission rate and shed
-        depths.  With an SLO, the degrade batch is the largest batch
-        whose optimal makespan fits in ``slo_latency_share`` of the
-        deadline (the rest of the budget bounds queueing, which sizes
-        the shed depth); without one, it is the throughput-optimal
-        feasible batch and depths fall back to batch multiples."""
-        fcfg = self.fcfg
+    def _derive_plan(self, opt: PackratOptimizer) -> Tuple[int, float]:
+        """Degrade batch + sustainable throughput for one planning
+        profile, memoised by the optimizer's plan key — homogeneous
+        fleets (and every node sharing a ladder rung) solve once.  With
+        an SLO, the degrade batch is the largest batch whose optimal
+        makespan fits in ``slo_latency_share`` of the deadline; without
+        one, it is the throughput-optimal feasible batch."""
         units = self.units_per_node
         memo_key = (units, opt.plan_key())
         memo = self._plan_memo.get(memo_key)
         if memo is not None:
-            node.b_deg, node.thr_deg = memo
-        else:
-            best_b, best_thr = 1, 0.0
-            b = 1
-            while True:
-                try:
-                    cfg = opt.solve(units, b)
-                except ValueError:
-                    break
-                if cfg.throughput > best_thr:
-                    best_thr, best_b = cfg.throughput, b
-                b *= 2
-            if self.slo_deadline is not None:
-                budget = fcfg.slo_latency_share * self.slo_deadline
-                got = solve_with_slo(opt, units, budget)
-                if got is not None:
-                    node.b_deg = got[0]
-                    node.thr_deg = got[1].throughput
-                else:
-                    # even B=1 misses the service budget: admit at the
-                    # B=1 rate and let the wait budget (possibly
-                    # negative-free) shed the rest
-                    node.b_deg = 1
-                    node.thr_deg = opt.solve(units, 1).throughput
+            return memo
+        best_b, best_thr = 1, 0.0
+        b = 1
+        while True:
+            try:
+                cfg = opt.solve(units, b)
+            except ValueError:
+                break
+            if cfg.throughput > best_thr:
+                best_thr, best_b = cfg.throughput, b
+            b *= 2
+        if self.slo_deadline is not None:
+            budget = self.fcfg.slo_latency_share * self.slo_deadline
+            got = solve_with_slo(opt, units, budget)
+            if got is not None:
+                plan = (got[0], got[1].throughput)
             else:
-                node.b_deg = best_b
-                node.thr_deg = best_thr
-            self._plan_memo[memo_key] = (node.b_deg, node.thr_deg)
+                # even B=1 misses the service budget: admit at the
+                # B=1 rate and let the wait budget (possibly
+                # negative-free) shed the rest
+                plan = (1, opt.solve(units, 1).throughput)
+        else:
+            plan = (best_b, best_thr)
+        self._plan_memo[memo_key] = plan
+        return plan
+
+    def _apply_plan(self, node: FabricNode, *, fresh_bucket: bool) -> None:
+        """Size the node's admission bucket and overload depths from its
+        current ⟨b_deg, thr_deg⟩ plan.  At construction the bucket is
+        fresh; on a fidelity-rung transition the live bucket is resized
+        in place (rate/burst move to the rung's plan, accumulated tokens
+        clamped) so a transition never mints a free admission burst."""
+        fcfg = self.fcfg
         node.admission_rps = fcfg.admission_rate_factor * node.thr_deg
-        node.bucket = TokenBucket(
-            node.admission_rps, fcfg.admission_burst_batches * node.b_deg)
+        burst = fcfg.admission_burst_batches * node.b_deg
+        if fresh_bucket:
+            node.bucket = TokenBucket(node.admission_rps, burst)
+        else:
+            bk = node.bucket
+            bk.rate = node.admission_rps
+            bk.burst = max(1.0, burst)
+            if bk.tokens > bk.burst:
+                bk.tokens = bk.burst
         node.degrade_depth = max(1, int(fcfg.degrade_queue_batches
                                         * node.b_deg))
         if self.slo_deadline is not None:
@@ -321,6 +365,12 @@ class ClusterRouter:
         else:
             node.shed_depth = int(fcfg.shed_queue_batches * node.b_deg)
         node.shed_depth = max(node.shed_depth, node.degrade_depth + 1)
+
+    def _plan_node(self, node: FabricNode, opt: PackratOptimizer) -> None:
+        """Derive and apply the node's overload plan (the rest of the
+        SLO budget bounds queueing, which sizes the shed depth)."""
+        node.b_deg, node.thr_deg = self._derive_plan(opt)
+        self._apply_plan(node, fresh_bucket=True)
         est = node.server.estimator.config
         node.base_min_batch = est.min_batch
         node.base_max_batch = est.max_batch
@@ -352,9 +402,9 @@ class ClusterRouter:
 
     def submit(self, req: Request) -> None:
         """Route one request: pick a node (P2C), charge its admission
-        bucket, then apply queue-depth overload control — degrade the
-        node's batch floors first, shed only once degraded *and* past
-        the wait budget."""
+        bucket, then apply queue-depth overload control — step the
+        node's degrade ladder first (fidelity rungs, then batch floors),
+        shed only once fully degraded *and* past the wait budget."""
         now = self.loop.now
         self.offered += 1
         node = self._pick()
@@ -367,7 +417,7 @@ class ClusterRouter:
             return
         depth = node.server.dispatcher.queue_depth
         if depth >= node.degrade_depth:
-            self._engage_degrade(node, now)
+            self._degrade_step(node, now)
         if node.degraded and depth >= node.shed_depth:
             self._shed(req, node, "queue", now)
             return
@@ -408,6 +458,8 @@ class ClusterRouter:
         self._delivered.add(resp.request.id)
         node.delivered += 1
         resp.node_id = node.node_id
+        if node.ladder is not None:
+            resp.fidelity = node.rung
         self.responses.append(resp)
         if self.on_response is not None:
             self.on_response(resp)
@@ -430,6 +482,8 @@ class ClusterRouter:
         self._delivered.update(ids)
         node.delivered += len(ids)
         block.node_id = node.node_id
+        if node.ladder is not None:
+            block.fidelity = node.rung
         self.responses.append_block(block)
         if self.on_response_block is not None:
             self.on_response_block(block)
@@ -454,6 +508,39 @@ class ClusterRouter:
     # ------------------------------------------------------------------ #
     # overload mode
     # ------------------------------------------------------------------ #
+    def _degrade_step(self, node: FabricNode, now: float) -> None:
+        """One step down the degrade ladder: fidelity rungs first (the
+        node swaps to a cheaper model variant and replans against the
+        rung's own profile), the batch floor only once the cheapest rung
+        is already serving — and :meth:`submit` sheds only once the
+        floor is pinned, so no request is ever shed while a lower rung
+        remains feasible.  Without a ladder this is exactly the original
+        batch-floor engagement."""
+        if node.degraded or node.dead:
+            return
+        if node.ladder is not None and node.rung + 1 < len(node.ladder):
+            self._set_rung(node, node.rung + 1, now)
+            return
+        self._engage_degrade(node, now)
+
+    def _set_rung(self, node: FabricNode, rung: int, now: float) -> None:
+        """Move the node to fidelity rung ``rung`` (either direction):
+        swap the serving backend's cost table and the planning profile
+        to the rung's variant, re-derive the overload plan against it
+        (memoised fleet-wide by profile fingerprint — the PlanTable's
+        fidelity axis), resize the admission bucket in place, and
+        re-solve the node's configuration."""
+        node.rung = rung
+        node.fidelity_transitions += 1
+        node.recovery_gate.reset()
+        self.degrade_log.append((now, node.node_id, f"rung{rung}"))
+        profile = node.ladder.rungs[rung].profile
+        node.backend.set_profile(profile)
+        node.server.optimizer.update_profile(profile)
+        node.b_deg, node.thr_deg = self._derive_plan(node.server.optimizer)
+        self._apply_plan(node, fresh_bucket=False)
+        node.server.reconfigure(node.server.estimator.current_batch)
+
     def _engage_degrade(self, node: FabricNode, now: float) -> None:
         """Pin the node's estimator to the degrade batch: floors *and*
         ceiling move to the largest SLO-feasible batch, so the node
@@ -479,10 +566,14 @@ class ClusterRouter:
         est.max_batch = node.base_max_batch
 
     def _tick(self) -> None:
-        """Periodic overload check: engage degrade on queue depth or a
-        per-node λ̂ above the admission rate; exit with hysteresis (a
+        """Periodic overload check: step the degrade ladder on queue
+        depth or a per-node λ̂ above the admission rate; recover in the
+        *reverse* order — release the batch floor first (hysteresis: a
         quarter of the enter depth, λ̂ back under the degrade-batch
-        throughput) so bursts do not flap the mode."""
+        throughput), then climb fidelity rungs one at a time, each step
+        gated on a consecutive-calm-tick streak whose λ̂ also fits under
+        the next-higher rung's sustainable throughput (with margin), so
+        bursts neither flap the mode nor thrash rungs."""
         now = self.loop.now
         for node in self.nodes:
             if node.dead:
@@ -491,10 +582,21 @@ class ClusterRouter:
             lam = node.rate.rate(now)
             if not node.degraded and (depth >= node.degrade_depth
                                       or lam > node.admission_rps):
-                self._engage_degrade(node, now)
+                self._degrade_step(node, now)
             elif node.degraded and (depth <= node.degrade_depth // 4
                                     and lam <= node.thr_deg):
                 self._exit_degrade(node, now)
+                node.recovery_gate.reset()
+            elif (node.ladder is not None and not node.degraded
+                  and node.rung > 0):
+                target = node.rung - 1
+                thr_up = self._derive_plan(
+                    node.ladder.optimizer(target))[1]
+                calm = (depth <= node.degrade_depth // 4
+                        and lam <= self.fcfg.fidelity_recovery_margin
+                        * thr_up)
+                if node.recovery_gate.observe(calm):
+                    self._set_rung(node, target, now)
         self.loop.schedule(self.fcfg.router_tick_interval, self._tick)
 
     # ------------------------------------------------------------------ #
@@ -591,6 +693,23 @@ class ClusterRouter:
                 "final_config": str(rlog[-1][2]),
                 "expected_latency_ms": rlog[-1][2].latency * 1e3,
             }
+            if n.ladder is not None:
+                per_node[n.node_id]["fidelity_rung"] = n.rung
+                per_node[n.node_id]["fidelity_transitions"] = \
+                    n.fidelity_transitions
+        fidelity: Optional[Dict[str, object]] = None
+        if any(n.ladder is not None for n in self.nodes):
+            fidelity = {
+                n.node_id: {
+                    "rungs": len(n.ladder),
+                    "qualities": [r.quality for r in n.ladder.rungs],
+                    "rung": n.rung,
+                    "transitions": n.fidelity_transitions,
+                    "recovery_steps": n.recovery_gate.opens,
+                    "recovery_resets": n.recovery_gate.resets,
+                }
+                for n in self.nodes if n.ladder is not None
+            }
         return {
             "nodes": len(self.nodes),
             "units_per_node": self.units_per_node,
@@ -605,6 +724,7 @@ class ClusterRouter:
             "degrade_log": [{"t": t, "node": nid, "event": ev}
                             for t, nid, ev in self.degrade_log],
             "per_node": per_node,
+            **({"fidelity": fidelity} if fidelity is not None else {}),
         }
 
 
@@ -827,7 +947,8 @@ def feed_fabric_trace(router: ClusterRouter, arrivals, *,
                     continue
             depth = depths[bm]
             if depth >= dg_dep[bm] and not dg_on[bm]:
-                # engaging degrade reconfigures the node: flush, advance
+                # stepping the degrade ladder (a fidelity rung or the
+                # batch floor) reconfigures the node: flush, advance
                 # the clock to the arrival (the oracle runs this inside
                 # the arrival event), run submit()'s tail exactly, and
                 # end the window
@@ -836,7 +957,7 @@ def feed_fabric_trace(router: ClusterRouter, arrivals, *,
                 router.offered += consumed + 1
                 if t > loop.now:
                     loop.now = t
-                router._engage_degrade(best, t)
+                router._degrade_step(best, t)
                 if best.degraded and depth >= best.shed_depth:
                     shed(Request(rid, t), best, "queue", t)
                 else:

@@ -96,6 +96,9 @@ class ResponseBlock:
     # set by the cluster fabric when the block crossed a router (mirrors
     # Response.node_id); None on single-node paths
     node_id: Optional[str] = None
+    # fidelity rung at delivery (mirrors Response.fidelity); None on
+    # paths without a fidelity ladder
+    fidelity: Optional[int] = None
 
     def __len__(self) -> int:
         return len(self.ids)
@@ -108,9 +111,11 @@ class ResponseBlock:
         the legacy dispatcher would have delivered)."""
         comp, bs, wid = self.completion, self.batch_size, self.instance_id
         rd, mid, nid = self.redispatched, self.model_id, self.node_id
+        fid = self.fidelity
         return [Response(request=Request(rid, arr, model_id=mid),
                          completion=comp, batch_size=bs, instance_id=wid,
-                         redispatched=rd, model_id=mid, node_id=nid)
+                         redispatched=rd, model_id=mid, node_id=nid,
+                         fidelity=fid)
                 for rid, arr in zip(self.ids.tolist(), self.arrivals.tolist())]
 
     @classmethod
@@ -121,7 +126,7 @@ class ResponseBlock:
                    completion=resp.completion, batch_size=resp.batch_size,
                    instance_id=resp.instance_id,
                    redispatched=resp.redispatched, model_id=resp.model_id,
-                   node_id=resp.node_id)
+                   node_id=resp.node_id, fidelity=resp.fidelity)
 
 
 class ResponseLog:

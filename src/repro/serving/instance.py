@@ -48,6 +48,15 @@ class TabulatedBackend(LatencyBackend):
         self.fallback_lookups: Dict[Tuple[int, int], int] = {}
         self._rows = profile_rows(self.table)
 
+    def set_profile(self, table: Mapping[Tuple[int, int], float]) -> None:
+        """Swap the serving costs in place — a fidelity-rung transition
+        (the node now executes a cheaper model variant) or a calibration
+        refresh.  Batches dispatched after the swap price against the
+        new table; in-flight batches keep the latency they were issued
+        with, in both engines."""
+        self.table = dict(table)
+        self._rows = profile_rows(self.table)
+
     def _lookup(self, t: int, b: int) -> float:
         """Shared-rule lookup (``core.profiler.row_latency``): exact hit,
         round b up to the next profiled size, scale above the top; for an

@@ -209,6 +209,22 @@ class MetricsCollector:
         # "decode"); one-shot requests carry "" and land in no phase
         # bucket, keeping their report schema byte-identical
         self.latencies_by_phase: Dict[str, List[float]] = {}
+        # fidelity-ladder runs tag responses with the serving rung;
+        # ladder-off responses carry None and land in no rung bucket,
+        # keeping their report schema byte-identical
+        self.latencies_by_fidelity: Dict[int, List[float]] = {}
+        self.rung_qualities: Optional[List[float]] = None
+
+    def set_rung_qualities(self, qualities: Sequence[float]) -> None:
+        """Per-rung quality weights (rung index → quality in (0,1]) for
+        the fidelity-weighted metrics; without them every rung weighs
+        1.0 and goodput-at-fidelity degenerates to plain goodput."""
+        self.rung_qualities = list(qualities)
+
+    def _rung_quality(self, rung: int) -> float:
+        if self.rung_qualities is not None and rung < len(self.rung_qualities):
+            return self.rung_qualities[rung]
+        return 1.0
 
     def slo_for(self, model_id: str) -> Optional[float]:
         return self.slo_by_model.get(model_id, self.slo_deadline)
@@ -242,6 +258,9 @@ class MetricsCollector:
         phase = getattr(resp.request, "phase", "")
         if phase:
             self.latencies_by_phase.setdefault(phase, []).append(resp.latency)
+        fid = getattr(resp, "fidelity", None)
+        if fid is not None:
+            self.latencies_by_fidelity.setdefault(fid, []).append(resp.latency)
         if resp.redispatched:
             self.redispatched += 1
 
@@ -263,6 +282,9 @@ class MetricsCollector:
         if block.node_id is not None:
             self.latencies_by_node.setdefault(block.node_id,
                                               []).extend(lats)
+        fid = getattr(block, "fidelity", None)
+        if fid is not None:
+            self.latencies_by_fidelity.setdefault(fid, []).extend(lats)
         if block.redispatched:
             self.redispatched += n
 
@@ -511,6 +533,60 @@ class MetricsCollector:
             }
         return out
 
+    def fidelity_report(self, *, duration: float) -> Dict[str, Dict[str, object]]:
+        """Per-rung breakdown for fidelity-ladder runs: completions,
+        admitted-only percentiles, within-SLO count, goodput and the
+        rung's quality weight, keyed by rung index (as a string for
+        JSON round-tripping).  Empty when no response carries a
+        fidelity tag — ladder-off reports keep their schema unchanged."""
+        out: Dict[str, Dict[str, object]] = {}
+        for rung in sorted(self.latencies_by_fidelity):
+            lats = sorted(self.latencies_by_fidelity[rung])
+            n = len(lats)
+            slo = self.slo_deadline
+            within = (n if slo is None
+                      else sum(1 for lat in lats if lat <= slo))
+            out[str(rung)] = {
+                "completed": n,
+                "quality": self._rung_quality(rung),
+                "latency_ms": {
+                    "mean": (sum(lats) / n * 1e3) if n else None,
+                    "p50": nearest_rank(lats, 50) * 1e3 if n else None,
+                    "p95": nearest_rank(lats, 95) * 1e3 if n else None,
+                    "p99": nearest_rank(lats, 99) * 1e3 if n else None,
+                    "max": lats[-1] * 1e3 if n else None,
+                },
+                "within_slo": within,
+                "goodput_rps": within / duration,
+            }
+        return out
+
+    def goodput_at_fidelity(self, duration: float) -> float:
+        """Quality-weighted goodput: Σ_r quality_r · within_slo_r per
+        second.  A request served at a degraded rung still counts, but
+        only for its rung's quality — shedding it would count zero, so
+        this is the quantity the degrade ladder is designed to maximize
+        under overload."""
+        if duration <= 0:
+            raise ValueError("duration must be > 0")
+        slo = self.slo_deadline
+        total = 0.0
+        for rung, lats in self.latencies_by_fidelity.items():
+            within = vector_within_slo(lats, slo)
+            total += self._rung_quality(rung) * within
+        return total / duration
+
+    def fidelity_weighted_attainment(self) -> float:
+        """Quality-weighted SLO attainment: Σ_r quality_r · within_slo_r
+        over *offered* load — sheds and never-finished requests count
+        zero, degraded completions count their rung's quality."""
+        slo = self.slo_deadline
+        total = 0.0
+        for rung, lats in self.latencies_by_fidelity.items():
+            total += self._rung_quality(rung) * vector_within_slo(lats, slo)
+        denom = max(self.offered, self.completed)
+        return total / denom if denom else 1.0
+
     def worst_model_p95(self) -> float:
         """max over models of p95 latency — the multi-model makespan
         analogue the planner minimizes (NaN with no completions)."""
@@ -570,6 +646,14 @@ class MetricsCollector:
                 rep["ttft_ms"] = phases["prefill"]["latency_ms"]
             if "decode" in phases:
                 rep["tpot_ms"] = phases["decode"]["latency_ms"]
+        fidelity = self.fidelity_report(duration=duration)
+        if fidelity:
+            # only fidelity-ladder runs produce rung-tagged samples;
+            # ladder-off reports keep their schema unchanged
+            rep["fidelity_report"] = fidelity
+            rep["goodput_at_fidelity"] = self.goodput_at_fidelity(duration)
+            rep["fidelity_weighted_attainment"] = (
+                self.fidelity_weighted_attainment())
         return rep
 
 

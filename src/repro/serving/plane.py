@@ -68,6 +68,7 @@ class ExecutionPlane:
     """
 
     name = "abstract"
+    fidelity = 0            # current fidelity rung (0 = full fidelity)
 
     # ------------------------------------------------------------------ #
     # time (EventLoop-compatible)
@@ -100,6 +101,22 @@ class ExecutionPlane:
 
     def close(self) -> None:
         """Release plane resources (worker executors); idempotent."""
+
+    # ------------------------------------------------------------------ #
+    # runner warm-up (RealPlane compiles ahead; virtual-time planes have
+    # nothing to compile, so the base plane accepts the same
+    # ⟨fidelity, phase, t, b⟩-keyed call as a no-op)
+    # ------------------------------------------------------------------ #
+    def warm(self, cells: Iterable[Tuple[int, int]], phase: str = "",
+             fidelity: int = 0) -> int:
+        return 0
+
+    def set_fidelity(self, fidelity: int) -> None:
+        """Select the fidelity rung subsequent batches execute at
+        (fidelity-aware real factories build the rung's cheaper variant;
+        virtual-time planes model the rung through the backend profile
+        swap instead, so this is a recorded no-op)."""
+        self.fidelity = fidelity
 
     def __enter__(self) -> "ExecutionPlane":
         return self
@@ -198,6 +215,11 @@ class RealPlane(ExecutionPlane):
         # third argument selecting the runner phase; the plane routes a
         # worker's batches by its model_id ("prefill" / "decode" pools)
         self._phase_aware = bool(getattr(make_runner, "phase_aware", False))
+        # factories marked ``fidelity_aware`` accept a ``fidelity=``
+        # keyword selecting the model's degrade rung; non-aware factories
+        # only ever serve rung 0
+        self._fidelity_aware = bool(getattr(make_runner, "fidelity_aware",
+                                            False))
         self.total_units = total_units
         self._clock = clock
         self._epoch: Optional[float] = None
@@ -208,7 +230,7 @@ class RealPlane(ExecutionPlane):
         # (or phase × seq-bucket cells) must not accumulate executables
         # unboundedly.  Evicting an in-flight runner is safe — the
         # executing batch holds its own reference.
-        self._runners: "collections.OrderedDict[Tuple[str, int, int], BatchRunner]" \
+        self._runners: "collections.OrderedDict[Tuple[int, str, int, int], BatchRunner]" \
             = collections.OrderedDict()
         self._max_runners = max_runners
         self.runner_evictions = 0
@@ -281,25 +303,32 @@ class RealPlane(ExecutionPlane):
     # ------------------------------------------------------------------ #
     # execution
     # ------------------------------------------------------------------ #
-    def runner(self, t: int, b: int, phase: str = "") -> BatchRunner:
-        """The cached jitted runner for a ⟨phase, t, b⟩ cell (b rounds up
-        to the next power of two — compiled bucket sizes).  Cache hits
-        refresh LRU order; misses build the runner (timing the first-touch
-        compile into :attr:`compile_ms`) and may evict the least recently
-        used cell."""
-        key = (phase, t, next_power_of_two(max(1, b)))
+    def runner(self, t: int, b: int, phase: str = "",
+               fidelity: int = 0) -> BatchRunner:
+        """The cached jitted runner for a ⟨fidelity, phase, t, b⟩ cell
+        (b rounds up to the next power of two — compiled bucket sizes).
+        Cache hits refresh LRU order; misses build the runner (timing the
+        cell's *first* compile into :attr:`compile_ms` — a re-warm of an
+        evicted cell recompiles but is not double-counted) and may evict
+        the least recently used cell."""
+        f = fidelity if self._fidelity_aware else 0
+        key = (f, phase, t, next_power_of_two(max(1, b)))
         run = self._runners.get(key)
         if run is None:
             t0 = self._clock()
-            if self._phase_aware:
-                run = self._make(key[1], key[2], phase)
+            args = (key[2], key[3], phase) if self._phase_aware \
+                else (key[2], key[3])
+            if self._fidelity_aware:
+                run = self._make(*args, fidelity=f)
             else:
-                run = self._make(key[1], key[2])
+                run = self._make(*args)
             elapsed_ms = (self._clock() - t0) * 1e3
-            label = f"{phase}:{key[1]},{key[2]}" if phase \
-                else f"{key[1]},{key[2]}"
-            self.compile_ms[label] = self.compile_ms.get(label, 0.0) \
-                + elapsed_ms
+            label = f"{phase}:{key[2]},{key[3]}" if phase \
+                else f"{key[2]},{key[3]}"
+            if f:
+                label = f"f{f}:{label}"
+            if label not in self.compile_ms:
+                self.compile_ms[label] = elapsed_ms
             self._runners[key] = run
             while len(self._runners) > self._max_runners:
                 self._runners.popitem(last=False)
@@ -312,16 +341,19 @@ class RealPlane(ExecutionPlane):
         """Phase-aware factories route by the worker's pool identity."""
         return worker.model_id if self._phase_aware else ""
 
-    def warm(self, cells: Iterable[Tuple[int, int]], phase: str = "") -> int:
+    def warm(self, cells: Iterable[Tuple[int, int]], phase: str = "",
+             fidelity: int = 0) -> int:
         """Compile-ahead: instantiate the runner for each ⟨t, b⟩ cell now
         (triggered from the controller's plan-apply hook during a
-        reconfiguration) so the first request after a replan never eats a
-        jit compile stall.  Returns the number of cells newly compiled."""
+        reconfiguration, or a fidelity-rung transition) so the first
+        request after a replan never eats a jit compile stall.  Returns
+        the number of cells newly compiled."""
+        f = fidelity if self._fidelity_aware else 0
         n = 0
         for t, b in cells:
-            key = (phase, t, next_power_of_two(max(1, b)))
+            key = (f, phase, t, next_power_of_two(max(1, b)))
             n += key not in self._runners
-            self.runner(t, b, phase)
+            self.runner(t, b, phase, fidelity)
         return n
 
     def runner_report(self) -> Dict[str, object]:
@@ -377,7 +409,8 @@ class RealPlane(ExecutionPlane):
         worker.begin_batch(n_items, now, expected)
         expected_done = max(now, busy_before) + expected - now
         run = self.runner(worker.threads, n_items,
-                          phase=self._worker_phase(worker))
+                          phase=self._worker_phase(worker),
+                          fidelity=self.fidelity)
         claim = min(worker.threads, self.total_units)
         self.inflight += 1
 
@@ -416,21 +449,24 @@ class RealPlane(ExecutionPlane):
     # ------------------------------------------------------------------ #
     # profiling through the plane (one code path with serving)
     # ------------------------------------------------------------------ #
-    def profiler(self, *, warmup: int = 2, iters: int = 5, phase: str = ""
-                 ) -> MeasuredProfiler:
+    def profiler(self, *, warmup: int = 2, iters: int = 5, phase: str = "",
+                 fidelity: int = 0) -> MeasuredProfiler:
         """A :class:`MeasuredProfiler` over this plane's own runner
         cache: profile-time execution is the same jitted callable the
         serving path fires, measured with the shared helper
         (median-of-N — robust to scheduler noise).  ``phase`` selects
-        the runner pool for phase-aware factories (per-phase profiles)."""
-        return MeasuredProfiler(lambda t, b: self.runner(t, b, phase)(),
-                                warmup=warmup, iters=iters,
-                                clock=self._clock, median=True)
+        the runner pool for phase-aware factories (per-phase profiles);
+        ``fidelity`` selects the degrade rung for fidelity-aware ones
+        (per-rung profiles for the ladder planner)."""
+        return MeasuredProfiler(
+            lambda t, b: self.runner(t, b, phase, fidelity)(),
+            warmup=warmup, iters=iters, clock=self._clock, median=True)
 
     def profile(self, spec: ProfileSpec, *, warmup: int = 2,
-                iters: int = 5, phase: str = "") -> Profile:
-        return self.profiler(warmup=warmup, iters=iters,
-                             phase=phase).profile(spec)
+                iters: int = 5, phase: str = "",
+                fidelity: int = 0) -> Profile:
+        return self.profiler(warmup=warmup, iters=iters, phase=phase,
+                             fidelity=fidelity).profile(spec)
 
     # ------------------------------------------------------------------ #
     def close(self, wait: bool = True) -> None:

@@ -208,6 +208,21 @@ def _node_failure(ctx: ScenarioContext) -> Workload:
     return PoissonWorkload(rate_rps=0.6 * ctx.capacity_rps(32))
 
 
+def fleet_overload_trace(*, optimizer: PackratOptimizer, total_units: int,
+                         duration: float, seed: int = 0,
+                         max_total_batch: Optional[int] = None,
+                         name: str = "flash-overload") -> List[float]:
+    """One seeded arrival trace of a registered scenario sized against
+    *fleet* capacity — the identical trace both sides of an
+    overload-control comparison (shed-only vs fidelity ladder) replay.
+    Factoring it here keeps the benchmark emitter and the verification
+    harness on literally the same arrivals."""
+    ctx = ScenarioContext(threads=total_units, optimizer=optimizer,
+                          duration=duration, seed=seed,
+                          max_total_batch=max_total_batch)
+    return list(get_scenario(name).build(ctx).arrivals(duration, seed=seed))
+
+
 # --------------------------------------------------------------------- #
 # fabric events: scheduled fleet actions attached to scenarios
 #
@@ -349,7 +364,8 @@ def _mixed_burst(mctx: MultiModelScenarioContext) -> Dict[str, Workload]:
 
 __all__ = [
     "FabricEvent", "MultiModelScenario", "MultiModelScenarioContext",
-    "Scenario", "ScenarioContext", "fabric_events", "get_mm_scenario",
+    "Scenario", "ScenarioContext", "fabric_events", "fleet_overload_trace",
+    "get_mm_scenario",
     "get_scenario", "list_mm_scenarios", "list_scenarios", "mm_scenario",
     "register_mm_scenario", "register_scenario", "scenario",
 ]

@@ -99,6 +99,9 @@ class Response:
     # set by the cluster fabric when the response crossed a router:
     # which node served the request (None on single-node paths)
     node_id: Optional[str] = None
+    # fidelity rung the serving node was at when it delivered (None on
+    # paths without a fidelity ladder; 0 = full fidelity)
+    fidelity: Optional[int] = None
 
     @property
     def latency(self) -> float:

@@ -64,7 +64,8 @@ def response_tuples(responses):
     every observable field of every delivery, in delivery order."""
     return [(r.request.id, r.request.arrival, r.request.model_id,
              round(r.completion, 9), r.batch_size, r.instance_id,
-             r.redispatched, r.model_id, getattr(r, "node_id", None))
+             r.redispatched, r.model_id, getattr(r, "node_id", None),
+             getattr(r, "fidelity", None))
             for r in responses]
 
 

@@ -14,7 +14,8 @@ pre-refactor oracle as the legacy engine.
 import pytest
 
 from repro.core import PackratOptimizer
-from repro.core.paper_profiles import PAPER_MODELS, RESNET50
+from repro.core.paper_profiles import (PAPER_MODELS, RESNET50,
+                                       fidelity_ladder)
 from repro.serving import (ControllerConfig, EventLoop, MultiModelServer,
                            PackratServer, Request, TabulatedBackend,
                            TenantSpec)
@@ -157,6 +158,57 @@ def test_fabric_three_node_differential(name, dispatch):
     assert event_tl, f"scenario {name} produced no responses"
     assert fast_tl == event_tl
     assert fast_shed == event_shed
+
+
+# --------------------------------------------------------------------- #
+# fidelity-ladder fabric: overload scenarios × dispatch × fleet size,
+# responses (rung-tagged), sheds AND the degrade log, fast vs event
+# --------------------------------------------------------------------- #
+def _run_fidelity_fabric(arrivals, dispatch, engine, n_nodes):
+    ccfg = ControllerConfig()
+    ccfg.estimator.max_batch = MAX_BATCH
+    ccfg.dispatch_policy = dispatch
+    fcfg = FabricConfig(controller=ccfg, p2c_seed=0)
+    specs = [FabricNodeSpec(
+        optimizer=PackratOptimizer(NODE_PROFILE),
+        backend=TabulatedBackend(NODE_PROFILE),
+        ladder=fidelity_ladder(RESNET50, NODE_UNITS, MAX_BATCH))
+        for _ in range(n_nodes)]
+    loop = _loop(engine)
+    router = ClusterRouter(loop, units_per_node=NODE_UNITS, specs=specs,
+                           initial_batch=8, slo_deadline=SLO, config=fcfg)
+    if engine == "fast":
+        feed_fabric_trace(router, arrivals)
+    else:
+        for i, t in enumerate(arrivals):
+            loop.at(t, (lambda i=i, t=t: router.submit(Request(i, t))))
+    loop.run_until(DURATION + DRAIN)
+    if engine == "fast":
+        assert (router.fast_absorbed + router.fast_one_by_one
+                == len(arrivals))
+    shed_tl = [(s.request.id, round(s.time, 9), s.node_id, s.reason)
+               for s in router.sheds]
+    degrade_tl = [(round(t, 9), nid, ev)
+                  for t, nid, ev in router.degrade_log]
+    return response_tuples(router.responses), shed_tl, degrade_tl
+
+
+@pytest.mark.parametrize("n_nodes", (1, 3))
+@pytest.mark.parametrize("dispatch", DISPATCHES)
+@pytest.mark.parametrize("name", ("overload", "flash-overload"))
+def test_fidelity_fabric_differential(name, dispatch, n_nodes):
+    # the fleet-scaled trace makes the 1-node row a 3×-overloaded node:
+    # deep ladder descent, batch-floor engagement, and queue sheds
+    arrivals = _arrivals(name, fleet=True)
+    ev = _run_fidelity_fabric(arrivals, dispatch, "event", n_nodes)
+    fast = _run_fidelity_fabric(arrivals, dispatch, "fast", n_nodes)
+    event_tl, event_shed, event_degrade = ev
+    fast_tl, fast_shed, fast_degrade = fast
+    assert event_tl, f"scenario {name} produced no responses"
+    assert event_degrade, f"scenario {name} never stepped the ladder"
+    assert fast_tl == event_tl
+    assert fast_shed == event_shed
+    assert fast_degrade == event_degrade
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,340 @@
+"""Elastic-fidelity overload control: the degrade-ladder verification
+harness (ISSUE 10).
+
+Three families of guarantees:
+
+* **ladder-before-shed** — on hypothesis-generated overload traces, no
+  request is ever queue-shed while a lower fidelity rung was still
+  feasible on the shedding node (replayed from the router's degrade
+  log: every queue shed finds its node fully degraded at the bottom
+  rung);
+* **reverse-order recovery** — after overload clears, a node releases
+  the batch floor first and then climbs the fidelity rungs one at a
+  time under the hysteresis gate, never skipping a rung and never
+  climbing while still degraded;
+* **fidelity-off byte-identity** — with no ladder configured, the
+  pinned golden timelines reproduce exactly (both golden shas) and the
+  fabric report carries none of the fidelity keys.
+"""
+
+import pytest
+
+from repro.core import FidelityLadder, HysteresisGate, PackratOptimizer
+from repro.core.knapsack import FidelityRung
+from repro.core.paper_profiles import RESNET50, fidelity_ladder
+from repro.serving import (ClusterRouter, EventLoop, FabricConfig,
+                           FabricNodeSpec, Request, TabulatedBackend)
+
+from oracles import (GOLDEN_SHA256, MM_GOLDEN_SHA256, golden_run,
+                     mm_golden_run, single_model_timeline, timeline_digest)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+UNITS = 8
+MAX_BATCH = 64
+PROFILE = RESNET50.profile(UNITS, MAX_BATCH)
+N_RUNGS = 3
+BOTTOM = N_RUNGS - 1
+
+
+def node_capacity() -> float:
+    return PackratOptimizer(PROFILE).solve(UNITS, MAX_BATCH).throughput
+
+
+def make_router(loop, n_nodes=3, *, ladder=True, slo=1.0, seed=0,
+                config=None):
+    specs = [FabricNodeSpec(
+        optimizer=PackratOptimizer(PROFILE),
+        backend=TabulatedBackend(PROFILE),
+        ladder=(fidelity_ladder(RESNET50, UNITS, MAX_BATCH)
+                if ladder else None))
+        for _ in range(n_nodes)]
+    cfg = config or FabricConfig(p2c_seed=seed)
+    return ClusterRouter(loop, units_per_node=UNITS, specs=specs,
+                         initial_batch=4, slo_deadline=slo, config=cfg)
+
+
+def offer_segments(loop, router, segments, *, start=0.0):
+    """Deterministic evenly spaced arrivals: ``segments`` is a list of
+    (rate_rps, seconds); returns (n_offered, end_time)."""
+    t, i = start, 0
+    for rate, seconds in segments:
+        n = int(rate * seconds)
+        for k in range(n):
+            at = t + (k + 0.5) / rate
+            loop.at(at, (lambda i=i, at=at: router.submit(Request(i, at))))
+            i += 1
+        t += seconds
+    return i, t
+
+
+def replay_ladder_states(router):
+    """Replay the degrade log into per-node (time-ordered) state
+    snapshots: a list of (t, rung, degraded) transitions per node."""
+    states = {n.node_id: [(float("-inf"), 0, False)] for n in router.nodes}
+    for t, nid, event in router.degrade_log:
+        _, rung, degraded = states[nid][-1]
+        if event == "enter":
+            degraded = True
+        elif event == "exit":
+            degraded = False
+        elif event.startswith("rung"):
+            rung = int(event[4:])
+        else:                                          # pragma: no cover
+            raise AssertionError(f"unknown degrade event {event!r}")
+        states[nid].append((t, rung, degraded))
+    return states
+
+
+def state_at(snapshots, t):
+    """Node state (rung, degraded) after all events at time <= t — the
+    degrade step inside submit() logs before the shed decision, so
+    same-timestamp events are included."""
+    rung, degraded = 0, False
+    for et, r, d in snapshots:
+        if et <= t:
+            rung, degraded = r, d
+        else:
+            break
+    return rung, degraded
+
+
+def assert_ladder_invariants(router):
+    """The harness's core checks, valid for any trace:
+
+    * a "queue" shed only happens on a node that is degraded at the
+      bottom rung (no shed while a lower rung was feasible);
+    * rungs move one step at a time, in either direction;
+    * the batch floor only engages at the bottom rung;
+    * rung-up (recovery) steps only happen after the floor is released
+      (reverse order) and in strictly decreasing rung order.
+    """
+    states = replay_ladder_states(router)
+    for shed in router.sheds:
+        if shed.reason != "queue":
+            continue
+        rung, degraded = state_at(states[shed.node_id], shed.time)
+        assert degraded and rung == BOTTOM, (
+            f"request {shed.request.id} queue-shed on {shed.node_id} at "
+            f"t={shed.time:.3f} with rung={rung} degraded={degraded} — "
+            f"a lower fidelity rung was still feasible")
+    for nid, snapshots in states.items():
+        prev_rung, prev_deg = 0, False
+        for t, rung, degraded in snapshots[1:]:
+            if degraded and not prev_deg:
+                assert rung == BOTTOM, (
+                    f"{nid}: batch floor engaged at rung {rung} with "
+                    f"rungs below it unused")
+            if rung != prev_rung:
+                assert abs(rung - prev_rung) == 1, (
+                    f"{nid}: rung jumped {prev_rung} -> {rung}")
+                if rung < prev_rung:
+                    assert not prev_deg and not degraded, (
+                        f"{nid}: climbed to rung {rung} while the batch "
+                        f"floor was still engaged")
+            prev_rung, prev_deg = rung, degraded
+
+
+def assert_exactly_once(router):
+    ids = [r.request.id for r in router.responses]
+    assert len(ids) == len(set(ids)), "duplicate delivery"
+    shed_ids = {s.request.id for s in router.sheds}
+    assert not (shed_ids & set(ids)), "shed request also delivered"
+
+
+# --------------------------------------------------------------------- #
+# ladder / gate primitives
+# --------------------------------------------------------------------- #
+def test_fidelity_ladder_validation():
+    rungs = fidelity_ladder(RESNET50, UNITS, MAX_BATCH).rungs
+    # rung 0 must be full quality
+    with pytest.raises(ValueError):
+        FidelityLadder([FidelityRung(0, "a", 0.9, rungs[0].profile)])
+    # qualities must be nonincreasing top-down
+    with pytest.raises(ValueError):
+        FidelityLadder([
+            rungs[0],
+            FidelityRung(1, "b", 0.5, rungs[1].profile),
+            FidelityRung(2, "c", 0.9, rungs[2].profile)])
+    # rung indices must be 0..n-1 in order
+    with pytest.raises(ValueError):
+        FidelityLadder([rungs[0], rungs[2]])
+
+
+def test_hysteresis_gate_requires_consecutive_calm():
+    with pytest.raises(ValueError):
+        HysteresisGate(required=0)
+    gate = HysteresisGate(required=3)
+    # a hot observation mid-streak resets the count
+    assert [gate.observe(c) for c in (True, True, False, True, True)] == \
+        [False] * 5
+    assert gate.resets == 1
+    # the third *consecutive* calm observation opens the gate...
+    assert gate.observe(True) is True
+    assert gate.opens == 1
+    # ...and the streak restarts from zero afterwards
+    assert [gate.observe(True) for _ in range(2)] == [False, False]
+    assert gate.observe(True) is True
+    assert gate.opens == 2
+
+
+def test_router_rejects_ladder_whose_top_rung_differs():
+    ladder = fidelity_ladder(RESNET50, UNITS, 32)   # grid != optimizer's
+    spec = FabricNodeSpec(optimizer=PackratOptimizer(PROFILE),
+                          backend=TabulatedBackend(PROFILE), ladder=ladder)
+    with pytest.raises(ValueError, match="rung 0"):
+        ClusterRouter(EventLoop(), units_per_node=UNITS, specs=[spec],
+                      initial_batch=4, slo_deadline=1.0)
+
+
+def test_solve_with_fidelity_prefers_highest_feasible_rung():
+    ladder = fidelity_ladder(RESNET50, UNITS, MAX_BATCH)
+    # a generous SLO is feasible at full fidelity
+    got = ladder.solve_with_fidelity(UNITS, 10.0)
+    assert got is not None and got[0] == 0
+    # an SLO only the cheapest rung can meet lands on the bottom rung
+    top_floor = ladder.optimizer(0).solve(UNITS, 1).latency
+    bottom_floor = ladder.optimizer(BOTTOM).solve(UNITS, 1).latency
+    assert bottom_floor < top_floor
+    mid_slo = 0.5 * (bottom_floor + top_floor)
+    got = ladder.solve_with_fidelity(UNITS, mid_slo)
+    assert got is not None and got[0] > 0
+    # an SLO below every rung's floor is infeasible
+    assert ladder.solve_with_fidelity(UNITS, 0.5 * bottom_floor) is None
+
+
+# --------------------------------------------------------------------- #
+# overload behaviour (deterministic)
+# --------------------------------------------------------------------- #
+def test_flash_overload_descends_ladder_before_shedding():
+    loop = EventLoop()
+    router = make_router(loop, 3)
+    cap = 3 * node_capacity()
+    offered, t_end = offer_segments(
+        loop, router, [(3.0 * cap, 6.0), (0.05 * cap, 10.0)])
+    loop.run_until(t_end + 30.0)
+    assert_exactly_once(router)
+    assert_ladder_invariants(router)
+    # the flash actually drove nodes down the ladder
+    events = [ev for _, _, ev in router.degrade_log]
+    assert f"rung{BOTTOM}" in events
+    # deliveries are rung-tagged
+    assert all(r.fidelity is not None for r in router.responses)
+    assert {r.fidelity for r in router.responses} >= {0, BOTTOM}
+
+
+def test_recovery_climbs_rungs_in_reverse_order_under_hysteresis():
+    loop = EventLoop()
+    cfg = FabricConfig(p2c_seed=0, fidelity_recovery_ticks=3)
+    router = make_router(loop, 3, config=cfg)
+    cap = 3 * node_capacity()
+    offered, t_end = offer_segments(
+        loop, router, [(3.0 * cap, 6.0), (0.02 * cap, 40.0)])
+    loop.run_until(t_end + 60.0)
+    assert_ladder_invariants(router)
+    states = replay_ladder_states(router)
+    for node in router.nodes:
+        snapshots = states[node.node_id]
+        rungs_hit = {r for _, r, _ in snapshots}
+        if BOTTOM not in rungs_hit:
+            continue
+        # the floor engaged at the bottom and was released before any
+        # climb; the climb then walked BOTTOM -> 0 one rung at a time
+        assert node.rung == 0 and not node.degraded, (
+            f"{node.node_id} never recovered: rung={node.rung} "
+            f"degraded={node.degraded}")
+        ups = []
+        prev = 0
+        for _, r, _ in snapshots[1:]:
+            if r < prev:
+                ups.append(r)
+            prev = r
+        assert ups[-len(set(ups)):] == sorted(set(ups), reverse=True)
+        # each climb required a full calm streak through the gate
+        assert node.recovery_gate.opens >= BOTTOM
+    fleet = router.fleet_report(loop.now)
+    for row in fleet["fidelity"].values():
+        assert row["rung"] == 0
+        assert row["recovery_steps"] >= BOTTOM
+
+
+def test_ladder_admits_more_than_shed_only_on_identical_trace():
+    def run(ladder):
+        loop = EventLoop()
+        router = make_router(loop, 3, ladder=ladder)
+        cap = 3 * node_capacity()
+        _, t_end = offer_segments(
+            loop, router, [(3.0 * cap, 6.0), (0.05 * cap, 10.0)])
+        loop.run_until(t_end + 30.0)
+        return router
+    with_ladder = run(True)
+    shed_only = run(False)
+    assert with_ladder.offered == shed_only.offered
+    assert len(with_ladder.sheds) < len(shed_only.sheds)
+    assert len(with_ladder.responses) > len(shed_only.responses)
+
+
+# --------------------------------------------------------------------- #
+# overload behaviour (hypothesis traces)
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    overload_segments = st.lists(
+        st.tuples(st.floats(min_value=0.05, max_value=3.5),
+                  st.floats(min_value=1.0, max_value=5.0)),
+        min_size=2, max_size=4)
+
+    @given(segments=overload_segments, nodes=st.integers(1, 3),
+           seed=st.integers(0, 7))
+    @settings(max_examples=25, deadline=None)
+    def test_no_queue_shed_while_lower_rung_feasible(segments, nodes, seed):
+        loop = EventLoop()
+        router = make_router(loop, nodes, seed=seed)
+        cap = nodes * node_capacity()
+        segs = [(mult * cap, seconds) for mult, seconds in segments]
+        _, t_end = offer_segments(loop, router, segs)
+        loop.run_until(t_end + 30.0)
+        assert_exactly_once(router)
+        assert_ladder_invariants(router)
+        # every delivery carries its serving rung
+        assert all(r.fidelity is not None for r in router.responses)
+
+
+# --------------------------------------------------------------------- #
+# fidelity-off byte-identity
+# --------------------------------------------------------------------- #
+def test_fidelity_off_single_model_golden_unchanged():
+    server, _ = golden_run("sync")
+    assert timeline_digest(single_model_timeline(server)) == GOLDEN_SHA256
+
+
+def test_fidelity_off_multi_model_golden_unchanged():
+    assert timeline_digest(mm_golden_run(EventLoop())) == MM_GOLDEN_SHA256
+
+
+def test_fidelity_off_fabric_report_has_no_fidelity_keys():
+    from repro.core.paper_profiles import PAPER_MODELS
+    from repro.launch.bench_serving import run_fabric_policy
+    from repro.serving.scenarios import fleet_overload_trace
+    model = PAPER_MODELS["resnet50"]
+    total = 3 * UNITS
+    arrivals = fleet_overload_trace(
+        optimizer=PackratOptimizer(model.profile(total, MAX_BATCH)),
+        total_units=total, duration=6.0, seed=0,
+        max_total_batch=total * MAX_BATCH)
+    rep = run_fabric_policy(
+        arrivals, model=model, nodes=3, units_per_node=UNITS,
+        duration=6.0, seed=0, initial_batch=4, max_batch=MAX_BATCH,
+        slo_deadline=1.0, reconfigure_timeout=5.0, dispatch="sync",
+        engine="event", fidelity_ladder=False)
+    assert "fidelity_report" not in rep
+    assert "goodput_at_fidelity" not in rep
+    assert "fidelity_weighted_attainment" not in rep
+    assert "fidelity" not in rep["fleet"]
+    for row in rep["fleet"]["per_node"].values():
+        assert "fidelity_rung" not in row
+    assert not any(e["event"].startswith("rung")
+                   for e in rep["fleet"]["degrade_log"])

@@ -256,6 +256,37 @@ def test_real_plane_profiles_through_own_runners():
     plane.close()
 
 
+def test_real_plane_compile_ms_first_touch_only_across_evictions():
+    """Re-warming an evicted cell recompiles it but must not overwrite
+    (or double-count) its first-touch compile_ms entry — re-warm churn
+    previously inflated per-cell compile accounting in runner_report."""
+    # deterministic clock: each compile brackets two reads, so the three
+    # compiles below measure 1ms, 2ms, then 500ms for the re-warm of A
+    seq = [0.0, 0.001, 1.0, 1.002, 2.0, 2.5]
+    clock = lambda: seq.pop(0) if seq else 100.0
+    calls = []
+
+    def make_runner(t, b):
+        calls.append((t, b))
+        return lambda: None
+
+    plane = RealPlane(make_runner, total_units=2, clock=clock,
+                      max_runners=1)
+    plane.runner(1, 1)                 # compile A (1ms)
+    assert plane.compile_ms["1,1"] == pytest.approx(1.0)
+    plane.runner(1, 2)                 # compile B (2ms), evicts A
+    plane.runner(1, 1)                 # re-warm A (500ms), evicts B
+    plane.close()
+    assert calls == [(1, 1), (1, 2), (1, 1)]     # A really recompiled
+    assert plane.runner_evictions == 2
+    # the 500ms recompile did not replace A's first-touch entry
+    assert plane.compile_ms["1,1"] == pytest.approx(1.0)
+    assert plane.compile_ms["1,2"] == pytest.approx(2.0)
+    report = plane.runner_report()
+    assert report["evictions"] == 2
+    assert report["compile_ms"]["1,1"] == pytest.approx(1.0)
+
+
 def test_real_plane_multimodel_smoke():
     """Plane-agnosticism of the tenancy layer: a two-tenant
     MultiModelServer runs end-to-end on the real plane."""

@@ -19,10 +19,13 @@ try:  # the property tests widen coverage when hypothesis is available
 except ImportError:  # pragma: no cover - depends on the environment
     HAVE_HYPOTHESIS = False
 
-from repro.core import (PackratOptimizer, PlanTableRegistry, default_engine,
-                        planning_report, powers_of_two, set_default_engine,
-                        solve_with_slo)
+from repro.core import (FidelityLadder, PackratOptimizer,
+                        PlanTableRegistry, default_engine, planning_report,
+                        powers_of_two, set_default_engine, solve_with_slo)
+from repro.core.knapsack import FidelityRung
 from repro.core.paper_profiles import INCEPTION_V3
+from repro.core.paper_profiles import RESNET50 as RESNET50_MODEL
+from repro.core.paper_profiles import fidelity_ladder
 from repro.core.profiler import ProfileCalibrator
 from repro.serving import (CalibratedBackend, ControllerConfig, EventLoop,
                            PackratServer, TabulatedBackend)
@@ -408,3 +411,124 @@ def test_refresh_applies_updates_in_place():
     key = next(iter(profile))
     assert server.optimizer.profile[key] == pytest.approx(
         2.0 * profile[key], rel=0.05)
+
+
+# --------------------------------------------------------------------- #
+# fidelity ladder differentials (ISSUE 10): every rung of a shared
+# ladder must answer bit-identically to a standalone reference solver,
+# and the top rung must be indistinguishable from a ladder-free planner
+# --------------------------------------------------------------------- #
+def _random_ladder_profiles(rng, n_rungs=3, **kw):
+    """Rung profiles for a random ladder: rung 0 plus progressively
+    cheaper variants over the same ⟨t,b⟩ grid."""
+    top = _random_profile(rng, **kw)
+    profiles = [top]
+    for r in range(1, n_rungs):
+        scale = rng.uniform(0.3, 0.9)
+        profiles.append({k: lat * scale for k, lat in top.items()})
+    return profiles
+
+
+def _make_ladder(profiles, *, allow=False, overhead=0.0, engine=None):
+    qualities = [1.0] + [round(1.0 - 0.1 * (r + 1), 3)
+                         for r in range(len(profiles) - 1)]
+    rungs = [FidelityRung(r, f"rung{r}", q, p)
+             for r, (q, p) in enumerate(zip(qualities, profiles))]
+    return FidelityLadder(rungs, allow_unused_threads=allow,
+                          dispatch_overhead=overhead, engine=engine)
+
+
+def _check_ladder_grid_identity(profiles, allow, overhead):
+    """Shared-engine ladder vs per-rung reference solvers, every rung,
+    over a ⟨T,B⟩ grid (the tentpole's bit-identity contract)."""
+    ladder = _make_ladder(profiles, allow=allow, overhead=overhead,
+                          engine="shared")
+    refs = [PackratOptimizer(p, allow_unused_threads=allow,
+                             dispatch_overhead=overhead,
+                             engine="reference")
+            for p in profiles]
+    for rung, ref in enumerate(refs):
+        opt = ladder.optimizer(rung)
+        for T in range(1, 7):
+            for B in (1, 2, 3, 5, 8, 11, 16):
+                _assert_identical(_solve_or_none(opt, T, B),
+                                  _solve_or_none(ref, T, B))
+
+
+def _check_ladder_epoch_identity(profiles, allow, scale):
+    """A calibration epoch on ONE rung leaves that rung answering like
+    a fresh reference solver on the new costs, and every other rung
+    untouched (bit-identical to its own reference)."""
+    ladder = _make_ladder(profiles, allow=allow, engine="shared")
+    for rung in range(len(ladder)):           # warm tables + memos
+        for B in (1, 2, 4):
+            _solve_or_none(ladder.optimizer(rung), 4, B)
+    victim = len(ladder) - 1
+    calibrated = {k: lat * scale for k, lat in profiles[victim].items()}
+    ladder.update_profile(victim, calibrated)
+    assert ladder.optimizer(victim).epoch == 1
+    for rung in range(len(ladder)):
+        expect = calibrated if rung == victim else profiles[rung]
+        ref = PackratOptimizer(expect, allow_unused_threads=allow,
+                               engine="reference")
+        for T in range(1, 6):
+            for B in (1, 2, 4, 7, 12):
+                _assert_identical(
+                    _solve_or_none(ladder.optimizer(rung), T, B),
+                    _solve_or_none(ref, T, B))
+
+
+def test_ladder_rungs_bit_identical_over_grid_seeded():
+    rng = random.Random(1310)
+    for trial in range(12):
+        profiles = _random_ladder_profiles(
+            rng, sparse=bool(trial % 3 == 2))
+        _check_ladder_grid_identity(profiles, allow=bool(trial % 2),
+                                    overhead=rng.choice([0.0, 1e-4]))
+
+
+def test_ladder_rung_epoch_bit_identical_seeded():
+    rng = random.Random(1311)
+    for trial in range(8):
+        profiles = _random_ladder_profiles(rng)
+        _check_ladder_epoch_identity(profiles, allow=bool(trial % 2),
+                                     scale=rng.uniform(0.5, 2.0))
+
+
+def test_ladder_top_rung_identical_to_ladder_free_planner():
+    """Rung 0 of a paper-model ladder solves exactly like today's
+    ladder-free PackratOptimizer — fidelity off is byte-for-byte the
+    current planner."""
+    for model in (RESNET50_MODEL, INCEPTION_V3):
+        for units, max_batch in ((4, 16), (8, 64)):
+            ladder = fidelity_ladder(model, units, max_batch)
+            plain = PackratOptimizer(model.profile(units, max_batch))
+            assert ladder.optimizer(0).profile == plain.profile
+            assert ladder.optimizer(0).plan_key() == plain.plan_key()
+            for T in range(1, units + 1):
+                for B in powers_of_two(max_batch):
+                    _assert_identical(
+                        _solve_or_none(ladder.optimizer(0), T, B),
+                        _solve_or_none(plain, T, B))
+
+
+def test_ladder_shares_one_registry_across_rungs():
+    rng = random.Random(1312)
+    ladder = _make_ladder(_random_ladder_profiles(rng), engine="shared")
+    assert all(opt.registry is ladder.registry
+               for opt in ladder.optimizers)
+    reg = PlanTableRegistry()
+    ladder.adopt_registry(reg)
+    assert ladder.registry is reg
+    assert all(opt.registry is reg for opt in ladder.optimizers)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(profile=profile_strategy(), allow=st.booleans(),
+           scales=st.lists(st.floats(min_value=0.2, max_value=0.95),
+                           min_size=1, max_size=3))
+    def test_ladder_rungs_bit_identical_hypothesis(profile, allow, scales):
+        profiles = [profile] + [
+            {k: lat * s for k, lat in profile.items()} for s in scales]
+        _check_ladder_grid_identity(profiles, allow=allow, overhead=0.0)
